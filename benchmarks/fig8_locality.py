@@ -1,0 +1,39 @@
+"""Paper Fig 8 — locality metrics across wide LRCs.
+
+ADRC / CDRC / ARC / CARC / LBNR for ALRC, OLRC, ULRC (ECWide placement)
+and UniLRC (one-group-one-cluster), at the paper's three schemes
+(Table 2). Paper §2.3 anchors reproduced here:
+  ALRC(42,30): r̄ = 8.57     OLRC(42,30): r̄ = 25
+  ULRC(42,30): r̄ = 7.43     UniLRC(42,30): r̄ = 6, CDRC = CARC = 0, LBNR = 1
+"""
+from __future__ import annotations
+
+from repro.core.metrics import locality_metrics
+from repro.core.placement import default_placement
+
+from .common import ALL_SCHEMES, all_codes, fmt_table, save_result
+
+
+def main():
+    rows = []
+    for scheme in ALL_SCHEMES:
+        for name, code in all_codes(scheme).items():
+            pl = default_placement(code)
+            m = locality_metrics(code, pl)
+            rows.append({
+                "scheme": scheme, "code": name,
+                "ADRC": round(m.ADRC, 2), "CDRC": round(m.CDRC, 2),
+                "ARC": round(m.ARC, 2), "CARC": round(m.CARC, 2),
+                "LBNR": round(m.LBNR, 2),
+                "xor_only_pct": round(100 * m.xor_fraction, 1),
+            })
+    print(fmt_table(rows, ["scheme", "code", "ADRC", "CDRC", "ARC", "CARC",
+                           "LBNR", "xor_only_pct"],
+                    "Fig 8: locality metrics (ECWide placement for "
+                    "baselines)"))
+    save_result("fig8_locality", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Render EXPERIMENTS.md tables from dry-run artifacts.
+
+Replaces the <!-- DRYRUN_TABLE --> and <!-- ROOFLINE_TABLE --> markers
+(content between marker and next section header is regenerated).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.launch.shapes import all_cells
+
+from .roofline import ART, load_artifacts, note_for, roofline_row
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def dryrun_table() -> str:
+    lines = ["| arch | shape | mesh | status | compile_s | HBM GB/dev | "
+             "FLOPs/dev | coll GB/dev | cross-pod GB |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for a, s, st in all_cells():
+        for mesh in ("single", "multi"):
+            p = ART / f"{a}__{s}__{mesh}.json"
+            if not p.exists():
+                lines.append(f"| {a} | {s} | {mesh} | (pending) | | | | | |")
+                continue
+            d = json.loads(p.read_text())
+            if d["status"] != "ok":
+                lines.append(f"| {a} | {s} | {mesh} | {d['status']} "
+                             f"| | | | | |")
+                continue
+            m, c, co = d.get("memory", {}), d.get("cost", {}), \
+                d.get("collectives", {})
+            lines.append(
+                f"| {a} | {s} | {mesh} | ok | {d['compile_seconds']} | "
+                f"{m.get('peak_bytes_per_device', 0) / 2**30:.1f} | "
+                f"{c.get('flops', 0):.2e} | "
+                f"{co.get('total_bytes', 0) / 2**30:.2f} | "
+                f"{co.get('cross_pod_bytes', 0) / 2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    rows = [roofline_row(a) for a in load_artifacts()]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    lines = ["| arch | shape | mesh | t_comp s | t_mem s | t_coll s | "
+             "dominant | useful | roofline frac | note |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        note = note_for(r) if r["mesh"] == "single" else ""
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['t_compute_s']} | {r['t_memory_s']} | "
+            f"{r['t_collective_s']} | {r['dominant']} | "
+            f"{r['useful_ratio']} | {r['roofline_frac']} | {note} |")
+    return "\n".join(lines)
+
+
+def splice(text: str, marker: str, content: str) -> str:
+    """Replace everything from `marker` to the next '## ' heading."""
+    i = text.index(marker) + len(marker)
+    j = text.find("\n## ", i)
+    if j < 0:
+        j = len(text)
+    return text[:i] + "\n\n" + content + "\n" + text[j:]
+
+
+def main():
+    path = ROOT / "EXPERIMENTS.md"
+    text = path.read_text()
+    text = splice(text, "<!-- DRYRUN_TABLE -->", dryrun_table())
+    text = splice(text, "<!-- ROOFLINE_TABLE -->", roofline_table())
+    path.write_text(text)
+    print(f"updated {path}")
+
+
+if __name__ == "__main__":
+    main()

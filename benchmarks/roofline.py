@@ -1,0 +1,157 @@
+"""Roofline analysis from the dry-run artifacts (deliverable (g)).
+
+Per (arch × shape × mesh) cell, three terms in seconds:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs        (197 TFLOP/s bf16)
+  memory     = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+  collective = Σ_op  op_link_bytes / link_bw            (~50 GB/s/link ICI;
+               DCI legs get BW_ICI / OVERSUB)
+
+compiled.cost_analysis() is per-device (SPMD). Collective link-byte model
+per op (ring algorithms, group size p, per-device result bytes b):
+  all-reduce      2·b·(p-1)/p        all-gather     b·(p-1)/p
+  reduce-scatter  b·(p-1)            all-to-all     b·(p-1)/p
+  collective-permute  b
+Cross-pod collectives (collectives.cross_pod_bytes) are additionally
+charged at the DCI rate (ICI/4 here — 2 pods, OCI-class interconnect).
+
+Also reported: MODEL_FLOPS = 6·N(_active)·D vs HLO_FLOPs (useful-compute
+ratio; catches remat/redundancy waste), dominant term, bottleneck note.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.configs import get_config
+from repro.launch.shapes import SHAPES, all_cells
+
+from .common import fmt_table, save_result
+
+PEAK_FLOPS = 197e12          # v5e bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+DCI_OVERSUB = 4.0            # cross-pod links are ~4x oversubscribed
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+_FACTORS = {
+    "all-reduce": lambda b, p: 2 * b * (p - 1) / p,
+    "all-gather": lambda b, p: b * (p - 1) / p,
+    "reduce-scatter": lambda b, p: b * (p - 1),
+    "all-to-all": lambda b, p: b * (p - 1) / p,
+    "collective-permute": lambda b, p: b,
+}
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """6·N·D for train, 2·N·D for a forward-only step (prefill/encode),
+    2·N·D per generated token for decode. MoE: N_active."""
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    n = cfg.active_param_count()
+    if spec.kind == "train":
+        tokens = spec.global_batch * spec.seq_len
+        return 6.0 * n * tokens
+    if spec.kind == "prefill":
+        tokens = spec.global_batch * spec.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * spec.global_batch
+
+
+def roofline_row(art: dict) -> dict:
+    arch, shape, mesh = art["arch"], art["shape"], art["mesh"]
+    chips = art["num_devices"]
+    sc = art.get("static_cost", {})
+    if "flops" in sc:
+        # loop-aware static analysis (preferred): XLA cost_analysis counts
+        # while bodies once, undercounting layer scans ~L x
+        flops_dev, bytes_dev = sc["flops"], sc["bytes"]
+        coll_bytes = sc["coll_bytes_by_op"]
+        coll_gs = sc.get("coll_group_size", {})
+        cross = sc.get("coll_cross_pod", 0)
+    else:
+        flops_dev = art["cost"]["flops"]
+        bytes_dev = art["cost"]["bytes_accessed"]
+        coll_bytes = art["collectives"]["bytes_by_op"]
+        coll_gs = art["collectives"].get("group_size_by_op", {})
+        cross = art["collectives"].get("cross_pod_bytes", 0)
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+
+    t_coll = 0.0
+    for op, b in coll_bytes.items():
+        p = max(coll_gs.get(op, 2), 2)
+        t_coll += _FACTORS[op](b, p) / ICI_BW
+    # cross-pod legs ride the oversubscribed DCI
+    t_coll += cross * (DCI_OVERSUB - 1) / ICI_BW
+
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    mf = model_flops(arch, shape)
+    useful_ratio = mf / (flops_dev * chips) if flops_dev > 0 else 0.0
+    # roofline fraction: useful model FLOPs over what the chips could do in
+    # the bound step time (== MFU if the dominant term were perfectly hit)
+    frac = mf / (chips * PEAK_FLOPS * step_time) if step_time > 0 else 0.0
+    mem = art.get("memory", {})
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh,
+        "t_compute_s": round(t_compute, 4),
+        "t_memory_s": round(t_memory, 4),
+        "t_collective_s": round(t_coll, 4),
+        "dominant": dominant,
+        "model_flops": f"{mf:.3e}",
+        "useful_ratio": round(useful_ratio, 3),
+        "roofline_frac": round(frac, 3),
+        "hbm_GB_per_dev": round(mem.get("peak_bytes_per_device", 0) / 2**30,
+                                1),
+    }
+
+
+def note_for(row: dict) -> str:
+    d = row["dominant"]
+    if d == "compute":
+        if row["useful_ratio"] < 0.5:
+            return ("compute-bound with low useful ratio — cut recompute/"
+                    "masked-FLOP waste (attention schedule, remat policy)")
+        return "compute-bound near useful peak — gains need FLOP reduction"
+    if d == "memory":
+        return ("HBM-bound — fuse/bf16-ify the largest intermediates, "
+                "shrink KV/optimizer traffic")
+    return ("collective-bound — reshard to cut all-gathers, overlap with "
+            "compute, compress cross-pod legs")
+
+
+def load_artifacts(tag: str = "") -> list[dict]:
+    rows = []
+    for a, s, st in all_cells():
+        for mesh in ("single", "multi"):
+            p = ART / f"{a}__{s}__{mesh}{tag}.json"
+            if not p.exists():
+                continue
+            art = json.loads(p.read_text())
+            if art.get("status") == "ok" and "cost" in art \
+                    and "flops" in art.get("cost", {}):
+                rows.append(art)
+    return rows
+
+
+def main():
+    arts = load_artifacts()
+    rows = [roofline_row(a) for a in arts]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    cols = ["arch", "shape", "mesh", "t_compute_s", "t_memory_s",
+            "t_collective_s", "dominant", "useful_ratio", "roofline_frac",
+            "hbm_GB_per_dev"]
+    print(fmt_table(rows, cols, "Roofline terms per (arch × shape × mesh)"))
+    for r in rows:
+        if r["mesh"] == "single":
+            print(f"  {r['arch']} × {r['shape']}: {note_for(r)}")
+    save_result("roofline", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Benchmark aggregator: `python -m benchmarks.run [--quick]`.
+
+Runs every paper table/figure benchmark (real coding compute + the shared
+bandwidth model) and, if dry-run artifacts exist, the roofline table.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the slower kernel-timing benchmarks")
+    ap.add_argument("--only", default="",
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from . import (fig3_xor_vs_mul, fig5_tradeoff, fig8_locality,
+                   fig10_operations, fig11_bandwidth, fig12_workload,
+                   roofline, table4_mttdl)
+    suites = [
+        ("fig5_tradeoff", fig5_tradeoff.main),
+        ("fig8_locality", fig8_locality.main),
+        ("table4_mttdl", table4_mttdl.main),
+        ("fig12_workload", fig12_workload.main),
+        ("fig10_operations", fig10_operations.main),
+    ]
+    if not args.quick:
+        suites += [
+            ("fig3_xor_vs_mul", fig3_xor_vs_mul.main),
+            ("fig11_bandwidth", fig11_bandwidth.main),
+        ]
+    suites.append(("roofline", roofline.main))
+
+    if args.only:
+        keep = set(args.only.split(","))
+        suites = [(n, f) for n, f in suites if n in keep]
+
+    failures = []
+    for name, fn in suites:
+        print(f"\n{'=' * 72}\n# {name}\n{'=' * 72}")
+        t0 = time.perf_counter()
+        try:
+            fn()
+            print(f"[{name}: {time.perf_counter() - t0:.1f}s]")
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"\nFAILED: {failures}")
+        sys.exit(1)
+    print("\nAll benchmarks completed.")
+
+
+if __name__ == "__main__":
+    main()

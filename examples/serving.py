@@ -1,0 +1,90 @@
+"""Serving drill: batched prefill + decode with KV cache, plus an
+EC-protected "model registry" restore — the serving-side use of the
+paper's technique (weights striped across the cluster; a server that
+loses a node still loads the model, degraded, with zero cross-cluster
+reads).
+
+Run:  PYTHONPATH=src python examples/serving.py [--arch minicpm3-4b]
+      (MLA default: showcases the latent KV cache = 9x smaller)
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import BlockStore, CheckpointManager, ClusterTopology
+from repro.configs import get_config
+from repro.core.codes import make_unilrc
+from repro.models import init_params
+from repro.models.model import init_cache, pad_cache_to
+from repro.train import make_serve_decode, make_serve_prefill
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm3-4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+
+    # --- EC-protected weight registry ------------------------------------
+    topo = ClusterTopology(6, 8)
+    store = BlockStore(topo)
+    mgr = CheckpointManager(store, make_unilrc(1, 6), block_size=1 << 14)
+    mgr.save(params, step=0)
+    store.fail_node(2)  # a registry node is down when the server boots
+    params_restored, report = mgr.restore(0)
+    print(f"weight restore: degraded={report.degraded} "
+          f"({report.degraded_blocks} blocks), cross-cluster bytes="
+          f"{report.cross_cluster_bytes}")
+    assert report.cross_cluster_bytes == 0
+    params = jax.tree_util.tree_map(jnp.asarray, params_restored)
+
+    # --- batched prefill --------------------------------------------------
+    B, P, G = args.batch, args.prompt_len, args.gen
+    vision = None
+    if cfg.family == "vlm":
+        vision = jax.random.normal(key, (B, cfg.vision_seq, cfg.d_model),
+                                   jnp.bfloat16)
+    prompts = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+    prefill = jax.jit(make_serve_prefill(cfg))
+    decode = jax.jit(make_serve_decode(cfg))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, prompts, *(
+        [vision] if vision is not None else []))
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+    cache = pad_cache_to(cache, cfg, S_max=P + G)
+
+    # --- decode loop -------------------------------------------------------
+    tok = jnp.argmax(logits, axis=-1)[:, None]
+    out_tokens = [tok]
+    t0 = time.perf_counter()
+    for i in range(G - 1):
+        logits, cache = decode(params, tok, cache, jnp.int32(P + i))
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+
+    gen = jnp.concatenate(out_tokens, axis=1)
+    assert gen.shape == (B, G)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    print(f"prefill: {B}×{P} tokens in {t_prefill:.2f}s "
+          f"({B * P / t_prefill:.0f} tok/s)")
+    print(f"decode:  {B}×{G - 1} tokens in {t_decode:.2f}s "
+          f"({B * (G - 1) / t_decode:.0f} tok/s)")
+    print(f"sample tokens: {np.asarray(gen[0, :10])}")
+    print("serving OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""End-to-end driver: train a ~100M-param llama-family model for a few
+hundred steps with UniLRC-erasure-coded checkpoints, inject a node failure
+mid-run, restore degraded (zero cross-cluster traffic), reconstruct, and
+verify the loss curve continues where it left off.
+
+Run:  PYTHONPATH=src python examples/train_with_failures.py [--steps 300]
+
+This wraps the production launcher (repro.launch.train); the same
+train_step lowers for the 512-chip mesh in the dry-run.
+"""
+import argparse
+import sys
+
+import jax
+
+from repro.launch.train import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="llama3.2-3b")
+    args = ap.parse_args()
+
+    # ~100M-param reduced clone of the llama3 family config: the smoke
+    # config scaled up (12 layers, d=768) — big enough for a real loss
+    # curve, small enough for CPU.
+    import repro.configs.llama32_3b as l3
+    from repro.models import ModelConfig, uniform_segments
+    hundred_m = ModelConfig(
+        name="llama-100m", family="dense",
+        d_model=768, num_heads=12, num_kv_heads=4,
+        d_ff=2048, vocab_size=8192,
+        segments=uniform_segments("attn", 12),
+        rope_theta=10000.0,
+    )
+    print(f"params: {hundred_m.param_count() / 1e6:.1f}M")
+    l3.SMOKE = hundred_m          # launcher resolves --smoke to this
+
+    losses = run([
+        "--arch", args.arch, "--smoke",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "256",
+        "--ckpt-every", str(max(10, args.steps // 3)),
+        "--fail-node", "5", "--fail-at", str(args.steps * 2 // 3),
+        "--straggler-node", "7",
+        "--log-every", "20",
+    ])
+    n = len(losses)
+    first, mid, last = losses[0], losses[n // 2], losses[-1]
+    print(f"\nloss: {first:.3f} -> {mid:.3f} -> {last:.3f}")
+    assert last < first - 0.3, "model did not learn"
+    print("train-with-failures OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""Cluster topology + block stores for the EC checkpoint layer.
+
+Mirrors the paper's prototype (§4.2): a coordinator holds metadata; proxies
+(one per cluster) hold blocks on nodes. Here a *cluster* is a TPU pod / ICI
+island and a *node* is a host. Two stores:
+
+  * BlockStore      — in-memory (the "in-memory group-local redundancy"
+                      tier; also what tests/benchmarks drive),
+  * DiskBlockStore  — one directory per node (the durable tier).
+
+Both track per-node failure and per-node latency (straggler simulation) so
+degraded reads, reconstruction, and straggler-avoiding reads are exercised
+for real. Traffic accounting distinguishes inner- vs cross-cluster bytes —
+the quantity the paper's topology locality minimises.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pathlib
+from typing import Iterable, Optional
+
+import numpy as np
+
+
+class NodeFailure(Exception):
+    """Raised when reading a block from a failed node."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterTopology:
+    """z clusters × nodes_per_cluster hosts.
+
+    node id = cluster * nodes_per_cluster + slot. A stripe's blocks are
+    mapped via a Placement (block -> cluster) plus round-robin slot
+    assignment within the cluster, offset by stripe id so parity load
+    spreads across nodes (the paper distributes block types uniformly).
+    """
+    num_clusters: int
+    nodes_per_cluster: int
+
+    @property
+    def num_nodes(self) -> int:
+        return self.num_clusters * self.nodes_per_cluster
+
+    def node_of(self, cluster: int, slot: int) -> int:
+        return cluster * self.nodes_per_cluster + slot % self.nodes_per_cluster
+
+    def cluster_of(self, node: int) -> int:
+        return node // self.nodes_per_cluster
+
+
+@dataclasses.dataclass
+class TrafficStats:
+    inner_bytes: int = 0
+    cross_bytes: int = 0
+    reads: int = 0
+
+    def add(self, nbytes: int, cross: bool):
+        self.reads += 1
+        if cross:
+            self.cross_bytes += nbytes
+        else:
+            self.inner_bytes += nbytes
+
+
+class BlockStore:
+    """In-memory block store with failure + straggler simulation."""
+
+    def __init__(self, topo: ClusterTopology):
+        self.topo = topo
+        self._blocks: dict[tuple, bytes] = {}       # (stripe, block) -> bytes
+        self._block_node: dict[tuple, int] = {}
+        self._failed: set[int] = set()
+        self._latency: dict[int, float] = {}        # node -> simulated sec
+        self.traffic = TrafficStats()
+
+    # -- placement ---------------------------------------------------------
+    def put(self, stripe: int, block: int, node: int, data: bytes):
+        self._blocks[(stripe, block)] = bytes(data)
+        self._block_node[(stripe, block)] = node
+
+    def node_of(self, stripe: int, block: int) -> int:
+        return self._block_node[(stripe, block)]
+
+    def blocks_on_node(self, node: int) -> list[tuple]:
+        return [k for k, nd in self._block_node.items() if nd == node]
+
+    # -- failure / straggler injection --------------------------------------
+    def fail_node(self, node: int):
+        self._failed.add(node)
+
+    def heal_node(self, node: int):
+        self._failed.discard(node)
+
+    def set_latency(self, node: int, seconds: float):
+        self._latency[node] = seconds
+
+    @property
+    def failed_nodes(self) -> frozenset:
+        return frozenset(self._failed)
+
+    def available(self, stripe: int, block: int) -> bool:
+        key = (stripe, block)
+        return key in self._blocks and self._block_node[key] not in self._failed
+
+    def latency_of(self, stripe: int, block: int) -> float:
+        return self._latency.get(self._block_node[(stripe, block)], 0.0)
+
+    # -- reads --------------------------------------------------------------
+    def get(self, stripe: int, block: int, *,
+            reader_cluster: Optional[int] = None) -> bytes:
+        key = (stripe, block)
+        node = self._block_node.get(key)
+        if node is None:
+            raise KeyError(key)
+        if node in self._failed:
+            raise NodeFailure(f"node {node} (stripe {stripe} block {block})")
+        data = self._blocks[key]
+        cross = (reader_cluster is not None
+                 and self.topo.cluster_of(node) != reader_cluster)
+        self.traffic.add(len(data), cross)
+        return data
+
+    def delete_node_blocks(self, node: int):
+        """Simulate permanent loss of a node's disks."""
+        for key in self.blocks_on_node(node):
+            del self._blocks[key]
+            del self._block_node[key]
+
+
+class DiskBlockStore(BlockStore):
+    """Durable tier: blocks live under root/node_<i>/s<stripe>_b<block>.
+
+    Inherits the in-memory index for placement/failure bookkeeping but
+    persists payloads to disk, so a process restart (the checkpoint/restart
+    drill in examples/train_with_failures.py) can re-open the store.
+    """
+
+    def __init__(self, topo: ClusterTopology, root: str | os.PathLike):
+        super().__init__(topo)
+        self.root = pathlib.Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    def _path(self, stripe: int, block: int, node: int) -> pathlib.Path:
+        d = self.root / f"node_{node:04d}"
+        d.mkdir(exist_ok=True)
+        return d / f"s{stripe:06d}_b{block:04d}"
+
+    def put(self, stripe: int, block: int, node: int, data: bytes):
+        self._path(stripe, block, node).write_bytes(data)
+        self._blocks[(stripe, block)] = b""           # payload on disk
+        self._block_node[(stripe, block)] = node
+
+    def get(self, stripe: int, block: int, *,
+            reader_cluster: Optional[int] = None) -> bytes:
+        key = (stripe, block)
+        node = self._block_node.get(key)
+        if node is None:
+            raise KeyError(key)
+        if node in self._failed:
+            raise NodeFailure(f"node {node}")
+        data = self._path(stripe, block, node).read_bytes()
+        cross = (reader_cluster is not None
+                 and self.topo.cluster_of(node) != reader_cluster)
+        self.traffic.add(len(data), cross)
+        return data
+
+    def reopen(self):
+        """Rebuild the index from the directory tree (restart path)."""
+        self._blocks.clear()
+        self._block_node.clear()
+        for nd in sorted(self.root.glob("node_*")):
+            node = int(nd.name.split("_")[1])
+            for f in nd.iterdir():
+                s, b = f.name[1:].split("_b")
+                self._blocks[(int(s), int(b))] = b""
+                self._block_node[(int(s), int(b))] = node
+
+    def delete_node_blocks(self, node: int):
+        for key in self.blocks_on_node(node):
+            s, b = key
+            p = self._path(s, b, node)
+            if p.exists():
+                p.unlink()
+            del self._blocks[key]
+            del self._block_node[key]

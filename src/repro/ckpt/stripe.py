@@ -1,0 +1,262 @@
+"""StripeCodec: byte buffers <-> erasure-coded stripes on a BlockStore.
+
+Implements the paper's basic operations (§4.1) over checkpoint bytes:
+
+  write            — encode k data blocks -> n, place one-group-one-cluster
+                     (UniLRC) / ECWide (baselines), round-robin node slots.
+  normal_read      — read the k data blocks (maximum cluster parallelism,
+                     Property 1).
+  degraded_read    — any unavailable block served by XOR of its local group
+                     (zero cross-cluster traffic for UniLRC, Property 2).
+  reconstruct      — rebuild every block of a failed node from group
+                     survivors and re-place (background re-protect).
+  straggler_read   — group-local read that substitutes the slowest member
+                     with the group parity (first-r-of-(r+1) semantics).
+
+The bulk byte path runs on the JAX kernels (kernels/ops.py): encode via the
+MXU bit-plane GF matmul, single-failure decode via the VPU XOR kernel.
+choose_code() picks (α, z) for a topology + target rate, MTTDL-checked.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.core.codec import decode_plan, single_recovery_plan
+from repro.core.codes import Code, make_unilrc
+from repro.core.metrics import locality_metrics
+from repro.core.mttdl import MTTDLParams, code_mttdl_years
+from repro.core.placement import Placement, default_placement
+from repro.kernels import ops
+
+from .store import BlockStore, ClusterTopology, NodeFailure
+
+
+@dataclasses.dataclass(frozen=True)
+class StripeMeta:
+    stripe_id: int
+    nbytes: int          # payload bytes in this stripe (before padding)
+    block_size: int
+
+
+class StripeCodec:
+    """Encode/decode byte buffers as stripes of a given Code on a store."""
+
+    def __init__(self, code: Code, store: BlockStore, *,
+                 block_size: int = 1 << 20,
+                 placement: Optional[Placement] = None,
+                 use_kernels: bool = True):
+        self.code = code
+        self.store = store
+        self.block_size = block_size
+        self.placement = placement or default_placement(code)
+        self.use_kernels = use_kernels
+        if self.placement.num_clusters > store.topo.num_clusters:
+            raise ValueError(
+                f"{code.name} needs {self.placement.num_clusters} clusters; "
+                f"topology has {store.topo.num_clusters}")
+        self._stripes: dict[int, StripeMeta] = {}
+
+    # -- encode / write ------------------------------------------------------
+    def _encode(self, data_blocks: np.ndarray) -> np.ndarray:
+        """(k, B) uint8 -> (n, B)."""
+        if self.use_kernels:
+            return np.asarray(ops.encode(self.code, data_blocks))
+        return self.code.encode(data_blocks)
+
+    def _node_for(self, stripe_id: int, block: int) -> int:
+        cluster = self.placement.assignment[block]
+        # Rotate slots by stripe id so parity work spreads over nodes.
+        within = [b for b in range(self.code.n)
+                  if self.placement.assignment[b] == cluster]
+        slot = within.index(block) + stripe_id
+        return self.store.topo.node_of(cluster, slot)
+
+    def write(self, buf: bytes, *, start_stripe: int = 0) -> list[StripeMeta]:
+        """Stripe `buf` into ceil(len/k/bs) stripes starting at start_stripe."""
+        k, bs = self.code.k, self.block_size
+        stripe_payload = k * bs
+        metas = []
+        sid = start_stripe
+        for off in range(0, max(len(buf), 1), stripe_payload):
+            chunk = buf[off:off + stripe_payload]
+            padded = np.zeros(stripe_payload, dtype=np.uint8)
+            padded[:len(chunk)] = np.frombuffer(chunk, np.uint8)
+            data_blocks = padded.reshape(k, bs)
+            codeword = self._encode(data_blocks)
+            for b in range(self.code.n):
+                self.store.put(sid, b, self._node_for(sid, b),
+                               codeword[b].tobytes())
+            meta = StripeMeta(sid, len(chunk), bs)
+            self._stripes[sid] = meta
+            metas.append(meta)
+            sid += 1
+        return metas
+
+    # -- reads ---------------------------------------------------------------
+    def normal_read(self, meta: StripeMeta, *,
+                    reader_cluster: Optional[int] = None) -> bytes:
+        """Read the k data blocks; degraded-read any that are unavailable."""
+        k = self.code.k
+        out = bytearray()
+        for b in range(k):
+            try:
+                blk = self.store.get(meta.stripe_id, b,
+                                     reader_cluster=reader_cluster)
+            except NodeFailure:
+                blk = self.degraded_read(meta, b,
+                                         reader_cluster=reader_cluster)
+            out += blk
+        return bytes(out[:meta.nbytes])
+
+    def degraded_read(self, meta: StripeMeta, block: int, *,
+                      reader_cluster: Optional[int] = None) -> bytes:
+        """Recover one unavailable block from survivors.
+
+        Fast path: the minimal single-failure plan (group-local, XOR-only
+        for UniLRC). If plan sources are also unavailable, fall back to a
+        general multi-erasure decode.
+        """
+        sid = meta.stripe_id
+        plan = single_recovery_plan(self.code, block)
+        if all(self.store.available(sid, s) for s in plan.sources):
+            blocks = {s: np.frombuffer(
+                self.store.get(sid, s, reader_cluster=reader_cluster),
+                np.uint8) for s in plan.sources}
+            if self.use_kernels:
+                return np.asarray(ops.recover_single(plan, blocks)).tobytes()
+            return plan.apply(blocks).tobytes()
+        # correlated failures: full decode
+        erased = [b for b in range(self.code.n)
+                  if not self.store.available(sid, b)]
+        if block not in erased:
+            erased.append(block)
+        dplan = decode_plan(self.code, tuple(erased))
+        blocks = {s: np.frombuffer(
+            self.store.get(sid, s, reader_cluster=reader_cluster), np.uint8)
+            for s in dplan.sources}
+        if self.use_kernels:
+            rec = ops.apply_decode(dplan, blocks)
+            return np.asarray(rec[block]).tobytes()
+        return dplan.apply(blocks)[block].tobytes()
+
+    def straggler_read(self, meta: StripeMeta, group_idx: int, *,
+                       reader_cluster: Optional[int] = None
+                       ) -> dict[int, bytes]:
+        """Read a local group's data blocks, substituting the single slowest
+        member (per simulated node latency) with a parity-decode — the
+        'first r of r+1' straggler mitigation UniLRC's uniform groups allow.
+        Returns {block_id: bytes} for the group's data blocks."""
+        sid = meta.stripe_id
+        grp = self.code.groups[group_idx]
+        lat = {b: self.store.latency_of(sid, b) for b in grp}
+        slowest = max(lat, key=lat.get)
+        out = {}
+        for b in grp:
+            if self.code.block_type[b] != 'd':
+                continue
+            if b == slowest and lat[slowest] > 0:
+                out[b] = self.degraded_read(meta, b,
+                                            reader_cluster=reader_cluster)
+            else:
+                out[b] = self.store.get(sid, b, reader_cluster=reader_cluster)
+        return out
+
+    # -- partial update (delta parity) ----------------------------------------
+    def update_block(self, meta: StripeMeta, block: int, new_data: bytes,
+                     *, reader_cluster: Optional[int] = None) -> int:
+        """Overwrite one data block and patch every parity in place via the
+        code's GF(2^8) linearity:  p_new = p_old ⊕ A[:, block]·Δ  with
+        Δ = old ⊕ new — the partial-update property the paper's related
+        work (CoRD [38]) builds on. Training-state deltas between
+        checkpoints touch a fraction of blocks; this writes O(Δ·(n−k)/k)
+        bytes instead of re-encoding the stripe. Returns parity blocks
+        touched."""
+        assert self.code.block_type[block] == 'd', "update data blocks only"
+        sid = meta.stripe_id
+        old = np.frombuffer(self.store.get(sid, block,
+                                           reader_cluster=reader_cluster),
+                            np.uint8)
+        new = np.frombuffer(new_data, np.uint8)
+        assert new.shape == old.shape
+        delta = old ^ new
+        self.store.put(sid, block, self.store.node_of(sid, block),
+                       new.tobytes())
+        touched = 0
+        coeffs = self.code.A[:, block]              # (n-k,) parity coeffs
+        for pi, c in enumerate(coeffs):
+            if c == 0:
+                continue
+            pblock = self.code.k + pi
+            pold = np.frombuffer(self.store.get(
+                sid, pblock, reader_cluster=reader_cluster), np.uint8)
+            if self.use_kernels:
+                term = np.asarray(ops.apply_matrix(
+                    np.array([[c]], np.uint8), delta[None, :]))[0]
+            else:
+                from repro.core.gf import GF_MUL_TABLE
+                term = GF_MUL_TABLE[np.uint8(c), delta]
+            self.store.put(sid, pblock, self.store.node_of(sid, pblock),
+                           (pold ^ term).tobytes())
+            touched += 1
+        return touched
+
+    # -- reconstruction ------------------------------------------------------
+    def reconstruct_node(self, node: int) -> int:
+        """Rebuild every block the failed node held, re-placing each on the
+        next free slot of its home cluster. Returns #blocks rebuilt."""
+        lost = [key for key in list(self.store._block_node)
+                if self.store._block_node[key] == node]
+        rebuilt = 0
+        cluster = self.store.topo.cluster_of(node)
+        for (sid, b) in lost:
+            meta = self._stripes.get(sid)
+            if meta is None:
+                meta = StripeMeta(sid, self.code.k * self.block_size,
+                                  self.block_size)
+            data = self.degraded_read(meta, b, reader_cluster=cluster)
+            # place on a live node of the same cluster (keep topology local)
+            for slot in range(self.store.topo.nodes_per_cluster):
+                cand = self.store.topo.node_of(
+                    self.placement.assignment[b], slot)
+                if cand not in self.store.failed_nodes and cand != node:
+                    self.store.put(sid, b, cand, data)
+                    rebuilt += 1
+                    break
+        return rebuilt
+
+    def read_all(self, metas: list[StripeMeta], *,
+                 reader_cluster: Optional[int] = None) -> bytes:
+        return b"".join(self.normal_read(m, reader_cluster=reader_cluster)
+                        for m in metas)
+
+
+def choose_code(topo: ClusterTopology, *, target_rate: float = 0.85,
+                min_mttdl_years: float = 1e9,
+                params: MTTDLParams = MTTDLParams()) -> Code:
+    """Pick UniLRC(α, z=num_clusters) meeting a storage-efficiency target,
+    MTTDL-checked (the 'MTTDL-driven code choice' knob in DESIGN.md §4).
+
+    rate = 1 - (α+1)/(αz+1) grows with α; pick the smallest α whose rate
+    reaches the target (smaller α = smaller groups = cheaper recovery),
+    then verify MTTDL.
+    """
+    z = topo.num_clusters
+    if z < 2:
+        raise ValueError("need >= 2 clusters for UniLRC")
+    for alpha in range(1, 9):
+        rate = 1 - (alpha + 1) / (alpha * z + 1)
+        code = make_unilrc(alpha, z)
+        if code.n > topo.num_nodes:
+            # cannot give each block its own node; stop growing stripes
+            break
+        if rate >= target_rate:
+            m = locality_metrics(code, default_placement(code))
+            if code_mttdl_years(code, m, params) >= min_mttdl_years:
+                return code
+    # fall back: largest feasible alpha by node count, rate be damned
+    alpha = max(1, (topo.num_nodes - z) // (z * z))
+    return make_unilrc(min(alpha, 8), z)

@@ -1,0 +1,33 @@
+"""Architecture registry: --arch <id> resolves here.
+
+Also includes the paper's own code configurations (Table 2) for the
+erasure-coding layer.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = {
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b_a66b",
+    "llama3.2-3b": "llama32_3b",
+    "qwen1.5-32b": "qwen15_32b",
+    "minicpm3-4b": "minicpm3_4b",
+    "phi4-mini-3.8b": "phi4_mini_38b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "rwkv6-7b": "rwkv6_7b",
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "hubert-xlarge": "hubert_xlarge",
+}
+
+# Paper Table 2 code schemes (used by the EC checkpoint layer + benchmarks)
+CODE_SCHEMES = ("30-of-42", "112-of-136", "180-of-210")
+
+
+def get_config(arch: str, smoke: bool = False):
+    mod = importlib.import_module(f".{ARCHS[arch]}", __package__)
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def all_archs() -> list[str]:
+    return list(ARCHS)

@@ -1,0 +1,63 @@
+"""Locality metrics (paper Table 3): ADRC, CDRC, ARC, CARC, LBNR.
+
+cost(b_i)   = number of blocks read to reconstruct block i
+cost^c(b_i) = number of those blocks living in other clusters
+LBNR        = max_c(blocks of a normal read served by cluster c)
+              / avg_c(blocks served)           (optimal = 1.0)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .codec import all_recovery_plans
+from .codes import Code
+from .placement import Placement
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalityMetrics:
+    code: str
+    placement: str
+    ADRC: float   # avg degraded read cost (data blocks only)
+    CDRC: float   # cross-cluster ADRC
+    ARC: float    # avg recovery cost (all blocks) == recovery locality r̄
+    CARC: float   # cross-cluster ARC
+    LBNR: float   # load balance ratio of normal read
+    xor_fraction: float  # fraction of single-block recoveries that are XOR-only
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def locality_metrics(code: Code, placement: Placement) -> LocalityMetrics:
+    plans = all_recovery_plans(code)
+    k, n = code.k, code.n
+
+    costs = np.array([p.cost for p in plans], dtype=float)
+    cross = np.array(
+        [placement.cross_cluster_cost(p.target, p.sources) for p in plans],
+        dtype=float)
+
+    adrc = float(costs[:k].mean())
+    cdrc = float(cross[:k].mean())
+    arc = float(costs.mean())
+    carc = float(cross.mean())
+
+    # Normal read: read all k data blocks; per-cluster service counts.
+    per_cluster = np.zeros(placement.num_clusters, dtype=float)
+    for i in range(k):
+        per_cluster[placement.assignment[i]] += 1
+    nonzero = per_cluster[per_cluster > 0]
+    lbnr = float(nonzero.max() / nonzero.mean())
+
+    xor_frac = float(np.mean([p.xor_only for p in plans]))
+    return LocalityMetrics(code.name, placement.name, adrc, cdrc, arc, carc,
+                           lbnr, xor_frac)
+
+
+def recovery_locality(code: Code) -> float:
+    """r̄ — average blocks accessed for single-block recovery (§2.3.1)."""
+    plans = all_recovery_plans(code)
+    return float(np.mean([p.cost for p in plans]))

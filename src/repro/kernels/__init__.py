@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the coding hot path (validated in interpret mode).
+
+gf_bitmatmul — GF(2^8) coding matmul as bit-plane binary matmul on the MXU.
+xor_reduce   — pure-VPU XOR fold (UniLRC's single-failure decode path).
+"""
+from .gf_bitmatmul import gf_bitmatmul
+from .xor_reduce import xor_reduce
+from .ops import (apply_decode, apply_matrix, default_interpret, encode,
+                  recover_single, xor_fold)
+
+__all__ = ["gf_bitmatmul", "xor_reduce", "apply_decode", "apply_matrix",
+           "default_interpret", "encode", "recover_single", "xor_fold"]

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for the coding kernels.
+
+These are the semantic references the Pallas kernels are validated against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts exact equality —
+GF(2^8) coding is bit-exact, there is no tolerance).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gf import GF_MUL_TABLE
+
+_MUL_TABLE_FLAT = jnp.asarray(GF_MUL_TABLE.reshape(-1))  # (65536,) uint8
+
+
+def gf_matmul_ref(A, data):
+    """GF(2^8) coding matmul, table-lookup formulation (the CPU/ISA-L way).
+
+    A: (m, k) uint8 coefficients; data: (k, B) uint8.
+    Returns (m, B) uint8 = A @ data over GF(2^8).
+
+    Implemented as XOR-reduction of 2D-table gathers — semantically exact,
+    and also the *measurable* TPU-hostile baseline for the Fig 3 XOR-vs-MUL
+    comparison (gathers do not use the MXU).
+    """
+    A = jnp.asarray(A, dtype=jnp.uint8)
+    data = jnp.asarray(data, dtype=jnp.uint8)
+    m, k = A.shape
+    idx = A.astype(jnp.int32)[:, :, None] * 256 + data.astype(jnp.int32)[None, :, :]
+    prods = _MUL_TABLE_FLAT[idx]                  # (m, k, B) uint8
+    out = prods[:, 0, :]
+    for j in range(1, k):
+        out = out ^ prods[:, j, :]
+    return out
+
+
+def xor_reduce_ref(blocks):
+    """XOR-fold s blocks: (s, B) uint8 -> (B,) uint8."""
+    blocks = jnp.asarray(blocks, dtype=jnp.uint8)
+    out = blocks[0]
+    for j in range(1, blocks.shape[0]):
+        out = out ^ blocks[j]
+    return out
+
+
+def gf_bitmatmul_ref(A_bits, data):
+    """Bit-plane formulation oracle in numpy (exact).
+
+    A_bits: (8m, 8k) {0,1}; data: (k, B) uint8 -> (m, B) uint8.
+    """
+    from repro.core.gf import bitplanes_to_bytes, bytes_to_bitplanes
+    xb = bytes_to_bitplanes(np.asarray(data))
+    yb = (np.asarray(A_bits, dtype=np.int64) @ xb.astype(np.int64)) % 2
+    return bitplanes_to_bytes(yb.astype(np.uint8))
+
+
+def flash_attention_ref(q, k, v, causal=True, window=0):
+    """Naive full-softmax attention oracle for the Pallas flash kernel.
+    q: (B, Hq, Sq, dk); k/v: (B, Hkv, Skv, d*) -> (B, Hq, Sq, dv)."""
+    import jax
+    import jax.numpy as jnp
+    B, Hq, Sq, dk = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, Sq, dk).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg,
+                   k.astype(jnp.float32)) * dk ** -0.5
+    qp, kp = jnp.arange(Sq), jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = mask & (qp[:, None] >= kp[None, :])
+    if window:
+        mask = mask & (qp[:, None] - kp[None, :] < window)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, -1).astype(q.dtype)

@@ -1,0 +1,44 @@
+"""Pallas TPU kernel: XOR-fold of s blocks — UniLRC's entire single-failure
+decode path (XOR locality, paper §2.3.3/§4.1 Property 2).
+
+The TPU analogue of the paper's Fig 3 "XOR beats MUL+XOR" result: this
+kernel is a pure VPU bitwise reduction on int32 lanes — no MXU pass, no
+table gathers, ~s*B byte reads and B writes. Compare kernels/gf_bitmatmul
+(the MUL+XOR path) which needs an (8m x 8k x Bt) MXU contraction.
+
+Blocks are viewed as int32 lanes (4 bytes per lane) by ops.py; the kernel
+itself is dtype-agnostic over integer types.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 2048  # int32 lanes per tile (= 8 KiB of payload)
+
+
+def _kernel(blocks_ref, out_ref, *, s: int):
+    acc = blocks_ref[0, :]
+    for j in range(1, s):             # s is small (r+1 <= 29); unrolled XOR tree
+        acc = acc ^ blocks_ref[j, :]
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def xor_reduce(blocks: jax.Array, block_b: int = DEFAULT_BLOCK_B,
+               interpret: bool = True) -> jax.Array:
+    """(s, B) int array -> (B,) XOR-fold along axis 0."""
+    s, B = blocks.shape
+    assert B % block_b == 0, (B, block_b)
+    grid = (B // block_b,)
+    return pl.pallas_call(
+        functools.partial(_kernel, s=s),
+        grid=grid,
+        in_specs=[pl.BlockSpec((s, block_b), lambda b: (0, b))],
+        out_specs=pl.BlockSpec((block_b,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((B,), blocks.dtype),
+        interpret=interpret,
+    )(blocks)

@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init): the dry-run — and only the dry-run — sees 512
+placeholder host devices so jax.make_mesh can build the production meshes.
+
+Per cell this driver:
+  1. builds abstract args + shardings (launch/specs.py),
+  2. jit(...).lower(*args).compile()  — sharding coherence proof,
+  3. records memory_analysis / cost_analysis / collective bytes (launch/hlo)
+     into artifacts/dryrun/<arch>__<shape>__<mesh>[__tag].json.
+
+`--all` orchestrates one subprocess per cell (compile state is process-
+isolated; a pathological cell can't poison the rest) and prints the
+summary table EXPERIMENTS.md §Dry-run embeds.
+"""
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+ART_DIR = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *,
+             attn_schedule: str = "bounded", remat: str = "block",
+             accum: int = 1, tag: str = "", seq_parallel: bool = False,
+             save_hlo: bool = False) -> dict:
+    import jax
+    from repro.configs import get_config
+    from repro.launch.hlo import collective_stats, count_ops
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.shapes import SHAPES, cell_status
+    from repro.launch.specs import cell_args, replicated
+    from repro.models import forward
+    from repro.optim import AdamWConfig
+    from repro.train import (TrainConfig, make_serve_decode,
+                             make_serve_prefill, make_train_step)
+
+    status = cell_status(arch, shape)
+    if status != "run":
+        return {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                "status": status}
+
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    kind, args, shards, donate = cell_args(cfg, spec, mesh)
+
+    tcfg = TrainConfig(accum=accum, remat=remat, attn_schedule=attn_schedule,
+                       seq_parallel=seq_parallel)
+    if kind == "train":
+        fn = make_train_step(cfg, AdamWConfig(), tcfg, mesh=mesh)
+    elif kind == "prefill":
+        fn = make_serve_prefill(cfg, attn_schedule=attn_schedule, mesh=mesh)
+    elif kind == "encode":
+        def fn(params, embeds):
+            logits, _, _ = forward(params, embeds, cfg, mode="train",
+                                   mesh=mesh)
+            return logits
+    elif kind == "decode":
+        fn = make_serve_decode(cfg, mesh=mesh)
+    else:
+        raise ValueError(kind)
+
+    t0 = time.perf_counter()
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=shards,
+                         donate_argnums=donate or None)
+        lowered = jitted.lower(*args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    result = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind, "status": "ok",
+        "kind": kind, "tag": tag,
+        "options": {"attn_schedule": attn_schedule, "remat": remat,
+                    "accum": accum, "seq_parallel": seq_parallel},
+        "lower_seconds": round(t_lower, 2),
+        "compile_seconds": round(t_compile, 2),
+        "num_devices": mesh.devices.size,
+    }
+
+    # --- memory analysis (per-device bytes) ------------------------------
+    try:
+        ma = compiled.memory_analysis()
+        result["memory"] = {
+            k: int(getattr(ma, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "alias_size_in_bytes",
+             "generated_code_size_in_bytes") if hasattr(ma, k)}
+        if "argument_size_in_bytes" in result["memory"]:
+            m = result["memory"]
+            result["memory"]["peak_bytes_per_device"] = (
+                m.get("argument_size_in_bytes", 0)
+                + m.get("output_size_in_bytes", 0)
+                + m.get("temp_size_in_bytes", 0)
+                - m.get("alias_size_in_bytes", 0))
+    except Exception as e:  # CPU backend may not implement it
+        result["memory"] = {"error": str(e)}
+
+    # --- cost analysis (per-device FLOPs / bytes) -------------------------
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        result["cost"] = {
+            "flops": float(ca.get("flops", -1.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", -1.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0)),
+        }
+    except Exception as e:
+        result["cost"] = {"error": str(e)}
+
+    # --- collective traffic (parse per-device HLO) ------------------------
+    hlo = compiled.as_text()
+    cs = collective_stats(hlo, pod_size=256)
+    result["collectives"] = cs.to_json()
+
+    # --- loop-aware static cost (launch/hlo_cost.py) -----------------------
+    # XLA's cost_analysis counts while bodies ONCE (layer scans -> ~L x
+    # undercount); the static analyzer multiplies by trip counts.
+    try:
+        from repro.launch.hlo_cost import analyze
+        sc = analyze(hlo, pod_size=256)
+        result["static_cost"] = {
+            "flops": sc.flops, "bytes": sc.bytes,
+            "coll_bytes_by_op": sc.coll_bytes_by_op,
+            "coll_count_by_op": sc.coll_count_by_op,
+            "coll_group_size": sc.coll_group_size,
+            "coll_cross_pod": sc.coll_cross_pod,
+        }
+    except Exception as e:
+        result["static_cost"] = {"error": str(e)}
+    result["op_audit"] = count_ops(
+        hlo, ("reshape", "transpose", "copy", "fusion"))
+    result["hlo_instruction_count"] = hlo.count("\n")
+    if save_hlo:
+        hpath = ART_DIR / f"{arch}__{shape}__{mesh_kind}{tag}.hlo"
+        hpath.write_text(hlo)
+        result["hlo_path"] = str(hpath)
+    return result
+
+
+def artifact_path(arch: str, shape: str, mesh_kind: str, tag: str = ""):
+    return ART_DIR / f"{arch}__{shape}__{mesh_kind}{tag}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every runnable cell on both meshes via "
+                         "subprocesses")
+    ap.add_argument("--attn-schedule", default="bounded",
+                    choices=("masked", "bounded"))
+    ap.add_argument("--remat", default="block", choices=("none", "block"))
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--tag", default="", help="artifact filename suffix "
+                    "(perf-iteration variants)")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells with existing artifacts")
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        from repro.launch.shapes import all_cells
+        cells = [(a, s, st) for a, s, st in all_cells()]
+        failures = []
+        for a, s, st in cells:
+            for mesh_kind in ("single", "multi"):
+                path = artifact_path(a, s, mesh_kind, args.tag)
+                if st != "run":
+                    path.write_text(json.dumps(
+                        {"arch": a, "shape": s, "mesh": mesh_kind,
+                         "status": st}, indent=2))
+                    print(f"[skip] {a} × {s} × {mesh_kind}: {st}")
+                    continue
+                if path.exists() and not args.force:
+                    print(f"[cached] {a} × {s} × {mesh_kind}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", a, "--shape", s, "--mesh", mesh_kind,
+                       "--attn-schedule", args.attn_schedule,
+                       "--remat", args.remat, "--tag", args.tag]
+                t0 = time.perf_counter()
+                try:
+                    r = subprocess.run(cmd, capture_output=True, text=True,
+                                       timeout=args.timeout)
+                    ok = r.returncode == 0
+                except subprocess.TimeoutExpired:
+                    ok, r = False, None
+                dt = time.perf_counter() - t0
+                if ok:
+                    print(f"[ok]   {a} × {s} × {mesh_kind}  ({dt:.0f}s)")
+                else:
+                    msg = (r.stderr[-2000:] if r else "TIMEOUT")
+                    failures.append((a, s, mesh_kind, msg))
+                    print(f"[FAIL] {a} × {s} × {mesh_kind}  ({dt:.0f}s)\n{msg}")
+        if failures:
+            print(f"\n{len(failures)} cell(s) failed")
+            sys.exit(1)
+        print("\nAll cells compiled.")
+        return
+
+    assert args.arch and args.shape, "--arch and --shape required"
+    result = run_cell(args.arch, args.shape, args.mesh,
+                      attn_schedule=args.attn_schedule, remat=args.remat,
+                      accum=args.accum, tag=args.tag,
+                      seq_parallel=args.seq_parallel,
+                      save_hlo=args.save_hlo)
+    path = artifact_path(args.arch, args.shape, args.mesh, args.tag)
+    path.write_text(json.dumps(result, indent=2))
+    print(json.dumps(result, indent=2))
+    if result["status"] not in ("ok",) and not result["status"].startswith("skip"):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""HLO-text analysis: collective traffic extraction for the roofline.
+
+`compiled.cost_analysis()` has no collective term, so we parse the
+(SPMD, per-device) HLO. Post-optimization HLO prints operands as bare
+names, so we take each collective's *result* shape — for all-gather the
+gathered (per-device) output, for all-reduce the reduced tensor, for
+reduce-scatter the scattered shard — and record (bytes, group size, op) so
+the roofline layer can apply op-specific link-traffic factors.
+
+Cross-pod collectives (replica groups spanning device-id ranges of
+pod_size) are tallied separately — they ride the oversubscribed DCI, the
+exact analogue of the paper's cross-cluster traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(pred|[sufc]\d+|bf16|f16)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"=\s*(.*?)\s(" + "|".join(_COLLECTIVES) + r")(-start)?\(")
+# iota replica groups: [G,S]<=[d0,d1,...]T(p0,p1,...)  (T(...) optional)
+_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_LIST_RE = re.compile(r"replica_groups=\{(.+?)\}\s*[,)]?")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype, 4)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def _parse_groups(line: str):
+    """-> (group_size, crosses) generator-friendly tuple list or None.
+
+    Returns list of numpy arrays (each a replica group of device ids).
+    """
+    m = _IOTA_RE.search(line)
+    if m:
+        G, S = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        return list(ids.reshape(G, S))
+    m = _LIST_RE.search(line)
+    if m:
+        groups = []
+        for grp in re.findall(r"\{([\d,]+)\}", "{" + m.group(1) + "}"):
+            groups.append(np.array([int(x) for x in grp.split(",")]))
+        if groups:
+            return groups
+    return None
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: dict       # op -> per-device result bytes (summed)
+    count_by_op: dict
+    group_size_by_op: dict  # op -> max replica-group size seen
+    cross_pod_bytes: int    # result bytes of collectives spanning pods
+    total_bytes: int
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def collective_stats(hlo_text: str, *, pod_size: int = 256) -> CollectiveStats:
+    bytes_by_op: dict[str, int] = {}
+    count_by_op: dict[str, int] = {}
+    gs_by_op: dict[str, int] = {}
+    cross = 0
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if m is None:
+            continue
+        result_sig, op, is_start = m.group(1), m.group(2), m.group(3)
+        shapes = _SHAPE_RE.findall(result_sig)
+        if not shapes:
+            continue
+        if is_start and len(shapes) > 1:
+            # async start returns (operand_alias, result [, scratch...]):
+            # count the result only
+            shapes = shapes[1:2]
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        bytes_by_op[op] = bytes_by_op.get(op, 0) + nbytes
+        count_by_op[op] = count_by_op.get(op, 0) + 1
+        groups = _parse_groups(line)
+        if groups is not None:
+            gsize = max(len(g) for g in groups)
+            gs_by_op[op] = max(gs_by_op.get(op, 0), gsize)
+            if any((g.max() // pod_size) != (g.min() // pod_size)
+                   for g in groups):
+                cross += nbytes
+    return CollectiveStats(bytes_by_op, count_by_op, gs_by_op, cross,
+                           sum(bytes_by_op.values()))
+
+
+def count_ops(hlo_text: str, opcodes: tuple[str, ...]) -> dict[str, int]:
+    """Instruction counts by opcode (reshape/transpose/fusion audit)."""
+    counts = {op: 0 for op in opcodes}
+    for line in hlo_text.splitlines():
+        sl = line.lstrip()
+        for op in opcodes:
+            if re.search(rf"=\s*\S+\s+{op}\(", sl):
+                counts[op] += 1
+    return counts

@@ -1,0 +1,94 @@
+"""Debug helper: top trip-multiplied contributors per op class in an HLO
+dump. Usage:
+  python -m repro.launch.hlo_debug <file.hlo> [opcode-substring] [top-n]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from collections import defaultdict
+
+from .hlo_cost import (parse_module, _trip_count, _operand_names,
+                       _shape_elems_bytes)
+
+
+def multipliers(comps, entry):
+    edges = {}
+    for cname, comp in comps.items():
+        es = []
+        for ins in comp.instrs:
+            if ins.op == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.rest)
+                cm = re.search(r"condition=%?([\w\.\-]+)", ins.rest)
+                t = _trip_count(comps, cm.group(1)) if cm else 1
+                if bm:
+                    es.append((bm.group(1), float(t)))
+                if cm:
+                    es.append((cm.group(1), float(t + 1)))
+            else:
+                for c in ins.called:
+                    es.append((c, 1.0))
+        edges[cname] = es
+    order, state = [], {}
+    stack = [(entry, iter(edges.get(entry, ())))]
+    state[entry] = 1
+    while stack:
+        node, it = stack[-1]
+        adv = False
+        for cal, _ in it:
+            if state.get(cal, 0) == 0 and cal in comps:
+                state[cal] = 1
+                stack.append((cal, iter(edges.get(cal, ()))))
+                adv = True
+                break
+        if not adv:
+            order.append(node)
+            state[node] = 2
+            stack.pop()
+    order.reverse()
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    for cn in order:
+        m = mult.get(cn, 0.0)
+        if not m:
+            continue
+        for cal, w in edges.get(cn, ()):
+            mult[cal] += m * w
+    return mult
+
+
+def top_contributors(hlo: str, op_filter: str = "all-gather", n: int = 10):
+    comps = parse_module(hlo)
+    entry = next(c for c in comps if "main" in c)
+    mult = multipliers(comps, entry)
+    rows = []
+    for cn, comp in comps.items():
+        m = mult.get(cn, 0)
+        if not m:
+            continue
+        for ins in comp.instrs:
+            if op_filter in ins.op and not ins.op.endswith("-done"):
+                b = _shape_elems_bytes(ins.result_sig)
+                meta = re.search(r'op_name="([^"]*)"', ins.rest)
+                opnds = ",".join(
+                    comp.shapes.get(o, "?")[:40]
+                    for o in _operand_names(ins.rest)[:2])
+                rows.append((m * b, m, b, cn[:30],
+                             ins.result_sig[:45] + " <= " + opnds,
+                             (meta.group(1)[-70:] if meta else "")))
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def main():
+    path = sys.argv[1]
+    opf = sys.argv[2] if len(sys.argv) > 2 else "all-gather"
+    n = int(sys.argv[3]) if len(sys.argv) > 3 else 10
+    hlo = open(path).read()
+    for t, m, b, cn, sig, meta in top_contributors(hlo, opf, n):
+        print(f"{t/2**30:9.1f}GB x{m:6.0f} each={b/2**20:8.1f}MB "
+              f"{cn:30s} {sig}\n{'':22s}{meta}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) — 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips across 2 pods.
+
+The `pod` axis is the cross-DCI axis: batch parallelism only, gradients
+all-reduced across it (optionally int8-compressed — optim/compress.py).
+`model` is the intra-pod ICI axis carrying TP/EP collectives. This mirrors
+the paper's topology: pod == cluster, DCI == oversubscribed cross-cluster
+links, and the EC checkpoint layer's local groups align with pods.
+
+Functions, not module constants: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices exist (CPU smoke / examples)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

@@ -1,0 +1,111 @@
+"""Abstract input/state specs + shardings for lowering each cell.
+
+Everything here is ShapeDtypeStruct-level: no device allocation. This is
+the single source of truth the dry-run, the roofline extractor, and the
+launcher share.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.model import abstract_params, init_cache
+from repro.models.partitioning import (batch_axes, cache_shardings,
+                                       input_sharding_for, param_shardings)
+from repro.train.step import TrainState, init_train_state
+
+from .shapes import ShapeSpec
+
+
+def abstract_train_state(cfg: ModelConfig) -> TrainState:
+    return jax.eval_shape(
+        functools.partial(init_train_state, cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def train_state_shardings(state: TrainState, mesh: Mesh) -> TrainState:
+    """Optimizer mirrors param sharding (ZeRO-style: the fp32 master/m/v
+    inherit the 2D (data, model) layout TP+FSDP give the params)."""
+    psh = param_shardings(state.params, mesh)
+    rep = NamedSharding(mesh, P())
+    opt = {
+        "master": psh, "m": psh, "v": psh,
+        "step": rep,
+    }
+    return TrainState(params=psh, opt=opt, step=rep)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def token_inputs(cfg: ModelConfig, B: int, S: int) -> Any:
+    """ShapeDtypeStruct for the model input (tokens or stub embeddings)."""
+    if cfg.embed_inputs:
+        return jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+
+
+def vision_inputs(cfg: ModelConfig, B: int) -> Optional[jax.ShapeDtypeStruct]:
+    if cfg.family != "vlm":
+        return None
+    return jax.ShapeDtypeStruct((B, cfg.vision_seq, cfg.d_model),
+                                jnp.bfloat16)
+
+
+def cell_args(cfg: ModelConfig, spec: ShapeSpec, mesh: Mesh):
+    """-> (kind, args, in_shardings, donate) for the cell's step function.
+
+    kind 'train':   train_step(state, tokens, labels[, vision])
+    kind 'prefill': serve_prefill(params, tokens[, vision])
+    kind 'encode':  encode_step(params, embeds)  (encoder-only prefill)
+    kind 'decode':  serve_decode(params, token, cache, pos)
+    """
+    B, S = spec.global_batch, spec.seq_len
+    rep = replicated(mesh)
+    ish = lambda sds: input_sharding_for(mesh, sds.shape)
+
+    if spec.kind == "train":
+        state = abstract_train_state(cfg)
+        st_sh = train_state_shardings(state, mesh)
+        tokens = token_inputs(cfg, B, S)
+        labels = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        args = [state, tokens, labels]
+        shards = [st_sh, ish(tokens), ish(labels)]
+        vis = vision_inputs(cfg, B)
+        if vis is not None:
+            args.append(vis)
+            shards.append(ish(vis))
+        return "train", tuple(args), tuple(shards), (0,)
+
+    if spec.kind == "prefill":
+        params = abstract_params(cfg)
+        psh = param_shardings(params, mesh)
+        tokens = token_inputs(cfg, B, S)
+        if not cfg.has_decode:
+            return "encode", (params, tokens), (psh, ish(tokens)), ()
+        args = [params, tokens]
+        shards = [psh, ish(tokens)]
+        vis = vision_inputs(cfg, B)
+        if vis is not None:
+            args.append(vis)
+            shards.append(ish(vis))
+        return "prefill", tuple(args), tuple(shards), ()
+
+    if spec.kind == "decode":
+        params = abstract_params(cfg)
+        psh = param_shardings(params, mesh)
+        token = token_inputs(cfg, B, 1)
+        cache = init_cache(cfg, B, S, abstract=True)
+        csh = cache_shardings(cache, mesh)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        args = (params, token, cache, pos)
+        shards = (psh, ish(token), csh, rep)
+        return "decode", args, shards, (2,)
+
+    raise ValueError(spec.kind)

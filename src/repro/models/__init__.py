@@ -1,0 +1,7 @@
+"""Model substrate: configs, blocks, assembly, partitioning."""
+from .config import MLAConfig, ModelConfig, MoEConfig, Segment, uniform_segments
+from .model import abstract_params, forward, init_cache, init_params
+
+__all__ = ["MLAConfig", "ModelConfig", "MoEConfig", "Segment",
+           "uniform_segments", "abstract_params", "forward", "init_cache",
+           "init_params"]

@@ -1,0 +1,1036 @@
+"""Neural blocks for all architecture families, in functional JAX.
+
+Every block is a pure function  (params, x, ctx) -> (y, new_cache)  usable
+under lax.scan with stacked params. Activations are bf16, statistics
+(softmax, recurrences) accumulate in fp32.
+
+Attention is flash-style (blockwise, O(S) memory) — materialising a
+32k x 32k score matrix is not an option at the assigned shapes. Two
+schedules are provided (see DESIGN/EXPERIMENTS §Perf):
+  * masked:  scan over all KV chunks with a causal mask (baseline — wastes
+             ~2x FLOPs on masked-out blocks, visible in cost_analysis);
+  * bounded: fori_loop with a data-dependent upper bound per Q chunk
+             (the hillclimbed schedule).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import MLAConfig, ModelConfig, MoEConfig, _rg_width
+
+Params = Any
+DEFAULT_ATTN_SCHEDULE = "bounded"
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    """Per-call context threaded through blocks."""
+    cfg: ModelConfig
+    mode: str                 # "train" | "prefill" | "decode"
+    pos: Optional[jax.Array]  # scalar int32: cache fill position (decode)
+    vision: Optional[jax.Array] = None  # (B, Sv, D) stub embeddings (vlm)
+    attn_schedule: str = DEFAULT_ATTN_SCHEDULE
+    mesh: Optional[Any] = None  # jax Mesh: activation sharding constraints
+    seq_parallel: bool = False  # shard S of the residual stream over model
+
+
+def cst(x: jax.Array, mesh, *spec) -> jax.Array:
+    """Activation sharding constraint (Megatron pattern).
+
+    Without these, XLA's SPMD propagation is free to resolve the
+    FSDP-weight-vs-batch-activation conflict by REPLICATING the batch dim —
+    measured: llama3b train_4k residuals at B=256 global instead of B=16
+    per device, 726 GB/device temp (EXPERIMENTS.md §Perf iteration 1).
+
+    spec entries: "B" -> the batch axes ("pod","data" when present),
+    an axis name, or None. Axes that don't divide the dim are dropped
+    (keeps smoke configs valid on 1-device meshes).
+    """
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ba = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    fixed = []
+    for dim, ax in zip(x.shape, spec):
+        if ax == "B":
+            ax = ba
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = tuple(a for a in (ax if isinstance(ax, tuple) else (ax,))
+                     if a in mesh.axis_names)
+        if not axes:
+            fixed.append(None)
+            continue
+        ax = axes if len(axes) > 1 else axes[0]
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        fixed.append(ax if dim % size == 0 and dim >= size else None)
+    fixed += [None] * (x.ndim - len(fixed))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    h = x.astype(jnp.float32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    return (h * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def _rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, hd); positions: (S,) or scalar broadcastable."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(_rope_freqs(hd, theta), dtype=jnp.float32)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (S, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return rot.astype(x.dtype)
+
+
+def swiglu(params: Params, x: jax.Array, mesh=None) -> jax.Array:
+    gate = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    up = jnp.einsum("...d,df->...f", x, params["w_up"])
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    act = cst(act, mesh, "B", None, "model")
+    # pin the down-projection output to (B@data, ., D unsharded): without
+    # this XLA keeps D sharded over `data` (the FSDP storage layout of
+    # w_down) and re-gathers the 1.8 GB residual per consumer instead of
+    # gathering the 100 MB weight (kimi: 18 x-gathers/layer, §Perf it. 7)
+    return cst(jnp.einsum("...f,fd->...d", act, params["w_down"]),
+               mesh, "B", None, None)
+
+
+def init_swiglu(key, d: int, f: int, dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    return {
+        "w_gate": (jax.random.normal(k1, (d, f)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d, f)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (f, d)) * s_out).astype(dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (blockwise, GQA-aware)
+# ---------------------------------------------------------------------------
+
+
+def _shard_attn_heads(mesh, q, k, v):
+    """Pin the attention-internal sharding (B, H, S, hd).
+
+    Without this, the SPMD partitioner is free to shard the *contraction*
+    dim hd over `model` when H doesn't divide it — measured on llama3-3b
+    train_4k: a 384 MB f32 all-reduce of every (qc, kc) score block, 448
+    instances, 336 GB/device of the 506 GB collective total. And letting
+    it shard batch over ALL axes replicates the score blocks instead
+    (measured 37 TB/device of all-gathers — §Perf iteration 4, refuted).
+
+    Preference order (cst drops axes that don't divide, falling through
+    per-tensor):
+      1. heads over `model` (classic TP attention; GQA k/v with
+         Hkv < model fall through to replicated, which is collective-free),
+      2. batch-only (model axis idle in attention — the ghost-head
+         padding in init_attention makes this branch unreachable for the
+         production configs; a q-sequence-sharded variant was measured
+         WORSE: the per-chunk dynamic-slice on a sharded Sq all-gathers
+         the full q tensor 448x — §Perf iteration 5, refuted).
+    """
+    if mesh is None:
+        return q, k, v
+    model = mesh.shape.get("model", 1)
+    B, H, S, _ = q.shape
+    if H % model == 0:
+        q = cst(q, mesh, "B", "model", None, None)
+        k = cst(k, mesh, "B", "model", None, None)
+        v = cst(v, mesh, "B", "model", None, None)
+    else:
+        q = cst(q, mesh, "B", None, None, None)
+        k = cst(k, mesh, "B", None, None, None)
+        v = cst(v, mesh, "B", None, None, None)
+    return q, k, v
+
+def _chunk(size: int, target: int = 1024) -> int:
+    c = min(size, target)
+    while size % c:
+        c -= 1
+    return c
+
+
+def flash_attention(q, k, v, *, causal: bool, window: int = 0,
+                    q_offset: int = 0,
+                    schedule: str = DEFAULT_ATTN_SCHEDULE):
+    """q: (B, Hq, Sq, dk), k: (B, Hkv, Skv, dk), v: (B, Hkv, Skv, dv).
+    GQA via head grouping. Returns (B, Hq, Sq, dv).
+
+    Exact blockwise forward AND backward (custom VJP): the backward pass
+    recomputes score blocks from (q, k, v, lse) FlashAttention-2 style, so
+    no O(Sq·Skv) tensor is ever saved — without this, lax.scan's backward
+    residuals materialise every p-block and the train-shape memory roofline
+    explodes (measured 6.2 TB/device for llama3-3b train_4k; see
+    EXPERIMENTS.md §Perf).
+
+    q_offset: global position of q[.., 0, :] (prefill continuation).
+    window > 0: keys restricted to (q_pos - window, q_pos].
+    """
+    fn = _flash_fn(bool(causal), int(window), int(q_offset), schedule)
+    return fn(q, k, v)
+
+
+def _mask_for(q_pos, k_pos, causal: bool, window: int):
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    return mask
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_offset, schedule):
+    """Returns (out (B,Hkv,G,Sq,dv) in q.dtype, lse (B,Hkv,G,Sq) f32)."""
+    B, Hq, Sq, dk = q.shape
+    Hkv, Skv, dv = k.shape[1], k.shape[2], v.shape[-1]
+    G = Hq // Hkv
+    scale = dk ** -0.5
+    qc, kc = _chunk(Sq), _chunk(Skv)
+    nq, nk = Sq // qc, Skv // kc
+    qg = q.reshape(B, Hkv, G, Sq, dk)
+
+    def q_block(qi, qx):
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            ks = jax.lax.dynamic_slice_in_dim(k, ki * kc, kc, axis=2)
+            vs = jax.lax.dynamic_slice_in_dim(v, ki * kc, kc, axis=2)
+            k_pos = ki * kc + jnp.arange(kc)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qx, ks,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _mask_for(q_pos, k_pos, causal, window)
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), vs,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, qc), -jnp.inf, dtype=jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qc), dtype=jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qc, dv), dtype=jnp.float32)
+
+        if schedule == "bounded" and causal and not window:
+            # only kv chunks that intersect the causal triangle
+            hi = jnp.minimum((q_offset + (qi + 1) * qc + kc - 1) // kc, nk)
+            (m, l, acc), _ = jax.lax.scan(
+                lambda c, ki: jax.lax.cond(
+                    ki < hi, lambda: kv_step(c, ki), lambda: (c, None)),
+                (m0, l0, a0), jnp.arange(nk))
+        else:
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                          jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = jnp.where(l > 0,
+                        jnp.where(jnp.isfinite(m), m, 0.0) + jnp.log(
+                            jnp.maximum(l, 1e-30)),
+                        -jnp.inf)
+        return out.astype(q.dtype), lse
+
+    if nq == 1:
+        out, lse = q_block(0, qg)
+    else:
+        outs, lses = jax.lax.map(
+            lambda i: q_block(i, jax.lax.dynamic_slice_in_dim(
+                qg, i * qc, qc, axis=3)), jnp.arange(nq))
+        out = jnp.moveaxis(outs, 0, 3).reshape(B, Hkv, G, Sq, dv)
+        lse = jnp.moveaxis(lses, 0, 3).reshape(B, Hkv, G, Sq)
+    return out, lse
+
+
+def _flash_bwd_impl(q, k, v, out, lse, dout, causal, window, q_offset,
+                    schedule):
+    """FlashAttention-2 backward: recompute p-blocks from (q, k, lse).
+
+    Outer scan over kv chunks (slices dk/dv into their accumulators);
+    inner scan over q chunks accumulates the kv chunk's (dk_j, dv_j) and
+    emits the dq contribution. Everything accumulates in f32; O(S·d) live
+    memory. The bounded schedule skips (qi, ki) pairs outside the causal
+    triangle — same ~2x FLOP saving as the forward.
+    """
+    B, Hq, Sq, dk_dim = q.shape
+    Hkv, Skv, dv = k.shape[1], k.shape[2], v.shape[-1]
+    G = Hq // Hkv
+    scale = dk_dim ** -0.5
+    qc, kc = _chunk(Sq), _chunk(Skv)
+    nq, nk = Sq // qc, Skv // kc
+
+    qg = q.reshape(B, Hkv, G, Sq, dk_dim)
+    og = out.reshape(B, Hkv, G, Sq, dv)
+    dog = dout.reshape(B, Hkv, G, Sq, dv)
+    # D_i = rowsum(dO_i * O_i)  (B, Hkv, G, Sq)
+    Dvec = jnp.sum(dog.astype(jnp.float32) * og.astype(jnp.float32), axis=-1)
+    lse_safe = jnp.where(jnp.isfinite(lse), lse, 0.0)
+
+    def kv_outer(dq_acc, ki):
+        ks = jax.lax.dynamic_slice_in_dim(k, ki * kc, kc, axis=2)
+        vs = jax.lax.dynamic_slice_in_dim(v, ki * kc, kc, axis=2)
+        k_pos = ki * kc + jnp.arange(kc)
+
+        def q_inner(carry, qi):
+            dkj, dvj = carry
+            qx = jax.lax.dynamic_slice_in_dim(qg, qi * qc, qc, axis=3)
+            do = jax.lax.dynamic_slice_in_dim(dog, qi * qc, qc, axis=3)
+            lse_c = jax.lax.dynamic_slice_in_dim(lse_safe, qi * qc, qc,
+                                                 axis=3)
+            D_c = jax.lax.dynamic_slice_in_dim(Dvec, qi * qc, qc, axis=3)
+            q_pos = q_offset + qi * qc + jnp.arange(qc)
+
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qx, ks,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _mask_for(q_pos, k_pos, causal, window)
+            p = jnp.where(mask[None, None, None],
+                          jnp.exp(s - lse_c[..., None]), 0.0)
+            # dv_j += p^T dO ; sum over q positions and G heads
+            # p/ds leave their producing fusions through HBM on the way
+            # into the MXU dots: emit them in the io dtype (bf16 for the
+            # production configs) — f32 score blocks were ~1.4 TB/device
+            # of HBM traffic at train_4k (§Perf iteration 6)
+            io_t = q.dtype
+            dvj = dvj + jnp.einsum("bhgqk,bhgqd->bhkd", p.astype(io_t), do,
+                                   preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", do, vs,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - D_c[..., None])          # (B,Hkv,G,qc,kc) f32
+            ds = ds.astype(io_t)
+            dq_c = jnp.einsum("bhgqk,bhkd->bhgqd", ds, ks,
+                              preferred_element_type=jnp.float32) * scale
+            dkj = dkj + jnp.einsum("bhgqk,bhgqd->bhkd", ds, qx,
+                                   preferred_element_type=jnp.float32) * scale
+            return (dkj, dvj), dq_c
+
+        dkj0 = jnp.zeros((B, Hkv, kc, dk_dim), jnp.float32)
+        dvj0 = jnp.zeros((B, Hkv, kc, dv), jnp.float32)
+
+        if schedule == "bounded" and causal and not window:
+            # q chunks at or after this kv chunk's causal start
+            lo = jnp.maximum((ki * kc - q_offset) // qc, 0)
+
+            def guarded(carry, qi):
+                return jax.lax.cond(
+                    qi >= lo, lambda: q_inner(carry, qi),
+                    lambda: (carry, jnp.zeros(
+                        (B, Hkv, G, qc, dk_dim), jnp.float32)))
+            (dkj, dvj), dq_chunks = jax.lax.scan(
+                guarded, (dkj0, dvj0), jnp.arange(nq))
+        else:
+            (dkj, dvj), dq_chunks = jax.lax.scan(
+                q_inner, (dkj0, dvj0), jnp.arange(nq))
+        # dq_chunks: (nq, B, Hkv, G, qc, dk) -> (B, Hkv, G, Sq, dk)
+        dq_contrib = jnp.moveaxis(dq_chunks, 0, 3).reshape(
+            B, Hkv, G, Sq, dk_dim)
+        return dq_acc + dq_contrib, (dkj, dvj)
+
+    dq0 = jnp.zeros((B, Hkv, G, Sq, dk_dim), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(kv_outer, dq0, jnp.arange(nk))
+    # dks: (nk, B, Hkv, kc, dk) -> (B, Hkv, Skv, dk)
+    dkf = jnp.moveaxis(dks, 0, 2).reshape(B, Hkv, Skv, dk_dim)
+    dvf = jnp.moveaxis(dvs, 0, 2).reshape(B, Hkv, Skv, dv)
+    return (dq.reshape(B, Hq, Sq, dk_dim).astype(q.dtype),
+            dkf.astype(k.dtype), dvf.astype(v.dtype))
+
+
+def _use_pallas_flash(q, k, q_offset: int) -> bool:
+    """The Pallas kernel runs the fwd on real TPUs when shapes are
+    tile-aligned; CPU (this container) keeps the jnp path — interpret
+    mode is for kernel tests, not the training hot loop."""
+    try:
+        on_tpu = jax.devices()[0].platform == "tpu"
+    except RuntimeError:
+        on_tpu = False
+    dk_ok = q.shape[-1] % 128 == 0
+    s_ok = q.shape[2] % 128 == 0 and k.shape[2] % 128 == 0
+    return on_tpu and dk_ok and s_ok and q_offset == 0
+
+
+def _pallas_fwd(q, k, v, causal, window):
+    from repro.kernels.flash_attention import flash_attention_fwd
+    out, lse = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   interpret=False)
+    B, Hq, Sq, dv = out.shape
+    Hkv = k.shape[1]
+    return (out.reshape(B, Hkv, Hq // Hkv, Sq, dv),
+            lse.reshape(B, Hkv, Hq // Hkv, Sq))
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_fn(causal: bool, window: int, q_offset: int, schedule: str):
+    def fwd_impl(q, k, v):
+        if _use_pallas_flash(q, k, q_offset):
+            return _pallas_fwd(q, k, v, causal, window)
+        return _flash_fwd_impl(q, k, v, causal, window, q_offset, schedule)
+
+    @jax.custom_vjp
+    def f(q, k, v):
+        out, _ = fwd_impl(q, k, v)
+        B, Hkv, G, Sq, dv = out.shape
+        return out.reshape(B, Hkv * G, Sq, dv)
+
+    def fwd(q, k, v):
+        out, lse = fwd_impl(q, k, v)
+        B, Hkv, G, Sq, dv = out.shape
+        return out.reshape(B, Hkv * G, Sq, dv), (q, k, v,
+                                                 out.reshape(B, Hkv * G, Sq,
+                                                             dv), lse)
+
+    def bwd(res, dout):
+        q, k, v, out, lse = res
+        return _flash_bwd_impl(q, k, v, out, lse, dout, causal, window,
+                               q_offset, schedule)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0):
+    """Single-token attention against a cache.
+    q: (B, Hq, 1, dk); caches: (B, Hkv, S_max, d*); pos: scalar (new token
+    already written at index pos)."""
+    B, Hq, _, dk = q.shape
+    Hkv, S_max = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, 1, dk)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * dk ** -0.5
+    k_pos = jnp.arange(S_max)
+    mask = k_pos <= pos
+    if window:
+        mask &= k_pos > pos - window
+    s = jnp.where(mask[None, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Hq, 1, v_cache.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA self-attention block (attn / local_attn / attn_moe share this)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    """Ghost-head padding (cfg.tp_pad_heads): physical head counts are
+    padded to the TP width; ghost wq columns and wo rows are ZERO, so the
+    module output equals the unpadded module exactly (ghost q heads see
+    q=0 -> uniform attention -> multiplied by zero wo rows; ghost kv
+    heads only serve ghost q heads)."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    hqp, hkvp = cfg.num_heads_padded, cfg.num_kv_heads_padded
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+
+    def padded(key, rows, cols_live, cols_phys, scale):
+        w = jnp.zeros((rows, cols_phys), dtype)
+        live = (jax.random.normal(key, (rows, cols_live)) * scale).astype(dtype)
+        return w.at[:, :cols_live].set(live)
+
+    wo = jnp.zeros((hqp * hd, d), dtype)
+    wo = wo.at[:hq * hd, :].set(
+        (jax.random.normal(ks[3], (hq * hd, d)) * (hq * hd) ** -0.5
+         ).astype(dtype))
+    p = {
+        "wq": padded(ks[0], d, hq * hd, hqp * hd, s),
+        "wk": padded(ks[1], d, hkv * hd, hkvp * hd, s),
+        "wv": padded(ks[2], d, hkv * hd, hkvp * hd, s),
+        "wo": wo,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hqp * hd,), dtype)
+        p["bk"] = jnp.zeros((hkvp * hd,), dtype)
+        p["bv"] = jnp.zeros((hkvp * hd,), dtype)
+    return p
+
+
+def attention_block(params: Params, x: jax.Array, ctx: Ctx,
+                    cache: Optional[Params], *, window: int = 0):
+    """x: (B, S, D). Returns (attn_out, new_cache)."""
+    cfg = ctx.cfg
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads_padded, cfg.num_kv_heads_padded
+
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = cst(q, ctx.mesh, "B", None, "model")
+    k = cst(k, ctx.mesh, "B", None, "model")
+    v = cst(v, ctx.mesh, "B", None, "model")
+    q = q.reshape(B, S, hq, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, hkv, hd).transpose(0, 2, 1, 3)
+    q, k, v = _shard_attn_heads(ctx.mesh, q, k, v)
+
+    if ctx.mode == "decode":
+        pos = ctx.pos
+        q = apply_rope(q, pos[None], cfg.rope_theta)
+        k = apply_rope(k, pos[None], cfg.rope_theta)
+        if window:
+            slot = pos % window
+        else:
+            slot = pos
+        k_cache = _write_cache(cache["k"], k, slot)
+        v_cache = _write_cache(cache["v"], v, slot)
+        if window:
+            # rotated window cache: positions are implicit; compare by age
+            out = _decode_window(q, k_cache, v_cache, pos, window)
+        else:
+            out = decode_attention(q, k_cache, v_cache, pos)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        positions = jnp.arange(S)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        out = flash_attention(q, k, v, causal=cfg.causal, window=window,
+                              schedule=ctx.attn_schedule)
+        if ctx.mode == "prefill":
+            if window:
+                keep = min(window, S)
+                new_cache = {"k": _roll_tail(k, keep, window),
+                             "v": _roll_tail(v, keep, window)}
+            else:
+                new_cache = {"k": k, "v": v}
+        else:
+            new_cache = None
+
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, hq * hd)
+    out = cst(out, ctx.mesh, "B", None, "model")
+    proj = cst(jnp.einsum("bsh,hd->bsd", out, params["wo"]),
+               ctx.mesh, "B", None, None)
+    return proj, new_cache
+
+
+def _write_cache(cache_arr, new, slot):
+    """cache: (B, H, S_max, hd); new: (B, H, 1, hd); slot scalar."""
+    return jax.lax.dynamic_update_slice(
+        cache_arr, new.astype(cache_arr.dtype), (0, 0, slot, 0))
+
+
+def _roll_tail(kv, keep: int, window: int):
+    """Arrange the last `keep` entries into a rotating window cache of size
+    `window` such that index (pos % window) addressing stays consistent."""
+    B, H, S, hd = kv.shape
+    tail = kv[:, :, S - keep:, :]
+    if keep < window:
+        pad = jnp.zeros((B, H, window - keep, hd), kv.dtype)
+        tail = jnp.concatenate([tail, pad], axis=2)
+    # global position of tail[j] is S - keep + j; its slot is (pos % window)
+    shift = (S - keep) % window
+    return jnp.roll(tail, shift=shift, axis=2)
+
+
+def _decode_window(q, k_cache, v_cache, pos, window):
+    """Window cache with rotating slots: slot j holds global position
+    p_j where p_j % window == j and p_j <= pos, p_j > pos - window."""
+    B, Hq, _, dk = q.shape
+    Hkv = k_cache.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, 1, dk)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * dk ** -0.5
+    j = jnp.arange(window)
+    # age of slot j relative to pos
+    age = (pos % window - j) % window
+    valid = age <= jnp.minimum(pos, window - 1)
+    s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Hq, 1, v_cache.shape[-1]).astype(q.dtype)
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (MiniCPM3 / DeepSeek style, absorbed form)
+# ---------------------------------------------------------------------------
+#
+# After absorbing W_uk into the query and deferring W_uv to the output, MLA
+# is exactly MQA with one 288-wide key head (256 latent + 32 rope) and one
+# 256-wide value head — so it reuses the flash path, and the decode cache
+# stores only the latent (a 9x cache reduction vs GQA at these dims).
+
+def init_mla(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    c, d, H = cfg.mla, cfg.d_model, cfg.num_heads
+    Hp = cfg.num_heads_padded            # ghost heads: zero w_uq/wo slices
+    qk_head = c.qk_nope_head_dim + c.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    w_uq = jnp.zeros((c.q_lora_rank, Hp * qk_head), dtype)
+    w_uq = w_uq.at[:, :H * qk_head].set(
+        (jax.random.normal(ks[1], (c.q_lora_rank, H * qk_head))
+         * c.q_lora_rank ** -0.5).astype(dtype))
+    w_uk = jnp.zeros((Hp, c.qk_nope_head_dim, c.kv_lora_rank), dtype)
+    w_uk = w_uk.at[:H].set(
+        (jax.random.normal(ks[3], (H, c.qk_nope_head_dim, c.kv_lora_rank))
+         * c.qk_nope_head_dim ** -0.5).astype(dtype))
+    w_uv = jnp.zeros((Hp, c.kv_lora_rank, c.v_head_dim), dtype)
+    w_uv = w_uv.at[:H].set(
+        (jax.random.normal(ks[4], (H, c.kv_lora_rank, c.v_head_dim))
+         * c.kv_lora_rank ** -0.5).astype(dtype))
+    wo = jnp.zeros((Hp * c.v_head_dim, d), dtype)
+    wo = wo.at[:H * c.v_head_dim].set(
+        (jax.random.normal(ks[5], (H * c.v_head_dim, d))
+         * (H * c.v_head_dim) ** -0.5).astype(dtype))
+    return {
+        "w_dq": (jax.random.normal(ks[0], (d, c.q_lora_rank)) * s).astype(dtype),
+        "q_norm": jnp.ones((c.q_lora_rank,), dtype),
+        "w_uq": w_uq,
+        "w_dkv": (jax.random.normal(ks[2], (d, c.kv_lora_rank + c.qk_rope_head_dim))
+                  * s).astype(dtype),
+        "kv_norm": jnp.ones((c.kv_lora_rank,), dtype),
+        "w_uk": w_uk,
+        "w_uv": w_uv,
+        "wo": wo,
+    }
+
+
+def mla_block(params: Params, x: jax.Array, ctx: Ctx, cache):
+    cfg = ctx.cfg
+    c = cfg.mla
+    B, S, D = x.shape
+    H = cfg.num_heads_padded
+    qk_head = c.qk_nope_head_dim + c.qk_rope_head_dim
+
+    ql = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["w_dq"]),
+                  params["q_norm"], cfg.rms_eps)
+    q = jnp.einsum("bsr,rh->bsh", ql, params["w_uq"]).reshape(B, S, H, qk_head)
+    q_nope = q[..., :c.qk_nope_head_dim]
+    q_rope = q[..., c.qk_nope_head_dim:]
+
+    dkv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    ckv = rms_norm(dkv[..., :c.kv_lora_rank], params["kv_norm"], cfg.rms_eps)
+    k_rope = dkv[..., c.kv_lora_rank:]                    # (B, S, rope)
+
+    # absorb W_uk: q_lat (B, S, H, kv_lora)
+    q_lat = jnp.einsum("bshn,hnr->bshr", q_nope, params["w_uk"])
+
+    if ctx.mode == "decode":
+        pos = ctx.pos
+        q_rope = apply_rope(q_rope.transpose(0, 2, 1, 3), pos[None],
+                            cfg.rope_theta).transpose(0, 2, 1, 3)
+        k_rope = apply_rope(k_rope[:, None], pos[None],
+                            cfg.rope_theta)[:, 0]
+        ckv_cache = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0))
+        kr_cache = jax.lax.dynamic_update_slice(
+            cache["kr"], k_rope.astype(cache["kr"].dtype), (0, pos, 0))
+        qf = jnp.concatenate([q_lat, q_rope], -1).transpose(0, 2, 1, 3)
+        kf = jnp.concatenate([ckv_cache, kr_cache], -1)[:, None]
+        vf = ckv_cache[:, None]
+        # scale uses the *per-head* qk dim, not the latent width
+        out = decode_attention(qf * (qk_head ** -0.5) * (qf.shape[-1] ** 0.5),
+                               kf, vf, pos)
+        new_cache = {"ckv": ckv_cache, "kr": kr_cache}
+        out = out.transpose(0, 2, 1, 3)                   # (B, 1, H, kv_lora)
+    else:
+        positions = jnp.arange(S)
+        q_rope = apply_rope(q_rope.transpose(0, 2, 1, 3), positions,
+                            cfg.rope_theta).transpose(0, 2, 1, 3)
+        k_rope = apply_rope(k_rope[:, None], positions, cfg.rope_theta)[:, 0]
+        qf = jnp.concatenate([q_lat, q_rope], -1).transpose(0, 2, 1, 3)
+        kf = jnp.concatenate([ckv, k_rope], -1)[:, None]  # (B, 1, S, 288)
+        vf = ckv[:, None]
+        qf, kf, vf = _shard_attn_heads(ctx.mesh, qf, kf, vf)
+        out = flash_attention(qf * (qk_head ** -0.5) * (qf.shape[-1] ** 0.5),
+                              kf, vf, causal=cfg.causal,
+                              schedule=ctx.attn_schedule)
+        out = out.transpose(0, 2, 1, 3)
+        new_cache = ({"ckv": ckv, "kr": k_rope} if ctx.mode == "prefill"
+                     else None)
+
+    o = jnp.einsum("bshr,hrv->bshv", out, params["w_uv"])
+    o = o.reshape(B, S if ctx.mode != "decode" else 1, H * c.v_head_dim)
+    o = cst(o, ctx.mesh, "B", None, "model")
+    proj = cst(jnp.einsum("bsh,hd->bsd", o, params["wo"]),
+               ctx.mesh, "B", None, None)
+    return proj, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN — token-choice top-k routing, per-(batch-row, expert) capacity,
+# gather/scatter dispatch (EP: experts sharded over the model axis).
+# ---------------------------------------------------------------------------
+
+def moe_capacity(m: MoEConfig, tokens_per_row: int) -> int:
+    c = int(math.ceil(tokens_per_row * m.num_experts_per_tok
+                      / m.num_experts * m.capacity_factor))
+    c = max(8, (c + 7) // 8 * 8)
+    return min(c, tokens_per_row)
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    m, d = cfg.moe, cfg.d_model
+    ks = jax.random.split(key, 5)
+    s = d ** -0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d, m.num_experts)) * s
+                   ).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (m.num_experts, d, m.d_ff_expert))
+                   * s).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (m.num_experts, d, m.d_ff_expert))
+                 * s).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (m.num_experts, m.d_ff_expert, d))
+                   * m.d_ff_expert ** -0.5).astype(dtype),
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_swiglu(ks[4], d, m.d_ff_shared * m.num_shared_experts,
+                                  dtype)
+    return p
+
+
+def moe_ffn(params: Params, x: jax.Array, cfg: ModelConfig, mesh=None):
+    """x: (B, S, D) -> (B, S, D). Per-batch-row capacity keeps the dispatch
+    local to the data shard; expert compute is sharded over `model` (EP)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = m.num_experts, m.num_experts_per_tok
+    C = moe_capacity(m, S)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, K)                  # (B, S, K)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    # mask of chosen (B, S, E) with renormalised weight
+    chosen = jnp.zeros((B, S, E), jnp.float32)
+    chosen = jax.vmap(jax.vmap(lambda c, i, v: c.at[i].set(v)))(chosen, topi, topv)
+
+    # per (row, expert): top-C tokens by routing weight
+    score = jnp.where(chosen > 0, chosen, -1.0)           # (B, S, E)
+    se = score.transpose(0, 2, 1)                         # (B, E, S)
+    gate_c, idx_c = jax.lax.top_k(se, C)                  # (B, E, C)
+    keep = gate_c > 0
+    w_c = jnp.where(keep, gate_c, 0.0)                    # combine weights
+
+    xe = jnp.take_along_axis(x[:, None], idx_c[..., None], axis=2)  # (B,E,C,D)
+    xe = cst(xe, mesh, "B", "model", None, None)
+    gate = jnp.einsum("becd,edf->becf", xe, params["w_gate"])
+    up = jnp.einsum("becd,edf->becf", xe, params["w_up"])
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    act = cst(act, mesh, "B", "model", None, None)
+    ye = jnp.einsum("becf,efd->becd", act, params["w_down"])
+    ye = cst(ye, mesh, "B", "model", None, None)
+    ye = ye * w_c[..., None].astype(ye.dtype)
+
+    out = jnp.zeros((B, S, D), ye.dtype)
+    out = jax.vmap(lambda o, i, v: o.at[i.reshape(-1)].add(
+        v.reshape(-1, D)))(out, idx_c, ye)
+
+    out = cst(out, mesh, "B", None, None)
+    if m.num_shared_experts:
+        out = out + swiglu(params["shared"], x, mesh)
+
+    aux = _load_balance_loss(probs, chosen, E, K)
+    return out, aux
+
+
+def _load_balance_loss(probs, chosen, E, K):
+    """Switch-style aux loss: E * sum_e f_e * p_e."""
+    f = (chosen > 0).astype(jnp.float32).mean(axis=(0, 1)) / K
+    p = probs.mean(axis=(0, 1))
+    return E * jnp.sum(f * p)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (RecurrentGemma / Griffin)
+# ---------------------------------------------------------------------------
+
+def init_rg(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d = cfg.d_model
+    dr = _rg_width(d)
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    # Lambda init so a = sigmoid(L)^(c r) starts near 0.9..0.999
+    lam = jnp.log(jnp.expm1(jnp.linspace(3.0, 8.0, dr)))   # softplus^-1
+    return {
+        "w_x": (jax.random.normal(ks[0], (d, dr)) * s).astype(dtype),
+        "w_gate": (jax.random.normal(ks[1], (d, dr)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (4, dr)) * 0.5).astype(dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_rg": (jax.random.normal(ks[3], (dr, dr)) * dr ** -0.5).astype(dtype),
+        "w_ig": (jax.random.normal(ks[4], (dr, dr)) * dr ** -0.5).astype(dtype),
+        "lam": lam.astype(jnp.float32),
+        "w_out": (jax.random.normal(ks[5], (dr, d)) * dr ** -0.5).astype(dtype),
+    }
+
+
+def _rg_ab(params, u):
+    """Per-step decay a_t and input term b_t (fp32). u: (..., dr)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["w_rg"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ params["w_ig"].astype(jnp.float32))
+    log_a = -8.0 * r * jax.nn.softplus(params["lam"])     # c = 8
+    a = jnp.exp(log_a)
+    gated = i * uf
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    return a, b
+
+
+def rg_block(params: Params, x: jax.Array, ctx: Ctx, cache):
+    """Griffin recurrent block: in-proj -> causal conv4 -> RG-LRU -> gate."""
+    B, S, D = x.shape
+    u = cst(jnp.einsum("bsd,dr->bsr", x, params["w_x"]),
+            ctx.mesh, "B", None, "model")
+    g = cst(jnp.einsum("bsd,dr->bsr", x, params["w_gate"]),
+            ctx.mesh, "B", None, "model")
+
+    if ctx.mode == "decode":
+        conv_hist = cache["conv"]                          # (B, 3, dr)
+        window = jnp.concatenate([conv_hist, u], axis=1)   # (B, 4, dr)
+        cu = jnp.einsum("btr,tr->br", window, params["conv_w"])[:, None]
+        cu = cu + params["conv_b"]
+        a, b = _rg_ab(params, cu[:, 0])
+        h = a * cache["state"] + b                         # (B, dr)
+        new_cache = {"state": h, "conv": window[:, 1:]}
+        h = h[:, None]
+    else:
+        # causal conv width 4 via shifted adds
+        pads = [jnp.pad(u, ((0, 0), (3 - j, 0), (0, 0)))[:, :S] for j in range(4)]
+        cu = sum(params["conv_w"][j] * pads[j] for j in range(4)) + params["conv_b"]
+        a, b = _rg_ab(params, cu)                          # (B, S, dr) fp32
+        def combine(x1, x2):
+            a1, b1 = x1
+            a2, b2 = x2
+            return a1 * a2, a2 * b1 + b2
+        a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        new_cache = ({"state": h[:, -1], "conv": u[:, -3:].astype(jnp.bfloat16)}
+                     if ctx.mode == "prefill" else None)
+
+    out = h.astype(x.dtype) * jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype)
+    proj = cst(jnp.einsum("bsr,rd->bsd", out, params["w_out"]),
+               ctx.mesh, "B", None, None)
+    return proj, new_cache
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch): time-mix with data-dependent decay + channel-mix.
+# Chunked linear-attention formulation (TPU-friendly matmuls; exact).
+# ---------------------------------------------------------------------------
+
+def init_rwkv(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    return {
+        "mu": (jax.random.uniform(ks[0], (5, d))).astype(dtype),  # r,k,v,w,g
+        "w_r": (jax.random.normal(ks[1], (d, d)) * s).astype(dtype),
+        "w_k": (jax.random.normal(ks[2], (d, d)) * s).astype(dtype),
+        "w_v": (jax.random.normal(ks[3], (d, d)) * s).astype(dtype),
+        "w_g": (jax.random.normal(ks[4], (d, d)) * s).astype(dtype),
+        "w_o": (jax.random.normal(ks[5], (d, d)) * s).astype(dtype),
+        "w_decay": (jax.random.normal(ks[6], (d, d)) * s * 0.1).astype(dtype),
+        "decay_base": jnp.linspace(-6.0, -0.1, d).astype(jnp.float32),
+        "bonus": (jax.random.normal(ks[7], (d,)) * 0.1).astype(jnp.float32),
+        "ln_x": jnp.ones((d,), dtype),
+    }
+
+
+def _rwkv_chunk_scan(r, k, v, w_log, u, H, hd, chunk=32):
+    """Chunked WKV: r,k,v: (B, S, H, hd); w_log: (B, S, H, hd) (log decay,
+    <= 0); u: (H, hd) bonus. Returns (B, S, H, hd), final state (B,H,hd,hd).
+
+    Within a chunk: y_i = r_i ( S_in diag + sum_{j<i} diag(W_i/W_j) k_j v_j
+    + diag(u) k_i v_i ); across chunks state S <- diag(W_c) S + ...
+    Computed via cumulative log-decays in fp32.
+    """
+    B, S, _, _ = r.shape
+    nc = S // chunk
+    rc = r.reshape(B, nc, chunk, H, hd)
+    kc = k.reshape(B, nc, chunk, H, hd)
+    vc = v.reshape(B, nc, chunk, H, hd)
+    wc = w_log.reshape(B, nc, chunk, H, hd).astype(jnp.float32)
+
+    cum = jnp.cumsum(wc, axis=2)                          # W_i (inclusive)
+    Wc_total = cum[:, :, -1]                              # (B, nc, H, hd)
+
+    # factors (clamped for fp32 safety; w_log <= 0 so cum decreasing)
+    q_fac = jnp.exp(jnp.maximum(cum - wc, -60.0))         # exclusive cumsum
+    k_fac = jnp.exp(jnp.maximum(-cum, -60.0))             # 1/W_j (inclusive)
+    r_in = rc.astype(jnp.float32) * q_fac                 # decayed queries
+    k_in = kc.astype(jnp.float32) * k_fac
+
+    # intra-chunk attention (strictly lower triangular) + bonus diagonal
+    att = jnp.einsum("bnihd,bnjhd->bnhij", r_in, k_in)    # (B,nc,H,c,c)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    att = jnp.where(tri[None, None, None], att, 0.0)
+    y_intra = jnp.einsum("bnhij,bnjhd->bnihd", att, vc.astype(jnp.float32))
+    diag = jnp.einsum("bnihd,bnihd->bnih", rc.astype(jnp.float32),
+                      kc.astype(jnp.float32) * u[None, None, None])
+    y_intra = y_intra + diag[..., None] * vc.astype(jnp.float32)
+
+    # inter-chunk: scan carrying state (B, H, hd_k, hd_v)
+    def step(state, inputs):
+        r_i, k_i, v_i, wtot, cum_i, wlog_i = inputs
+        # decay from chunk start to step i-1 (exclusive) applied to carry-in
+        r_dec = r_i * jnp.exp(jnp.maximum(cum_i - wlog_i, -60.0))
+        y_cross = jnp.einsum("bihk,bhkv->bihv", r_dec, state)
+        # state update: S' = diag(exp(Wc)) S + sum_j diag(exp(Wc - W_j)) k_j v_j
+        decay_j = jnp.exp(jnp.maximum(wtot[:, None] - cum_i, -60.0))
+        kv = jnp.einsum("bjhk,bjhv->bhkv", k_i * decay_j, v_i)
+        state_new = jnp.exp(wtot)[..., None] * state + kv
+        return state_new, y_cross
+
+    state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    xs = (
+        jnp.moveaxis(rc.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(kc.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(vc.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Wc_total, 1, 0),
+        jnp.moveaxis(cum, 1, 0),
+        jnp.moveaxis(wc, 1, 0),
+    )
+    state_f, y_cross = jax.lax.scan(step, state0, xs)
+    y = y_intra + jnp.moveaxis(y_cross, 0, 1)
+    return y.reshape(B, S, H, hd), state_f
+
+
+def rwkv_block(params: Params, x: jax.Array, ctx: Ctx, cache):
+    """RWKV6 time-mix. x: (B, S, D). Cache: {"state": (B,H,hd,hd),
+    "shift": (B, D)} — O(1) in sequence length (why long_500k is free)."""
+    cfg = ctx.cfg
+    B, S, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+
+    if ctx.mode == "decode":
+        x_prev = cache["shift"][:, None]                  # (B, 1, D)
+    else:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :S]
+
+    mu = params["mu"]
+    mix = lambda i: x * mu[i] + x_prev * (1 - mu[i])
+    _c = lambda t: cst(t, ctx.mesh, "B", None, "model")
+    r = _c(jnp.einsum("bsd,de->bse", mix(0), params["w_r"]))
+    k = _c(jnp.einsum("bsd,de->bse", mix(1), params["w_k"]))
+    v = _c(jnp.einsum("bsd,de->bse", mix(2), params["w_v"]))
+    g = _c(jnp.einsum("bsd,de->bse", mix(4), params["w_g"]))
+    # data-dependent log-decay (<= 0): -exp(base + proj)
+    w_log = -jnp.exp(params["decay_base"] +
+                     jnp.einsum("bsd,de->bse", mix(3),
+                                params["w_decay"]).astype(jnp.float32))
+    u = params["bonus"].reshape(H, hd)
+
+    rh = r.reshape(B, S, H, hd)
+    kh = k.reshape(B, S, H, hd)
+    vh = v.reshape(B, S, H, hd)
+    wh = w_log.reshape(B, S, H, hd)
+
+    if ctx.mode == "decode":
+        state = cache["state"]                            # (B, H, hd, hd) f32
+        r1, k1, v1 = (t[:, 0].astype(jnp.float32) for t in (rh, kh, vh))
+        w1 = jnp.exp(wh[:, 0])
+        y = jnp.einsum("bhk,bhkv->bhv", r1, state) + \
+            jnp.einsum("bhk,bhk,bhv->bhv", r1, u[None] * k1, v1)
+        state_new = w1[..., None] * state + \
+            jnp.einsum("bhk,bhv->bhkv", k1, v1)
+        y = y.reshape(B, 1, D)
+        new_cache = {"state": state_new, "shift": x[:, -1]}
+    else:
+        chunk = 32 if S % 32 == 0 else (S if S < 32 else _chunk(S, 32))
+        y4, state_f = _rwkv_chunk_scan(rh, kh, vh, wh, u, H, hd, chunk=chunk)
+        y = y4.reshape(B, S, D)
+        new_cache = ({"state": state_f, "shift": x[:, -1]}
+                     if ctx.mode == "prefill" else None)
+
+    y = rms_norm(y.astype(x.dtype), params["ln_x"], cfg.rms_eps)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    proj = cst(jnp.einsum("bsd,de->bse", y, params["w_o"]),
+               ctx.mesh, "B", None, None)
+    return proj, new_cache
+
+
+def init_rwkv_channel(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    return {
+        "mu_c": jax.random.uniform(k1, (d,)).astype(dtype),
+        "w_kc": (jax.random.normal(k1, (d, f)) * d ** -0.5).astype(dtype),
+        "w_vc": (jax.random.normal(k2, (f, d)) * f ** -0.5).astype(dtype),
+    }
+
+
+def rwkv_channel_mix(params: Params, x: jax.Array, ctx: Ctx, cache):
+    """RWKV channel-mix: relu(W_k lerp(x, x_prev))^2 W_v."""
+    B, S, D = x.shape
+    if ctx.mode == "decode":
+        x_prev = cache["shift_c"][:, None]
+    else:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :S]
+    h = x * params["mu_c"] + x_prev * (1 - params["mu_c"])
+    kk = cst(jnp.einsum("bsd,df->bsf", h, params["w_kc"]),
+             ctx.mesh, "B", None, "model")
+    act = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    out = cst(jnp.einsum("bsf,fd->bsd", act, params["w_vc"]),
+              ctx.mesh, "B", None, None)
+    new_cache = ({"shift_c": x[:, -1]} if ctx.mode != "train" else None)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention block (vision — Llama 3.2 Vision style, gated)
+# ---------------------------------------------------------------------------
+
+def init_cross_attention(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    p = init_attention(key, cfg, dtype)
+    p["gate_attn"] = jnp.zeros((), jnp.float32)
+    p["gate_ffn"] = jnp.zeros((), jnp.float32)
+    return p
+
+
+def cross_attention_block(params: Params, x: jax.Array, ctx: Ctx, cache):
+    """Queries from text stream, keys/values from the (stub) vision
+    embeddings. Decode: vision K/V are static — cached at prefill."""
+    cfg = ctx.cfg
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads_padded, cfg.num_kv_heads_padded
+
+    q = cst(jnp.einsum("bsd,dh->bsh", x, params["wq"]),
+            ctx.mesh, "B", None, "model").reshape(
+        B, S, hq, hd).transpose(0, 2, 1, 3)
+
+    if ctx.mode == "decode" and cache is not None and "k" in cache:
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+    else:
+        vis = ctx.vision                                  # (B, Sv, D)
+        k = jnp.einsum("bsd,dh->bsh", vis, params["wk"]).reshape(
+            B, -1, hkv, hd).transpose(0, 2, 1, 3)
+        v = jnp.einsum("bsd,dh->bsh", vis, params["wv"]).reshape(
+            B, -1, hkv, hd).transpose(0, 2, 1, 3)
+        new_cache = {"k": k, "v": v} if ctx.mode != "train" else None
+
+    q, k, v = _shard_attn_heads(ctx.mesh, q, k, v)
+    out = flash_attention(q, k, v, causal=False, schedule="masked")
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, hq * hd)
+    out = cst(out, ctx.mesh, "B", None, "model")
+    out = jnp.einsum("bsh,hd->bsd", out, params["wo"])
+    return jnp.tanh(params["gate_attn"]).astype(x.dtype) * out, new_cache

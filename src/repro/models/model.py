@@ -1,0 +1,282 @@
+"""Model assembly: segments of scanned superblocks -> full architectures.
+
+All ten assigned architectures are instances of this assembly (see
+src/repro/configs/). HLO size is O(#segments), not O(#layers): each segment
+is one lax.scan over stacked parameters — compiling a 61-layer MoE for 512
+host devices stays tractable on one CPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ModelConfig, Segment
+
+Params = Any
+
+_BLOCK_INIT = {
+    "attn": lambda k, cfg: {"norm1": jnp.ones((cfg.d_model,), jnp.bfloat16),
+                            "attn": L.init_attention(k, cfg),
+                            "norm2": jnp.ones((cfg.d_model,), jnp.bfloat16),
+                            "mlp": L.init_swiglu(k, cfg.d_model, cfg.d_ff)},
+    "local_attn": lambda k, cfg: {"norm1": jnp.ones((cfg.d_model,), jnp.bfloat16),
+                                  "attn": L.init_attention(k, cfg),
+                                  "norm2": jnp.ones((cfg.d_model,), jnp.bfloat16),
+                                  "mlp": L.init_swiglu(k, cfg.d_model, cfg.d_ff)},
+    "attn_moe": lambda k, cfg: {"norm1": jnp.ones((cfg.d_model,), jnp.bfloat16),
+                                "attn": L.init_attention(k, cfg),
+                                "norm2": jnp.ones((cfg.d_model,), jnp.bfloat16),
+                                "moe": L.init_moe(k, cfg)},
+    "mla": lambda k, cfg: {"norm1": jnp.ones((cfg.d_model,), jnp.bfloat16),
+                           "mla": L.init_mla(k, cfg),
+                           "norm2": jnp.ones((cfg.d_model,), jnp.bfloat16),
+                           "mlp": L.init_swiglu(k, cfg.d_model, cfg.d_ff)},
+    "rg": lambda k, cfg: {"norm1": jnp.ones((cfg.d_model,), jnp.bfloat16),
+                          "rg": L.init_rg(k, cfg),
+                          "norm2": jnp.ones((cfg.d_model,), jnp.bfloat16),
+                          "mlp": L.init_swiglu(k, cfg.d_model, cfg.d_ff)},
+    "rwkv": lambda k, cfg: {"norm1": jnp.ones((cfg.d_model,), jnp.bfloat16),
+                            "rwkv": L.init_rwkv(k, cfg),
+                            "norm2": jnp.ones((cfg.d_model,), jnp.bfloat16),
+                            "cmix": L.init_rwkv_channel(k, cfg)},
+    "cross_attn": lambda k, cfg: {"norm1": jnp.ones((cfg.d_model,), jnp.bfloat16),
+                                  "xattn": L.init_cross_attention(k, cfg),
+                                  "norm2": jnp.ones((cfg.d_model,), jnp.bfloat16),
+                                  "mlp": L.init_swiglu(k, cfg.d_model, cfg.d_ff)},
+}
+
+
+def _block_apply(kind: str, p: Params, x, ctx: L.Ctx, cache):
+    """One pre-norm residual block. Returns (x, new_cache, aux)."""
+    cfg = ctx.cfg
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "local_attn", "attn_moe"):
+        window = cfg.window if kind == "local_attn" else 0
+        h, new_cache = L.attention_block(p["attn"],
+                                         L.rms_norm(x, p["norm1"], cfg.rms_eps),
+                                         ctx, cache, window=window)
+        x = x + h
+        if kind == "attn_moe":
+            h, aux = L.moe_ffn(p["moe"], L.rms_norm(x, p["norm2"], cfg.rms_eps),
+                               cfg, ctx.mesh)
+        else:
+            h = L.swiglu(p["mlp"], L.rms_norm(x, p["norm2"], cfg.rms_eps),
+                         ctx.mesh)
+        x = x + h
+    elif kind == "mla":
+        h, new_cache = L.mla_block(p["mla"],
+                                   L.rms_norm(x, p["norm1"], cfg.rms_eps),
+                                   ctx, cache)
+        x = x + h
+        x = x + L.swiglu(p["mlp"], L.rms_norm(x, p["norm2"], cfg.rms_eps),
+                         ctx.mesh)
+    elif kind == "rg":
+        h, new_cache = L.rg_block(p["rg"],
+                                  L.rms_norm(x, p["norm1"], cfg.rms_eps),
+                                  ctx, cache)
+        x = x + h
+        x = x + L.swiglu(p["mlp"], L.rms_norm(x, p["norm2"], cfg.rms_eps),
+                         ctx.mesh)
+    elif kind == "rwkv":
+        h, c1 = L.rwkv_block(p["rwkv"],
+                             L.rms_norm(x, p["norm1"], cfg.rms_eps),
+                             ctx, cache)
+        x = x + h
+        h, c2 = L.rwkv_channel_mix(p["cmix"],
+                                   L.rms_norm(x, p["norm2"], cfg.rms_eps),
+                                   ctx, cache)
+        x = x + h
+        new_cache = {**(c1 or {}), **(c2 or {})} if (c1 or c2) else None
+    elif kind == "cross_attn":
+        h, new_cache = L.cross_attention_block(
+            p["xattn"], L.rms_norm(x, p["norm1"], cfg.rms_eps), ctx, cache)
+        x = x + h
+        g = jnp.tanh(p["xattn"]["gate_ffn"]).astype(x.dtype)
+        x = x + g * L.swiglu(p["mlp"],
+                             L.rms_norm(x, p["norm2"], cfg.rms_eps), ctx.mesh)
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Cache initialisation (ShapeDtypeStruct-compatible: pure shape logic)
+# ---------------------------------------------------------------------------
+
+def _block_cache_spec(kind: str, cfg: ModelConfig, B: int, S_max: int) -> dict:
+    hd, hkv = cfg.resolved_head_dim, cfg.num_kv_heads_padded
+    if kind in ("attn", "attn_moe"):
+        return {"k": ((B, hkv, S_max, hd), jnp.bfloat16),
+                "v": ((B, hkv, S_max, hd), jnp.bfloat16)}
+    if kind == "local_attn":
+        w = min(cfg.window, S_max) if cfg.window else S_max
+        return {"k": ((B, hkv, w, hd), jnp.bfloat16),
+                "v": ((B, hkv, w, hd), jnp.bfloat16)}
+    if kind == "mla":
+        c = cfg.mla
+        return {"ckv": ((B, S_max, c.kv_lora_rank), jnp.bfloat16),
+                "kr": ((B, S_max, c.qk_rope_head_dim), jnp.bfloat16)}
+    if kind == "rg":
+        from .config import _rg_width
+        dr = _rg_width(cfg.d_model)
+        return {"state": ((B, dr), jnp.float32),
+                "conv": ((B, 3, dr), jnp.bfloat16)}
+    if kind == "rwkv":
+        hd_r = cfg.rwkv_head_dim
+        H = cfg.d_model // hd_r
+        return {"state": ((B, H, hd_r, hd_r), jnp.float32),
+                "shift": ((B, cfg.d_model), jnp.bfloat16),
+                "shift_c": ((B, cfg.d_model), jnp.bfloat16)}
+    if kind == "cross_attn":
+        sv = cfg.vision_seq
+        return {"k": ((B, hkv, sv, hd), jnp.bfloat16),
+                "v": ((B, hkv, sv, hd), jnp.bfloat16)}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, B: int, S_max: int, *,
+               abstract: bool = False):
+    """Nested cache pytree mirroring the segment structure."""
+    mk = (lambda sh, dt: jax.ShapeDtypeStruct(sh, dt)) if abstract else \
+         (lambda sh, dt: jnp.zeros(sh, dt))
+    segs = []
+    for seg in cfg.segments:
+        blocks = []
+        for kind in seg.blocks:
+            spec = _block_cache_spec(kind, cfg, B, S_max)
+            blocks.append({name: mk((seg.count, *sh), dt)
+                           for name, (sh, dt) in spec.items()})
+        segs.append(tuple(blocks))
+    return tuple(segs)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    keys = jax.random.split(key, len(cfg.segments) + 2)
+    segments = []
+    for si, seg in enumerate(cfg.segments):
+        def init_one(k, seg=seg):
+            ks = jax.random.split(k, len(seg.blocks))
+            return tuple(_BLOCK_INIT[kind](ks[i], cfg)
+                         for i, kind in enumerate(seg.blocks))
+        layer_keys = jax.random.split(keys[si], seg.count)
+        segments.append(jax.vmap(init_one)(layer_keys))
+    p = {
+        "segments": tuple(segments),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.bfloat16),
+    }
+    if cfg.embed_inputs:
+        p["embed"] = (jax.random.normal(keys[-2], (cfg.vocab_size, cfg.d_model))
+                      * cfg.d_model ** -0.5).astype(jnp.bfloat16)
+    if not cfg.tie_embeddings:
+        p["unembed"] = (jax.random.normal(keys[-1], (cfg.d_model, cfg.vocab_size))
+                        * cfg.d_model ** -0.5).astype(jnp.bfloat16)
+    return p
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    """ShapeDtypeStruct pytree of init_params without allocating (for the
+    dry-run: jax.eval_shape over init)."""
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def forward(params: Params, inputs: jax.Array, cfg: ModelConfig, *,
+            mode: str = "train", cache=None, pos=None, vision=None,
+            attn_schedule: str = L.DEFAULT_ATTN_SCHEDULE, mesh=None,
+            remat: str = "none", seq_parallel: bool = False):
+    """inputs: (B, S) int32 tokens, or (B, S, D) embeddings when
+    cfg.embed_inputs is False. Returns (logits, new_cache, aux_loss).
+
+    mesh: optional jax Mesh — activation sharding constraints (see
+    layers.cst). Pass it for anything bigger than smoke scale.
+    remat: "block" checkpoints each scanned layer body — backward saves
+    only the bf16 inter-layer activations and recomputes block internals
+    (the f32 norm/silu intermediates XLA otherwise keeps; measured 174 GB
+    -> see EXPERIMENTS.md §Perf). "none" saves everything."""
+    ctx = L.Ctx(cfg=cfg, mode=mode, pos=pos, vision=vision,
+                attn_schedule=attn_schedule, mesh=mesh,
+                seq_parallel=seq_parallel)
+    if cfg.embed_inputs:
+        x = params["embed"][inputs]                       # (B, S, D) bf16
+    else:
+        x = inputs.astype(jnp.bfloat16)
+    sp = "model" if (seq_parallel and mode == "train") else None
+    x = L.cst(x, mesh, "B", sp, None)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_segs = []
+    for si, seg in enumerate(cfg.segments):
+        seg_params = params["segments"][si]
+        seg_cache = cache[si] if cache is not None else None
+
+        def scan_body(x, per_layer, seg=seg):
+            lp, lc = per_layer
+            aux_l = jnp.zeros((), jnp.float32)
+            new_blocks = []
+            h = x
+            for bi, kind in enumerate(seg.blocks):
+                bcache = lc[bi] if lc is not None else None
+                h, nc, aux_b = _block_apply(kind, lp[bi], h, ctx, bcache)
+                h = L.cst(h, mesh, "B", sp, None)
+                aux_l = aux_l + aux_b
+                new_blocks.append(nc)
+            keep = tuple(nb if nb is not None else {} for nb in new_blocks)
+            return h, (keep, aux_l)
+
+        xs = (seg_params, seg_cache)
+        body = (jax.checkpoint(scan_body, prevent_cse=False)
+                if remat == "block" else scan_body)
+        x, (seg_new_cache, aux_per_layer) = jax.lax.scan(body, x, xs)
+        aux_total = aux_total + aux_per_layer.sum()
+        new_segs.append(seg_new_cache)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    logits = L.cst(logits, mesh, "B", None, "model")
+    new_cache = tuple(new_segs) if mode != "train" else None
+    return logits, new_cache, aux_total
+
+
+def pad_cache_to(cache, cfg: ModelConfig, S_max: int):
+    """Right-pad a prefill cache's sequence dims to S_max so decode can
+    append (full-attention k/v and MLA latent caches; recurrent states and
+    window caches are already fixed-size)."""
+    def pad(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("k", "v") and leaf.ndim == 5:
+            s = leaf.shape[3]
+            # window caches are exactly window-sized; skip those
+            is_window = any(
+                kind == "local_attn"
+                for seg in cfg.segments for kind in seg.blocks) and \
+                cfg.window and s == min(cfg.window, s)
+            if cfg.window and s <= cfg.window:
+                return leaf
+            if s < S_max:
+                pad_w = [(0, 0)] * 5
+                pad_w[3] = (0, S_max - s)
+                return jnp.pad(leaf, pad_w)
+            return leaf
+        if name in ("ckv", "kr") and leaf.ndim == 4:
+            s = leaf.shape[2]
+            if s < S_max:
+                pad_w = [(0, 0)] * 4
+                pad_w[2] = (0, S_max - s)
+                return jnp.pad(leaf, pad_w)
+        return leaf
+    return jax.tree_util.tree_map_with_path(pad, cache)

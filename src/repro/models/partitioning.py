@@ -1,0 +1,168 @@
+"""Parameter/activation partitioning: path-pattern rules -> PartitionSpec.
+
+Megatron-style TP on the `model` axis (column-parallel in-projections,
+row-parallel out-projections, expert-parallel MoE), FSDP on the `data`
+axis for the other large dim. Multi-pod meshes add a `pod` axis used only
+for batch parallelism (params replicated across pods; gradient all-reduce
+spans pod+data).
+
+Every rule is guarded by divisibility: a mesh axis is dropped from a dim
+whose size it does not divide (keeps smoke configs and odd dims valid).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (path regex, spec builder) — first match wins. Paths look like
+# "segments/0/1/attn/wq" (segment idx / block idx / module / param).
+_RULES: list[tuple[str, tuple]] = [
+    (r"embed$",                    ("model", "data")),
+    (r"unembed$",                  ("data", "model")),
+    (r"moe/router$",               (None, "model")),
+    (r"moe/w_(gate|up)$",          ("model", "data", None)),
+    (r"moe/w_down$",               ("model", "data", None)),
+    (r"moe/shared/w_(gate|up)$",   ("data", "model")),
+    (r"moe/shared/w_down$",        ("model", "data")),
+    (r"mla/w_dq$",                 ("data", None)),
+    (r"mla/w_uq$",                 (None, "model")),
+    (r"mla/w_dkv$",                ("data", None)),
+    (r"mla/w_uk$",                 ("model", None, None)),
+    (r"mla/w_uv$",                 ("model", None, None)),
+    (r"rg/w_(x|gate)$",            ("data", "model")),
+    (r"rg/conv_w$",                (None, "model")),
+    (r"rg/conv_b$",                ("model",)),
+    (r"rg/w_(rg|ig)$",             ("model", None)),
+    (r"rg/lam$",                   ("model",)),
+    (r"rg/w_out$",                 ("model", "data")),
+    (r"rwkv/mu$",                  (None, None)),
+    (r"rwkv/w_(r|k|v|g|decay)$",   ("data", "model")),
+    (r"rwkv/w_o$",                 ("model", "data")),
+    (r"rwkv/(decay_base|bonus|ln_x)$", ("model",)),
+    (r"cmix/w_kc$",                ("data", "model")),
+    (r"cmix/w_vc$",                ("model", "data")),
+    (r"cmix/mu_c$",                (None,)),
+    (r"(wq|wk|wv)$",               ("data", "model")),
+    (r"(wo)$",                     ("model", "data")),
+    (r"b(q|k|v)$",                 ("model",)),
+    (r"(w_gate|w_up)$",            ("data", "model")),
+    (r"w_down$",                   ("model", "data")),
+    (r"(gate_attn|gate_ffn)$",     ()),
+    (r"(norm|ln|q_norm|kv_norm|final_norm)", None),  # replicate any norm
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _guard(spec: tuple, shape: tuple, mesh: Mesh) -> P:
+    """Drop mesh axes that are absent from the mesh (elastic scale-down)
+    or do not divide the dim; align rank."""
+    spec = tuple(spec)[:len(shape)]
+    spec = spec + (None,) * (len(shape) - len(spec))
+    fixed = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = tuple(a for a in (ax if isinstance(ax, tuple) else (ax,))
+                     if a in mesh.axis_names)
+        if not axes:
+            fixed.append(None)
+            continue
+        ax = axes if isinstance(ax, tuple) else axes[0]
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        fixed.append(ax if dim % size == 0 and dim >= size else None)
+    return P(*fixed)
+
+
+def param_specs(params: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree for a parameter pytree (scan-stacked segments
+    get a leading replicated dim automatically)."""
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        in_segment = ps.startswith("segments/")
+        for pat, spec in _RULES:
+            if re.search(pat, ps):
+                if spec is None:
+                    spec = ()
+                if in_segment:
+                    spec = (None,) + tuple(spec)
+                return _guard(spec, shape, mesh)
+        # default: replicate
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def param_shardings(params: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh))
+
+
+def batch_axes(mesh: Mesh):
+    """Axes used for data parallelism (pod included when present)."""
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+def cache_specs(cache: Any, mesh: Mesh) -> Any:
+    """KV-cache / recurrent-state sharding: batch over data(+pod); the long
+    sequence dim of attention caches over `model` (flash-decoding layout);
+    rwkv/rg head-state over `model`."""
+    ba = batch_axes(mesh)
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape  # leading dim = layer stack
+        name = ps.rsplit("/", 1)[-1]
+        if name in ("k", "v"):              # (L, B, H, S, hd)
+            return _guard((None, ba, None, "model", None), shape, mesh)
+        if name in ("ckv", "kr"):           # (L, B, S, r)
+            return _guard((None, ba, "model", None), shape, mesh)
+        if name == "state" and len(shape) == 5:   # rwkv (L,B,H,hd,hd)
+            return _guard((None, ba, "model", None, None), shape, mesh)
+        if name == "state":                 # rg (L, B, DR)
+            return _guard((None, ba, "model"), shape, mesh)
+        if name == "conv":                  # (L, B, 3, DR)
+            return _guard((None, ba, None, "model"), shape, mesh)
+        if name in ("shift", "shift_c"):    # (L, B, D)
+            return _guard((None, ba, None), shape, mesh)
+        return _guard((None, ba), shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def cache_shardings(cache: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), cache_specs(cache, mesh))
+
+
+def input_sharding(mesh: Mesh, rank: int) -> NamedSharding:
+    """Token/label arrays: batch over data(+pod), rest replicated."""
+    ba = batch_axes(mesh)
+    return NamedSharding(mesh, P(ba, *([None] * (rank - 1))))
+
+
+def input_sharding_for(mesh: Mesh, shape: tuple) -> NamedSharding:
+    """Shape-aware input sharding: batch over data(+pod) where divisible
+    (long_500k has global_batch=1 — replicate), rest replicated."""
+    ba = batch_axes(mesh)
+    return NamedSharding(mesh, _guard((ba,), tuple(shape), mesh))
+
+
+def logits_spec(mesh: Mesh) -> P:
+    return P(batch_axes(mesh), None, "model")

@@ -1,0 +1,7 @@
+from .adamw import (AdamWConfig, adamw_init, adamw_update, cosine_lr,
+                    global_norm, clip_by_global_norm)
+from .compress import compress_grads, decompress_grads
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_lr",
+           "global_norm", "clip_by_global_norm",
+           "compress_grads", "decompress_grads"]

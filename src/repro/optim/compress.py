@@ -1,0 +1,42 @@
+"""int8 gradient compression for the cross-pod all-reduce.
+
+The multi-pod mesh all-reduces gradients over ("pod", "data"). Inter-pod
+(DCI) links are the oversubscribed resource — the exact analogue of the
+paper's cross-cluster bandwidth (§2.2: 5:1–20:1). Compressing the pod-axis
+leg of the reduction 4x (fp32->int8, per-tensor scale) moves the collective
+term of the roofline by the same factor the paper's topology locality moves
+recovery traffic.
+
+Scheme: symmetric per-tensor quantisation with stochastic-free determinism
+(round-to-nearest; bias is negligible at int8 for gradients already averaged
+over a pod's 256 chips). Scales travel with the payload (one fp32 per
+tensor).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def compress_grads(grads: Params) -> tuple[Params, Params]:
+    """fp32/bf16 pytree -> (int8 pytree, fp32 scales pytree)."""
+    def q(g):
+        g32 = g.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(g32))
+        scale = jnp.maximum(amax / 127.0, 1e-12)
+        return jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8), scale
+    qs = jax.tree_util.tree_map(q, grads)
+    ints = jax.tree_util.tree_map(lambda t: t[0], qs,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    scales = jax.tree_util.tree_map(lambda t: t[1], qs,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    return ints, scales
+
+
+def decompress_grads(ints: Params, scales: Params) -> Params:
+    return jax.tree_util.tree_map(
+        lambda i, s: i.astype(jnp.float32) * s, ints, scales)

@@ -1,0 +1,5 @@
+from .step import (TrainConfig, TrainState, init_train_state, make_train_step,
+                   make_serve_prefill, make_serve_decode, loss_fn)
+
+__all__ = ["TrainConfig", "TrainState", "init_train_state", "make_train_step",
+           "make_serve_prefill", "make_serve_decode", "loss_fn"]

@@ -1,0 +1,161 @@
+"""Step functions: training (loss + AdamW) and serving (prefill / decode).
+
+These are the units the launcher jits and the dry-run lowers:
+
+  train_step(state, tokens, labels)         -> (state, metrics)
+  serve_prefill(params, tokens[, vision])   -> (logits_last, cache)
+  serve_decode(params, token, cache, pos)   -> (logits, cache)
+
+Design notes
+  * **Microbatching**: grad accumulation over `accum` slices via lax.scan —
+    compiled HLO stays O(1) in accum; activation memory drops accum-fold.
+  * **Remat**: `remat="block"` checkpoints each scanned layer body
+    (models/model.py): backward keeps only the bf16 inter-layer activation
+    per layer and recomputes block internals; flash attention keeps its own
+    exact blockwise backward either way (custom VJP).
+  * **Loss**: token-mean cross-entropy in fp32 + MoE aux loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward
+from repro.models.config import ModelConfig
+from repro.models.model import init_params
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    accum: int = 1                  # gradient-accumulation microbatches
+    remat: str = "none"             # "none" | "block"
+    aux_weight: float = 0.01        # MoE load-balance loss weight
+    attn_schedule: str = "bounded"
+    seq_parallel: bool = False      # Megatron SP on the residual stream
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: Params
+    opt: dict
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_train_state(cfg: ModelConfig, key: jax.Array) -> TrainState:
+    params = init_params(cfg, key)
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def loss_fn(params: Params, tokens, labels, cfg: ModelConfig,
+            tcfg: TrainConfig, vision=None, mesh=None):
+    fwd = functools.partial(forward, mode="train", vision=vision,
+                            attn_schedule=tcfg.attn_schedule, mesh=mesh,
+                            remat=tcfg.remat, seq_parallel=tcfg.seq_parallel)
+    logits, _, aux = fwd(params, tokens, cfg)
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1).mean()
+    return nll + tcfg.aux_weight * aux, (nll, aux)
+
+
+def make_train_step(cfg: ModelConfig, ocfg: AdamWConfig,
+                    tcfg: TrainConfig = TrainConfig(), mesh=None):
+    """Returns train_step(state, tokens, labels[, vision]) -> (state, metrics).
+
+    tokens/labels: (B, S) int32 (or (B, S, D) embeddings for stub-frontend
+    archs). With tcfg.accum > 1, B must be divisible by accum; microbatches
+    are consumed via lax.scan with fp32 grad accumulation.
+    """
+
+    def grads_of(params, tokens, labels, vision):
+        (loss, (nll, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, tokens, labels, cfg, tcfg, vision,
+                                   mesh)
+        return loss, nll, aux, grads
+
+    def train_step(state: TrainState, tokens, labels, vision=None):
+        params = state.params
+        if tcfg.accum == 1:
+            loss, nll, aux, grads = grads_of(params, tokens, labels, vision)
+        else:
+            B = tokens.shape[0]
+            assert B % tcfg.accum == 0, (B, tcfg.accum)
+            mb = B // tcfg.accum
+            resh = lambda x: (None if x is None else
+                              x.reshape(tcfg.accum, mb, *x.shape[1:]))
+            tk, lb = resh(tokens), resh(labels)
+            vis = resh(vision)
+
+            def acc_body(carry, xs):
+                g_acc, l_acc, n_acc, a_acc = carry
+                if vis is None:
+                    t, l = xs
+                    v = None
+                else:
+                    t, l, v = xs
+                loss, nll, aux, grads = grads_of(params, t, l, v)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                return (g_acc, l_acc + loss, n_acc + nll, a_acc + aux), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zero = jnp.zeros((), jnp.float32)
+            xs = (tk, lb) if vis is None else (tk, lb, vis)
+            (grads, loss, nll, aux), _ = jax.lax.scan(
+                acc_body, (g0, zero, zero, zero), xs)
+            inv = 1.0 / tcfg.accum
+            grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+            loss, nll, aux = loss * inv, nll * inv, aux * inv
+
+        new_params, new_opt, stats = adamw_update(grads, state.opt, ocfg)
+        new_state = TrainState(params=new_params, opt=new_opt,
+                               step=state.step + 1)
+        metrics = {"loss": loss, "nll": nll, "aux": aux, **stats}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_serve_prefill(cfg: ModelConfig,
+                       attn_schedule: str = "bounded", mesh=None):
+    """serve_prefill(params, tokens[, vision]) -> (last-position logits,
+    cache). The cache's sequence capacity equals the prompt length; the
+    launcher pads it to S_max before decode."""
+    def serve_prefill(params, tokens, vision=None):
+        logits, cache, _ = forward(params, tokens, cfg, mode="prefill",
+                                   vision=vision, attn_schedule=attn_schedule,
+                                   mesh=mesh)
+        return logits[:, -1], cache
+    return serve_prefill
+
+
+def make_serve_decode(cfg: ModelConfig, mesh=None):
+    """serve_decode(params, token, cache, pos[, vision]) -> (logits, cache).
+
+    One new token per sequence against a KV cache filled to `pos` — the
+    shape the decode_32k / long_500k dry-run cells lower. For recurrent
+    families (rwkv/rg) the cache is O(1) in sequence length, which is what
+    makes long_500k runnable at all (DESIGN.md §Arch-applicability).
+    """
+    def serve_decode(params, token, cache, pos, vision=None):
+        logits, new_cache, _ = forward(params, token, cfg, mode="decode",
+                                       cache=cache, pos=pos, vision=vision,
+                                       mesh=mesh)
+        return logits[:, 0], new_cache
+    return serve_decode

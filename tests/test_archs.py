@@ -1,0 +1,161 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward/train step on CPU, assert output shapes + no NaNs (brief: (f))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_archs, get_config
+from repro.models import forward, init_params
+from repro.models.model import pad_cache_to
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs_for(cfg, B=2, S=16):
+    if not cfg.embed_inputs:     # audio stub frontend: frame embeddings
+        x = jax.random.normal(KEY, (B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        x = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    vision = None
+    if cfg.family == "vlm":
+        vision = jax.random.normal(KEY, (B, cfg.vision_seq, cfg.d_model),
+                                   jnp.bfloat16)
+    return x, vision
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_smoke_forward(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(cfg, KEY)
+    x, vision = _inputs_for(cfg)
+    logits, _, aux = forward(params, x, cfg, mode="train", vision=vision)
+    B = x.shape[0]
+    assert logits.shape == (B, 16, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_smoke_train_step(arch):
+    """One gradient step: loss finite, grads finite, params update."""
+    cfg = get_config(arch, smoke=True)
+    params = init_params(cfg, KEY)
+    x, vision = _inputs_for(cfg)
+    labels = jax.random.randint(KEY, x.shape[:2], 0, cfg.vocab_size)
+
+    def loss_fn(p):
+        logits, _, aux = forward(p, x, cfg, mode="train", vision=vision)
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1).mean()
+        return nll + 0.01 * aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.isfinite(g.astype(jnp.float32)).all()) for g in leaves)
+    # at least some gradient signal
+    assert any(float(jnp.abs(g.astype(jnp.float32)).max()) > 0 for g in leaves)
+
+
+@pytest.mark.parametrize("arch", [a for a in all_archs()
+                                  if get_config(a, smoke=True).has_decode])
+def test_smoke_decode_matches_train(arch):
+    """Prefill S-1 tokens + decode 1 == train logits at the last position
+    (bf16 tolerance)."""
+    cfg = get_config(arch, smoke=True)
+    params = init_params(cfg, KEY)
+    x, vision = _inputs_for(cfg)
+    S = x.shape[1]
+    logits_t, _, _ = forward(params, x, cfg, mode="train", vision=vision)
+    _, cache, _ = forward(params, x[:, :S - 1], cfg, mode="prefill",
+                          vision=vision)
+    cache = pad_cache_to(cache, cfg, S_max=S + 4)
+    logits_d, cache2, _ = forward(params, x[:, S - 1:], cfg, mode="decode",
+                                  cache=cache, pos=jnp.int32(S - 1),
+                                  vision=vision)
+    assert cache2 is not None
+    a = logits_t[:, -1].astype(jnp.float32)
+    b = logits_d[:, 0].astype(jnp.float32)
+    scale = float(jnp.abs(a).max()) + 1e-6
+    assert float(jnp.abs(a - b).max()) / scale < 0.05
+
+
+def test_encoder_only_has_no_decode():
+    cfg = get_config("hubert-xlarge", smoke=True)
+    assert not cfg.has_decode
+
+
+def test_subquadratic_flags():
+    assert get_config("rwkv6-7b").subquadratic
+    assert get_config("recurrentgemma-9b").subquadratic
+    assert not get_config("llama3.2-3b").subquadratic
+
+
+def test_full_configs_match_assignment():
+    """The exact assigned hyperparameters."""
+    spec = {
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 163840),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 32064),
+        "llama3.2-3b": (28, 3072, 24, 8, 128256),
+        "qwen1.5-32b": (64, 5120, 40, 40, 152064),
+        "minicpm3-4b": (62, 2560, 40, 40, 73448),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 200064),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 256000),
+        "rwkv6-7b": (32, 4096, 64, 64, 65536),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 128256),
+        "hubert-xlarge": (48, 1280, 16, 16, 504),
+    }
+    for arch, (L, d, h, kv, v) in spec.items():
+        cfg = get_config(arch)
+        assert cfg.num_layers == L, arch
+        assert cfg.d_model == d, arch
+        assert cfg.num_heads == h, arch
+        assert cfg.num_kv_heads == kv, arch
+        assert cfg.vocab_size == v, arch
+
+
+def test_param_counts_in_band():
+    """Analytic param counts near the published sizes."""
+    bands = {
+        "kimi-k2-1t-a32b": (0.9e12, 1.15e12),
+        "phi3.5-moe-42b-a6.6b": (39e9, 46e9),
+        "llama3.2-3b": (2.8e9, 3.6e9),
+        "qwen1.5-32b": (30e9, 38e9),
+        "minicpm3-4b": (3.6e9, 4.8e9),
+        "phi4-mini-3.8b": (3.4e9, 4.3e9),
+        "rwkv6-7b": (6.3e9, 7.7e9),
+        "hubert-xlarge": (0.9e9, 1.5e9),
+    }
+    for arch, (lo, hi) in bands.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+
+
+def test_rwkv_chunked_equals_naive():
+    """The chunked WKV scan == naive per-step recurrence (fp32)."""
+    from repro.models.layers import _rwkv_chunk_scan
+    rng = np.random.default_rng(0)
+    B, S, H, hd = 2, 64, 2, 8
+    r, k, v = (jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+               for _ in range(3))
+    w_log = jnp.asarray(-np.exp(rng.normal(size=(B, S, H, hd)) - 1.0),
+                        jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, hd)), jnp.float32)
+
+    y_c, state_c = _rwkv_chunk_scan(r, k, v, w_log, u, H, hd, chunk=16)
+
+    # naive recurrence:  y_t = r_t (S_{t-1} + diag(u) k_t v_t^T);
+    #                    S_t = diag(exp(w_t)) S_{t-1} + k_t v_t^T
+    ys = np.zeros((B, S, H, hd), np.float64)
+    rn, kn, vn, wn = (np.asarray(t, np.float64) for t in (r, k, v, w_log))
+    un = np.asarray(u, np.float64)
+    state = np.zeros((B, H, hd, hd), np.float64)
+    for t in range(S):
+        kv = np.einsum("bhk,bhv->bhkv", kn[:, t], vn[:, t])
+        ys[:, t] = np.einsum("bhk,bhkv->bhv", rn[:, t],
+                             state + un[None, :, :, None] * kv)
+        state = np.exp(wn[:, t])[..., None] * state + kv
+    np.testing.assert_allclose(np.asarray(y_c), ys, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state_c), state, rtol=2e-4,
+                               atol=2e-4)

@@ -1,0 +1,115 @@
+"""Property-based tests (hypothesis) on codec invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (decode_plan, make_alrc, make_unilrc, paper_schemes,
+                        tolerable_failures)
+from repro.core.gf import (GF_MUL_TABLE, bitplanes_to_bytes,
+                           bytes_to_bitplanes, expand_coding_matrix_to_bits,
+                           gf_inv, gf_matmul, gf_mul, gf_solve)
+
+CODES = {
+    "unilrc_1_3": make_unilrc(1, 3),
+    "unilrc_1_6": make_unilrc(1, 6),
+    "unilrc_2_4": make_unilrc(2, 4),
+    "alrc": make_alrc(k=30, l=6, g=6),
+}
+
+
+# ---------------------------------------------------------------------------
+# GF(2^8) field axioms
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 255), st.integers(0, 255), st.integers(0, 255))
+def test_gf_field_axioms(a, b, c):
+    m = lambda x, y: int(gf_mul(np.uint8(x), np.uint8(y)))
+    assert m(a, b) == m(b, a)
+    assert m(a, m(b, c)) == m(m(a, b), c)
+    assert m(a, b ^ c) == m(a, b) ^ m(a, c)       # distributivity over XOR
+    assert m(a, 1) == a
+    if a != 0:
+        assert m(a, int(gf_inv(np.uint8(a)))) == 1
+
+
+@given(st.integers(1, 255))
+def test_gf_solve_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(3):
+        A = rng.integers(0, 256, (5, 5), dtype=np.uint8)
+        try:
+            X = gf_solve(A, np.eye(5, dtype=np.uint8))
+        except np.linalg.LinAlgError:
+            continue
+        assert np.array_equal(gf_matmul(A, X), np.eye(5, dtype=np.uint8))
+
+
+# ---------------------------------------------------------------------------
+# Bit-plane representation (the TPU kernel's algebra)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10**9))
+def test_bitplane_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 256, (4, 16), dtype=np.uint8)
+    assert np.array_equal(bitplanes_to_bytes(bytes_to_bitplanes(data)), data)
+
+
+@given(st.integers(0, 10**9))
+@settings(deadline=None)
+def test_bitmatrix_matmul_equals_gf_matmul(seed):
+    """(A_bits @ x_bits) mod 2 == A @ x over GF(2^8) — the identity the
+    MXU kernel relies on."""
+    rng = np.random.default_rng(seed)
+    m, k, B = 3, 5, 8
+    A = rng.integers(0, 256, (m, k), dtype=np.uint8)
+    x = rng.integers(0, 256, (k, B), dtype=np.uint8)
+    want = gf_matmul(A, x)
+    Ab = expand_coding_matrix_to_bits(A)          # (8m, 8k)
+    xb = bytes_to_bitplanes(x)                    # (8k, B)
+    got_bits = (Ab.astype(np.int64) @ xb.astype(np.int64)) % 2
+    got = bitplanes_to_bytes(got_bits.astype(np.uint8))
+    assert np.array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Decode invariants
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from(sorted(CODES)), st.integers(0, 10**9))
+@settings(deadline=None, max_examples=40)
+def test_decode_random_patterns(code_name, seed):
+    """Any <= f random erasures decode exactly; plan sources are alive."""
+    code = CODES[code_name]
+    f = tolerable_failures(code)
+    rng = np.random.default_rng(seed)
+    ne = int(rng.integers(1, f + 1))
+    erased = tuple(sorted(rng.choice(code.n, ne, replace=False).tolist()))
+    data = rng.integers(0, 256, (code.k, 24), dtype=np.uint8)
+    cw = code.encode(data)
+    plan = decode_plan(code, erased)
+    assert set(plan.sources).isdisjoint(set(erased))
+    blocks = {i: cw[i] for i in range(code.n) if i not in set(erased)}
+    rec = plan.apply(blocks)
+    for e in erased:
+        np.testing.assert_array_equal(rec[e], cw[e])
+
+
+@given(st.integers(0, 10**9))
+@settings(deadline=None, max_examples=25)
+def test_unilrc_single_failure_stays_in_group(seed):
+    """Property 2: single-failure decode touches only the failed block's
+    group (=> zero cross-cluster traffic under native placement)."""
+    code = CODES["unilrc_1_6"]
+    rng = np.random.default_rng(seed)
+    t = int(rng.integers(0, code.n))
+    plan = decode_plan(code, (t,))
+    grp = set(code.groups[code.group_of(t)])
+    assert set(plan.sources) <= grp - {t}
+    assert np.all((plan.M == 0) | (plan.M == 1))  # XOR-only
+
+
+def test_decode_rejects_too_many_erasures():
+    code = CODES["unilrc_1_3"]
+    with pytest.raises(ValueError):
+        decode_plan(code, tuple(range(code.n - code.k + 1)))

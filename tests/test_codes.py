@@ -1,0 +1,230 @@
+"""Unit tests: code constructions, distance properties, paper claims."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (ALL_SCHEMES, all_recovery_plans, decode_plan,
+                        default_placement, locality_metrics, make_alrc,
+                        make_olrc, make_rs, make_ulrc, make_unilrc,
+                        paper_schemes, single_recovery_plan,
+                        tolerable_failures, verify_erasure_tolerance)
+from repro.core.gf import gf_rank
+
+
+# ---------------------------------------------------------------------------
+# UniLRC parameterisation (Thm 3.1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("alpha,z", [(1, 2), (1, 3), (1, 6), (2, 2), (2, 8),
+                                     (2, 10), (3, 4)])
+def test_unilrc_parameters(alpha, z):
+    code = make_unilrc(alpha, z)
+    n = alpha * z * z + z
+    k = alpha * z * z - alpha * z
+    r = alpha * z
+    assert (code.n, code.k) == (n, k)
+    assert code.meta["r"] == r
+    assert code.meta["d"] == r + 2
+    # Theorem 3.1 code rate identity
+    rate = k / n
+    assert rate == pytest.approx(r / (r + 1) * (1 - 1 / z))
+    assert rate == pytest.approx(1 - (alpha + 1) / (alpha * z + 1))
+    # (r+1) | n — distance-optimality precondition (Thm 2.3)
+    assert n % (r + 1) == 0
+    # uniform groups of r+1
+    assert all(len(g) == r + 1 for g in code.groups)
+
+
+def test_unilrc_paper_example_structure():
+    """Fig 4: UniLRC(42,30,6) — 6 groups of 5 data + 1 global + 1 local."""
+    code = make_unilrc(1, 6)
+    assert code.name == "UniLRC(42,30,6)"
+    for gi, grp in enumerate(code.groups):
+        types = [code.block_type[b] for b in grp]
+        assert types.count('d') == 5
+        assert types.count('g') == 1
+        assert types.count('l') == 1
+
+
+# ---------------------------------------------------------------------------
+# Distance (Thm 3.2/3.3): any r+1 erasures decodable; some r+2 pattern not.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("alpha,z", [(1, 2), (1, 3), (2, 2)])
+def test_unilrc_distance_exhaustive(alpha, z):
+    code = make_unilrc(alpha, z)
+    r = code.meta["r"]
+    H = code.H
+    for sub in itertools.combinations(range(code.n), r + 1):
+        assert gf_rank(H[:, list(sub)]) == r + 1, f"dependent: {sub}"
+
+
+@pytest.mark.parametrize("alpha,z", [(1, 6), (2, 8), (2, 10)])
+def test_unilrc_distance_randomized(alpha, z):
+    code = make_unilrc(alpha, z)
+    assert verify_erasure_tolerance(code, code.meta["r"] + 1, trials=15)
+
+
+def test_unilrc_distance_r_plus_2_is_tight_for_some_params():
+    """d = r+2 claimed by Thm 3.2. Our element choice achieves d >= r+2
+    always (the optimality direction); for several parameter sets r+2 is
+    tight — there exists a dependent (r+2)-subset, so decode must fail."""
+    import itertools
+    found_tight = False
+    for alpha, z in [(1, 2), (2, 2)]:
+        code = make_unilrc(alpha, z)
+        r = code.meta["r"]
+        H = code.H
+        for sub in itertools.combinations(range(code.n), r + 2):
+            if gf_rank(H[:, list(sub)]) < r + 2:
+                with pytest.raises(ValueError):
+                    decode_plan(code, sub)
+                found_tight = True
+                break
+    assert found_tight
+
+
+def test_unilrc_one_cluster_failure_decodable():
+    for alpha, z in [(1, 6), (2, 8)]:
+        code = make_unilrc(alpha, z)
+        pl = default_placement(code)
+        assert pl.tolerates_one_cluster_failure()
+
+
+# ---------------------------------------------------------------------------
+# Encode/decode roundtrips for every family
+# ---------------------------------------------------------------------------
+
+def _all_codes_42():
+    return paper_schemes("30-of-42")
+
+
+@pytest.mark.parametrize("name", ["ALRC", "OLRC", "ULRC", "UniLRC"])
+def test_roundtrip_at_f(name):
+    code = _all_codes_42()[name]
+    f = tolerable_failures(code)
+    assert verify_erasure_tolerance(code, f, trials=25, seed=7)
+
+
+def test_rs_mds():
+    code = make_rs(14, 10)
+    assert verify_erasure_tolerance(code, 4, trials=30)
+    plan = single_recovery_plan(code, 3)
+    assert plan.cost == code.k  # MDS single recovery reads k
+
+
+# ---------------------------------------------------------------------------
+# XOR locality (Limitation #3 / Property 2)
+# ---------------------------------------------------------------------------
+
+def test_unilrc_xor_locality_all_blocks():
+    """Every single-block recovery in UniLRC is coefficient-1-only."""
+    for alpha, z in [(1, 6), (2, 8), (2, 10)]:
+        code = make_unilrc(alpha, z)
+        for p in all_recovery_plans(code):
+            assert p.xor_only, f"block {p.target} needs GF mult"
+            assert p.cost == code.meta["r"]  # minimum recovery locality
+
+
+def test_alrc_global_not_xor():
+    code = make_alrc(k=30, l=6, g=6)
+    plans = all_recovery_plans(code)
+    glob = [p for p in plans
+            if code.block_type[p.target] == 'g']
+    assert any(not p.xor_only for p in glob)
+    assert all(p.cost == 30 for p in glob)   # globals read all k
+
+
+def test_recovery_plans_correct():
+    """Plans reproduce the erased block's bytes for all codes."""
+    rng = np.random.default_rng(3)
+    for name, code in _all_codes_42().items():
+        data = rng.integers(0, 256, (code.k, 32), dtype=np.uint8)
+        cw = code.encode(data)
+        blocks = {i: cw[i] for i in range(code.n)}
+        for t in range(code.n):
+            p = single_recovery_plan(code, t)
+            rec = p.apply(blocks)
+            np.testing.assert_array_equal(rec, cw[t], err_msg=f"{name} blk {t}")
+
+
+# ---------------------------------------------------------------------------
+# Recovery locality r̄ (paper §2.3.1 numbers)
+# ---------------------------------------------------------------------------
+
+def test_paper_recovery_locality_numbers():
+    codes = _all_codes_42()
+    from repro.core import recovery_locality
+    assert recovery_locality(codes["ALRC"]) == pytest.approx(8.57, abs=0.01)
+    assert recovery_locality(codes["ULRC"]) == pytest.approx(7.43, abs=0.01)
+    assert recovery_locality(codes["UniLRC"]) == pytest.approx(6.0)
+    # our OLRC parameterisation (l=2, g=10) gives 20; the paper quotes 25
+    # for its (underspecified) variant — both far worse than UniLRC.
+    assert recovery_locality(codes["OLRC"]) >= 20
+
+
+def test_unilrc_minimum_recovery_locality_thm34():
+    """Thm 3.4: r = n/z - 1 is the minimum for one-cluster fault tolerance."""
+    for alpha, z in [(1, 6), (2, 8), (2, 10)]:
+        code = make_unilrc(alpha, z)
+        assert code.meta["r"] == code.n // z - 1
+
+
+# ---------------------------------------------------------------------------
+# Topology locality (Property 1 & 2)
+# ---------------------------------------------------------------------------
+
+def test_unilrc_zero_cross_cluster_and_lbnr():
+    for alpha, z in [(1, 6), (2, 8), (2, 10)]:
+        code = make_unilrc(alpha, z)
+        pl = default_placement(code)
+        m = locality_metrics(code, pl)
+        assert m.CARC == 0.0 and m.CDRC == 0.0
+        assert m.LBNR == pytest.approx(1.0)
+        assert m.xor_fraction == 1.0
+        assert pl.num_clusters == z
+
+
+def test_baselines_have_cross_cluster_traffic():
+    codes = _all_codes_42()
+    for name in ("OLRC", "ULRC"):
+        pl = default_placement(codes[name])
+        m = locality_metrics(codes[name], pl)
+        assert m.CARC > 0.0
+
+
+def test_relaxed_placement_small_z():
+    """§3.3 Discussion: 'one local group, t clusters' for small DSSs."""
+    from repro.core import place_unilrc_relaxed
+    code = make_unilrc(2, 4)
+    pl = place_unilrc_relaxed(code, t=2)
+    assert pl.num_clusters == 8
+    m = locality_metrics(code, pl)
+    assert 0 < m.CARC <= code.meta["r"] / 2 + 1  # bounded cross traffic
+
+
+def test_relaxed_placement_tradeoff():
+    """Paper §3.3 Discussion: 'one local group, t clusters' for small-z
+    DSSs — recovery incurs at most t-1 cross-cluster block reads, and one
+    cluster loss stays decodable."""
+    from repro.core.codes import make_unilrc
+    from repro.core.metrics import locality_metrics
+    from repro.core.placement import place_unilrc, place_unilrc_relaxed
+
+    from repro.core.codec import single_recovery_plan
+    code = make_unilrc(alpha=2, z=4)        # (36, 24, 8)
+    tight = locality_metrics(code, place_unilrc(code))
+    relaxed_pl = place_unilrc_relaxed(code, t=2)
+    relaxed = locality_metrics(code, relaxed_pl)
+    assert tight.CARC == 0.0
+    assert relaxed.CARC > 0                      # raw cross blocks appear
+    assert relaxed.ARC == tight.ARC              # same recovery volume
+    # with intra-cluster XOR aggregation (each remote cluster ships one
+    # pre-folded block), cross traffic is <= t-1 — the paper's §3.3 claim
+    for b in range(code.n):
+        plan = single_recovery_plan(code, b)
+        assert plan.xor_only
+        agg = relaxed_pl.cross_cluster_cost(b, plan.sources, aggregate=True)
+        assert agg <= 2 - 1, (b, agg)
+    assert relaxed_pl.tolerates_one_cluster_failure()

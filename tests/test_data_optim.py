@@ -1,0 +1,78 @@
+"""Data pipeline determinism + optimizer behaviour + grad compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import DataConfig, SyntheticTokenDataset
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         compress_grads, cosine_lr, decompress_grads,
+                         global_norm)
+
+
+def test_data_deterministic_and_seekable():
+    cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=8, seed=3)
+    ds1 = SyntheticTokenDataset(cfg)
+    ds2 = SyntheticTokenDataset(cfg)
+    t1, l1 = ds1.batch(17)
+    t2, l2 = ds2.batch(17)          # fresh instance, same (seed, step)
+    assert np.array_equal(t1, t2) and np.array_equal(l1, l2)
+    t3, _ = ds1.batch(18)
+    assert not np.array_equal(t1, t3)
+    # labels are the shifted stream
+    assert np.array_equal(t1[:, 1:], l1[:, :-1])
+
+
+def test_data_host_sharding_partitions_batch():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=8)
+    ds = SyntheticTokenDataset(cfg)
+    h0 = ds.batch(0, host_id=0, num_hosts=2)[0]
+    h1 = ds.batch(0, host_id=1, num_hosts=2)[0]
+    assert h0.shape == (4, 16) and h1.shape == (4, 16)
+    assert not np.array_equal(h0, h1)
+
+
+def test_adamw_converges_quadratic():
+    """AdamW drives ||w - target|| down on a quadratic."""
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(32,)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((32,), jnp.bfloat16)}
+    cfg = AdamWConfig(lr=0.1, warmup_steps=5, total_steps=200,
+                      weight_decay=0.0)
+    opt = adamw_init(params)
+    for _ in range(200):
+        w = opt["master"]["w"]
+        grads = {"w": (w - target)}
+        params, opt, stats = adamw_update(grads, opt, cfg)
+    err = float(jnp.abs(opt["master"]["w"] - target).max())
+    assert err < 0.05, err
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    assert float(cosine_lr(cfg, jnp.int32(0))) == 0.0
+    assert abs(float(cosine_lr(cfg, jnp.int32(10))) - 1.0) < 1e-6
+    assert abs(float(cosine_lr(cfg, jnp.int32(100))) - 0.1) < 1e-6
+    mid = float(cosine_lr(cfg, jnp.int32(55)))
+    assert 0.1 < mid < 1.0
+
+
+def test_grad_clipping_caps_norm():
+    g = {"a": jnp.full((100,), 10.0)}
+    cfg = AdamWConfig(clip_norm=1.0, lr=0.0, weight_decay=0.0)
+    opt = adamw_init({"a": jnp.zeros((100,), jnp.bfloat16)})
+    _, _, stats = adamw_update(g, opt, cfg)
+    assert float(stats["grad_norm"]) > 99.0   # reported pre-clip norm
+
+
+def test_compress_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    grads = {"w": jnp.asarray(rng.normal(size=(64, 64)), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(8,)) * 1e-3, jnp.float32)}
+    ints, scales = compress_grads(grads)
+    assert all(l.dtype == jnp.int8 for l in jax.tree_util.tree_leaves(ints))
+    back = decompress_grads(ints, scales)
+    for k in grads:
+        amax = float(jnp.abs(grads[k]).max())
+        err = float(jnp.abs(back[k] - grads[k]).max())
+        assert err <= amax / 127.0 * 0.51 + 1e-9, (k, err)

@@ -1,0 +1,77 @@
+"""Loop-aware static HLO cost analysis: trip counts, dot FLOPs,
+collective multiplication — validated on a real compiled module."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import analyze, parse_module
+
+
+def _hlo_of(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_flops_are_trip_multiplied():
+    """A 7-iteration scan of a (64x64)@(64x64) matmul must cost ~7x the
+    single matmul (2*64^3 each)."""
+    w = jnp.ones((64, 64), jnp.float32)
+
+    def body(x, _):
+        return x @ w, None
+
+    def fn(x):
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    x = jnp.ones((64, 64), jnp.float32)
+    cost = analyze(_hlo_of(fn, x))
+    expect = 7 * 2 * 64 ** 3
+    assert expect * 0.9 <= cost.flops <= expect * 1.6, cost.flops
+
+
+def test_nested_scan_multiplies():
+    w = jnp.ones((32, 32), jnp.float32)
+
+    def inner(x, _):
+        return x @ w, None
+
+    def outer(x, _):
+        y, _ = jax.lax.scan(inner, x, None, length=3)
+        return y, None
+
+    def fn(x):
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    x = jnp.ones((32, 32), jnp.float32)
+    cost = analyze(_hlo_of(fn, x))
+    expect = 15 * 2 * 32 ** 3
+    assert expect * 0.9 <= cost.flops <= expect * 1.8, cost.flops
+
+
+def test_plain_dot_flops():
+    def fn(a, b):
+        return a @ b
+
+    a = jnp.ones((128, 256), jnp.float32)
+    b = jnp.ones((256, 64), jnp.float32)
+    cost = analyze(_hlo_of(fn, a, b))
+    expect = 2 * 128 * 256 * 64
+    assert expect * 0.99 <= cost.flops <= expect * 1.01, cost.flops
+
+
+def test_parse_module_handles_tuple_params():
+    """While bodies have tuple-typed parameters (nested parens) — the
+    header regex must not skip them (regression: silently dropped every
+    loop body -> flops undercounted by the layer count)."""
+    def fn(x):
+        def body(c, _):
+            return c * 2.0, None
+        y, _ = jax.lax.scan(body, x, None, length=4)
+        return y
+
+    hlo = _hlo_of(fn, jnp.ones((8, 128), jnp.float32))
+    comps = parse_module(hlo)
+    whiles = [i for c in comps.values() for i in c.instrs if i.op == "while"]
+    assert len(whiles) >= 1

@@ -1,0 +1,77 @@
+"""Launch layer: cell enumeration, HLO collective parser, specs sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_archs, get_config
+from repro.launch.hlo import collective_stats, count_ops
+from repro.launch.shapes import SHAPES, all_cells, cell_status, runnable_cells
+
+
+def test_cell_accounting():
+    cells = all_cells()
+    assert len(cells) == 40
+    runnable = runnable_cells()
+    # DESIGN.md: 40 − 8 long_500k full-attn skips − 1 hubert decode = 31
+    assert len(runnable) == 31
+    skipped = [(a, s, st) for a, s, st in cells if st != "run"]
+    assert len(skipped) == 9
+    assert all("skip" in st for _, _, st in skipped)
+
+
+def test_subquadratic_archs_run_long_context():
+    assert cell_status("rwkv6-7b", "long_500k") == "run"
+    assert cell_status("recurrentgemma-9b", "long_500k") == "run"
+    assert "skip" in cell_status("llama3.2-3b", "long_500k")
+    assert "skip" in cell_status("hubert-xlarge", "decode_32k")
+
+
+HLO_SAMPLE = """
+  %all-gather.25 = f32[1280,320]{1,0} all-gather(%fusion.5), channel_id=11, replica_groups=[16,16]<=[16,16]T(1,0), dimensions={0}, use_global_device_ids=true
+  %all-reduce.3 = bf16[1024]{0} all-reduce(%x), channel_id=2, replica_groups=[2,256]<=[512], to_apply=%add
+  %cp = f32[8,128]{1,0} collective-permute(%y), source_target_pairs={{0,1},{1,0}}
+  %ar2 = (f32[64]{0}, f32[32]{0}) all-reduce(%a, %b), replica_groups={{0,1,2,3}}, to_apply=%add
+"""
+
+
+def test_collective_parser_bytes():
+    cs = collective_stats(HLO_SAMPLE, pod_size=256)
+    assert cs.bytes_by_op["all-gather"] == 1280 * 320 * 4
+    assert cs.bytes_by_op["all-reduce"] == 1024 * 2 + (64 + 32) * 4
+    assert cs.count_by_op["all-reduce"] == 2
+    assert cs.bytes_by_op["collective-permute"] == 8 * 128 * 4
+    # the [2,256]<=[512] iota groups are {0..255},{256..511}: pod-local
+    assert cs.cross_pod_bytes == 0
+    assert cs.group_size_by_op["all-reduce"] == 256
+
+
+def test_collective_parser_cross_pod():
+    hlo = ("  %ar = f32[100]{0} all-reduce(%x), "
+           "replica_groups=[256,2]<=[2,256]T(1,0), to_apply=%add\n")
+    cs = collective_stats(hlo, pod_size=256)
+    # groups pair device i with i+256: every group spans both pods
+    assert cs.cross_pod_bytes == 400
+
+
+def test_specs_build_for_every_runnable_cell():
+    """cell_args produces abstract args + shardings without device state
+    (uses a fake 1-device mesh: guards drop everything, shapes remain)."""
+    from repro.launch.specs import cell_args
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for arch, shape in runnable_cells():
+        cfg = get_config(arch)
+        kind, args, shards, donate = cell_args(cfg, SHAPES[shape], mesh)
+        assert kind in ("train", "prefill", "encode", "decode")
+        flat_args = jax.tree_util.tree_leaves(args)
+        assert all(hasattr(a, "shape") for a in flat_args)
+        # shardings tree must cover args tree
+        flat_sh = jax.tree_util.tree_leaves(shards)
+        assert len(flat_sh) == len(flat_args), (arch, shape)
+
+
+def test_op_audit_counts():
+    hlo = ("  %r = f32[2,2]{1,0} reshape(%x)\n"
+           "  %t = f32[2,2]{1,0} transpose(%r), dimensions={1,0}\n")
+    c = count_ops(hlo, ("reshape", "transpose", "copy"))
+    assert c == {"reshape": 1, "transpose": 1, "copy": 0}
