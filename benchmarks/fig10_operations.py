@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.ckpt.store import BlockStore, ClusterTopology
 from repro.ckpt.stripe import StripeCodec
-from repro.core.codec import single_recovery_plan
+from repro.core.codec import plans_for
 from repro.core.placement import default_placement
 
 from .common import (BLOCK_SIZE, NetModel, all_codes, ALL_SCHEMES, fmt_table,
@@ -40,7 +40,11 @@ def bench_scheme(scheme: str, block_size: int = BENCH_BLOCK,
     for name, code in all_codes(scheme).items():
         placement = default_placement(code)
         clusters = placement.num_clusters
-        topo = ClusterTopology(clusters, max(4, code.n // clusters + 2))
+        # Size clusters to the placement's densest cluster so every block
+        # of a stripe gets its own node (StripeCodec enforces this).
+        max_occupancy = max(len(placement.cluster_blocks(c))
+                            for c in range(clusters))
+        topo = ClusterTopology(clusters, max(4, max_occupancy + 2))
         store = BlockStore(topo)
         codec = StripeCodec(code, store, block_size=block_size,
                             placement=placement)
@@ -68,7 +72,7 @@ def bench_scheme(scheme: str, block_size: int = BENCH_BLOCK,
         # decode compute measured on a sample of blocks; network modeled for
         # all k (the decode kernel is identical across same-cost plans)
         for b in range(code.k):
-            plan = single_recovery_plan(code, b)
+            plan = plans_for(code)[b]
             home = placement.assignment[b]
             per = traffic_of_read(placement, plan.sources, home, nb)
             t_net = net.recovery_seconds(per)
@@ -87,7 +91,7 @@ def bench_scheme(scheme: str, block_size: int = BENCH_BLOCK,
         # --- reconstruction: every block, averaged throughput -------------
         recon = []
         for b in range(code.n):
-            plan = single_recovery_plan(code, b)
+            plan = plans_for(code)[b]
             home = placement.assignment[b]
             per = traffic_of_read(placement, plan.sources, home, nb)
             recon.append(net.recovery_seconds(per))
@@ -98,7 +102,7 @@ def bench_scheme(scheme: str, block_size: int = BENCH_BLOCK,
         node = store.node_of(meta.stripe_id, 0)
         lost = store.blocks_on_node(node)
         t_node = max((net.recovery_seconds(traffic_of_read(
-            placement, single_recovery_plan(code, b).sources,
+            placement, plans_for(code)[b].sources,
             placement.assignment[b], nb)) for (_, b) in lost),
             default=0.0)
         node_MBps = (len(lost) * nb / 1e6 / t_node) if t_node else 0.0

@@ -14,7 +14,7 @@ import time
 
 import numpy as np
 
-from repro.core.codec import single_recovery_plan
+from repro.core.codec import plans_for
 from repro.core.placement import default_placement
 from repro.kernels import ops
 
@@ -32,7 +32,7 @@ def recon_vs_bandwidth(scheme: str = "180-of-210") -> list[dict]:
             net = NetModel(cross_Bps=gbps_to_Bps(gbps))
             ts = []
             for b in range(code.n):
-                plan = single_recovery_plan(code, b)
+                plan = plans_for(code)[b]
                 per = traffic_of_read(placement, plan.sources,
                                       placement.assignment[b], BLOCK_SIZE)
                 ts.append(net.recovery_seconds(per))
@@ -50,7 +50,7 @@ def decode_throughput(block_mb: int = 1) -> list[dict]:
     rows = []
     for scheme in ALL_SCHEMES:
         for name, code in all_codes(scheme).items():
-            plan = single_recovery_plan(code, 0)     # first data block
+            plan = plans_for(code)[0]     # first data block
             blocks = {s: rng.integers(0, 256, size=B, dtype=np.uint8)
                       for s in plan.sources}
             ops.recover_single(plan, blocks).block_until_ready()  # warm

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.codec import single_recovery_plan
+from repro.core.codec import plans_for
 from repro.core.placement import default_placement
 
 from .common import (BLOCK_SIZE, NetModel, all_codes, fmt_table,
@@ -43,7 +43,7 @@ def simulate(scheme: str = "180-of-210", seed: int = 0):
             normal.append(net.transfer_seconds(per))
             # degraded: first block unavailable -> group recovery, then
             # the object read (recovered block shipped with the rest)
-            plan = single_recovery_plan(code, blocks[0])
+            plan = plans_for(code)[blocks[0]]
             home = placement.assignment[blocks[0]]
             rec_per = traffic_of_read(placement, plan.sources, home,
                                       BLOCK_SIZE)

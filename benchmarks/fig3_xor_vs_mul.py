@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.codec import all_recovery_plans
+from repro.core.codec import plans_for
 from repro.kernels import ops
 
 from .common import ALL_SCHEMES, all_codes, fmt_table, save_result, timed
@@ -42,7 +42,7 @@ def decode_op_counts():
     rows = []
     for scheme in ALL_SCHEMES:
         for name, code in all_codes(scheme).items():
-            plans = all_recovery_plans(code)
+            plans = plans_for(code)
             xors = np.mean([p.cost - 1 for p in plans])
             muls = np.mean([sum(1 for c in p.coeffs if c != 1)
                             for p in plans])

@@ -21,7 +21,7 @@ def main():
 
     from . import (fig3_xor_vs_mul, fig5_tradeoff, fig8_locality,
                    fig10_operations, fig11_bandwidth, fig12_workload,
-                   roofline, table4_mttdl)
+                   fig_batched_recovery, roofline, table4_mttdl)
     suites = [
         ("fig5_tradeoff", fig5_tradeoff.main),
         ("fig8_locality", fig8_locality.main),
@@ -33,6 +33,7 @@ def main():
         suites += [
             ("fig3_xor_vs_mul", fig3_xor_vs_mul.main),
             ("fig11_bandwidth", fig11_bandwidth.main),
+            ("fig_batched_recovery", fig_batched_recovery.main),
         ]
     suites.append(("roofline", roofline.main))
 

@@ -118,25 +118,20 @@ class CheckpointManager:
     def reconstruct_failures(self) -> int:
         """Rebuild all blocks on failed nodes onto healthy same-cluster
         nodes; heals the store's redundancy level. Returns blocks rebuilt."""
-        rebuilt = 0
         for node in sorted(self.store.failed_nodes):
             self.store.delete_node_blocks(node)  # disks are gone
             self.store.heal_node(node)           # slot replaced by fresh node
             # all lost blocks are rebuilt from group survivors
-        # blocks whose (stripe, b) index vanished need re-encode from plans:
+        # blocks whose (stripe, b) index vanished are rebuilt by the
+        # codec's batched plan-grouped engine (one launch per lost block
+        # id across all stripes) and re-placed co-location-safely.
+        missing: list[tuple[int, int]] = []
         for step, sv in self._saved.items():
             for meta in sv.metas:
                 for b in range(self.code.n):
                     if (meta.stripe_id, b) not in self.store._block_node:
-                        data = self.codec.degraded_read(meta, b)
-                        cluster = self.codec.placement.assignment[b]
-                        for slot in range(self.store.topo.nodes_per_cluster):
-                            cand = self.store.topo.node_of(cluster, slot)
-                            if cand not in self.store.failed_nodes:
-                                self.store.put(meta.stripe_id, b, cand, data)
-                                rebuilt += 1
-                                break
-        return rebuilt
+                        missing.append((meta.stripe_id, b))
+        return self.codec.rebuild_blocks(missing) if missing else 0
 
     def verify(self, step: int) -> bool:
         """Every stripe decodes to the stored payload length; parities

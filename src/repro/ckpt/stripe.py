@@ -15,6 +15,12 @@ Implements the paper's basic operations (§4.1) over checkpoint bytes:
 
 The bulk byte path runs on the JAX kernels (kernels/ops.py): encode via the
 MXU bit-plane GF matmul, single-failure decode via the VPU XOR kernel.
+Multi-stripe operations (write, read_all, reconstruct_node) group work by
+recovery plan and drive the stripe-batched kernels: one encode launch per
+write() call, one XOR-fold launch per failed-node group — S stripes cost
+one launch, not S. Plans come from the memoized layer in core.codec
+(plans_for / decode_plan_cached), so the GF Gaussian elimination runs once
+per (code, erasure pattern), not once per stripe.
 choose_code() picks (α, z) for a topology + target rate, MTTDL-checked.
 """
 from __future__ import annotations
@@ -25,7 +31,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.codec import decode_plan, single_recovery_plan
+from repro.core.codec import decode_plan_cached, plans_for
 from repro.core.codes import Code, make_unilrc
 from repro.core.metrics import locality_metrics
 from repro.core.mttdl import MTTDLParams, code_mttdl_years
@@ -43,21 +49,51 @@ class StripeMeta:
 
 
 class StripeCodec:
-    """Encode/decode byte buffers as stripes of a given Code on a store."""
+    """Encode/decode byte buffers as stripes of a given Code on a store.
+
+    `max_batch_stripes` caps how many stripes ride one batched kernel
+    launch: peak memory for encode is ~max_batch_stripes * n * block_size
+    bytes (host staging + codeword array), so an unbounded batch over a
+    checkpoint-scale buffer would OOM where the launch count barely
+    changes. 64 stripes of 1 MiB blocks ≈ 13 GiB codeword ceiling for the
+    widest paper code; launches stay at ceil(S/64) instead of S."""
 
     def __init__(self, code: Code, store: BlockStore, *,
                  block_size: int = 1 << 20,
                  placement: Optional[Placement] = None,
-                 use_kernels: bool = True):
+                 use_kernels: bool = True,
+                 max_batch_stripes: int = 64):
         self.code = code
         self.store = store
         self.block_size = block_size
         self.placement = placement or default_placement(code)
         self.use_kernels = use_kernels
+        if max_batch_stripes < 1:
+            raise ValueError("max_batch_stripes must be >= 1")
+        self.max_batch_stripes = max_batch_stripes
         if self.placement.num_clusters > store.topo.num_clusters:
             raise ValueError(
                 f"{code.name} needs {self.placement.num_clusters} clusters; "
                 f"topology has {store.topo.num_clusters}")
+        # Slot assignment is `index-within-cluster + stripe_id (mod
+        # nodes_per_cluster)`: if a cluster holds more stripe blocks than
+        # it has nodes, two blocks of one local group silently share a node
+        # and a single node failure becomes a multi-erasure — reject early.
+        # The same pass records each block's (cluster, index-within-cluster)
+        # so per-block placement is a lookup, not an O(n) scan.
+        npc = store.topo.nodes_per_cluster
+        self._block_slot: list[tuple[int, int]] = [(-1, -1)] * code.n
+        for c in range(self.placement.num_clusters):
+            members = self.placement.cluster_blocks(c)
+            if len(members) > npc:
+                raise ValueError(
+                    f"{code.name} placement '{self.placement.name}' puts "
+                    f"{len(members)} blocks of one stripe in cluster {c}, "
+                    f"but the topology has only {npc} nodes per cluster — "
+                    f"slot wraparound would co-locate local-group members "
+                    f"on one node and break single-node fault tolerance")
+            for idx, b in enumerate(members):
+                self._block_slot[b] = (c, idx)
         self._stripes: dict[int, StripeMeta] = {}
 
     # -- encode / write ------------------------------------------------------
@@ -67,33 +103,48 @@ class StripeCodec:
             return np.asarray(ops.encode(self.code, data_blocks))
         return self.code.encode(data_blocks)
 
+    def _encode_many(self, data: np.ndarray) -> np.ndarray:
+        """(S, k, B) uint8 -> (S, n, B): all stripes in ONE kernel launch."""
+        if self.use_kernels:
+            return np.asarray(ops.encode_many(self.code, data))
+        S, k, bs = data.shape
+        flat = np.ascontiguousarray(data.transpose(1, 0, 2)).reshape(k, -1)
+        cw = self.code.encode(flat)                         # (n, S*bs)
+        return cw.reshape(self.code.n, S, bs).transpose(1, 0, 2)
+
     def _node_for(self, stripe_id: int, block: int) -> int:
-        cluster = self.placement.assignment[block]
         # Rotate slots by stripe id so parity work spreads over nodes.
-        within = [b for b in range(self.code.n)
-                  if self.placement.assignment[b] == cluster]
-        slot = within.index(block) + stripe_id
-        return self.store.topo.node_of(cluster, slot)
+        cluster, idx = self._block_slot[block]
+        return self.store.topo.node_of(cluster, idx + stripe_id)
 
     def write(self, buf: bytes, *, start_stripe: int = 0) -> list[StripeMeta]:
-        """Stripe `buf` into ceil(len/k/bs) stripes starting at start_stripe."""
+        """Stripe `buf` into ceil(len/k/bs) stripes starting at start_stripe.
+
+        Stripes are encoded in batched kernel launches of up to
+        `max_batch_stripes` each (stripe-batch grid dimension) — one launch
+        for typical writes, ceil(S/max_batch_stripes) for huge buffers —
+        then placed block by block. Per-batch staging bounds peak memory."""
         k, bs = self.code.k, self.block_size
         stripe_payload = k * bs
+        nstripes = max(1, math.ceil(len(buf) / stripe_payload))
         metas = []
-        sid = start_stripe
-        for off in range(0, max(len(buf), 1), stripe_payload):
-            chunk = buf[off:off + stripe_payload]
-            padded = np.zeros(stripe_payload, dtype=np.uint8)
+        for batch_start in range(0, nstripes, self.max_batch_stripes):
+            batch_n = min(self.max_batch_stripes, nstripes - batch_start)
+            chunk = buf[batch_start * stripe_payload:
+                        (batch_start + batch_n) * stripe_payload]
+            padded = np.zeros(batch_n * stripe_payload, dtype=np.uint8)
             padded[:len(chunk)] = np.frombuffer(chunk, np.uint8)
-            data_blocks = padded.reshape(k, bs)
-            codeword = self._encode(data_blocks)
-            for b in range(self.code.n):
-                self.store.put(sid, b, self._node_for(sid, b),
-                               codeword[b].tobytes())
-            meta = StripeMeta(sid, len(chunk), bs)
-            self._stripes[sid] = meta
-            metas.append(meta)
-            sid += 1
+            codewords = self._encode_many(padded.reshape(batch_n, k, bs))
+            for i in range(batch_n):
+                sid = start_stripe + batch_start + i
+                for b in range(self.code.n):
+                    self.store.put(sid, b, self._node_for(sid, b),
+                                   codewords[i, b].tobytes())
+                nbytes = min(max(len(buf) - (batch_start + i)
+                                 * stripe_payload, 0), stripe_payload)
+                meta = StripeMeta(sid, nbytes, bs)
+                self._stripes[sid] = meta
+                metas.append(meta)
         return metas
 
     # -- reads ---------------------------------------------------------------
@@ -121,7 +172,7 @@ class StripeCodec:
         general multi-erasure decode.
         """
         sid = meta.stripe_id
-        plan = single_recovery_plan(self.code, block)
+        plan = plans_for(self.code)[block]
         if all(self.store.available(sid, s) for s in plan.sources):
             blocks = {s: np.frombuffer(
                 self.store.get(sid, s, reader_cluster=reader_cluster),
@@ -134,7 +185,7 @@ class StripeCodec:
                   if not self.store.available(sid, b)]
         if block not in erased:
             erased.append(block)
-        dplan = decode_plan(self.code, tuple(erased))
+        dplan = decode_plan_cached(self.code, tuple(erased))
         blocks = {s: np.frombuffer(
             self.store.get(sid, s, reader_cluster=reader_cluster), np.uint8)
             for s in dplan.sources}
@@ -204,34 +255,155 @@ class StripeCodec:
             touched += 1
         return touched
 
+    # -- batched recovery engine --------------------------------------------
+    def _meta_for(self, sid: int) -> StripeMeta:
+        meta = self._stripes.get(sid)
+        if meta is None:
+            meta = StripeMeta(sid, self.code.k * self.block_size,
+                              self.block_size)
+        return meta
+
+    def _recover_batched(self, pairs: list[tuple[int, int]], *,
+                         reader_cluster: Optional[int] = None,
+                         strict: bool = True
+                         ) -> dict[tuple[int, int], bytes]:
+        """Recover many (stripe, block) pairs, grouped by recovery plan.
+
+        Pairs share a plan iff they target the same block id (slot rotation
+        moves blocks across nodes per stripe, but the code structure — and
+        hence the minimal plan — depends only on the block). Each group
+        whose plan sources are all alive is recovered with ONE batched
+        kernel launch (XOR-fold for UniLRC's XOR-only plans); stripes with
+        additionally failed sources fall back to the per-stripe
+        multi-erasure path. With strict=False an unrecoverable pair is
+        omitted from the result instead of aborting the whole batch (reads
+        must raise; repair should heal everything it can)."""
+        out: dict[tuple[int, int], bytes] = {}
+        by_block: dict[int, list[int]] = {}
+        for sid, b in pairs:
+            by_block.setdefault(b, []).append(sid)
+        for b, sids in sorted(by_block.items()):
+            plan = plans_for(self.code)[b]
+            fast = [sid for sid in sids
+                    if all(self.store.available(sid, s)
+                           for s in plan.sources)]
+            fast_set = set(fast)
+            slow = [sid for sid in sids if sid not in fast_set]
+            for i0 in range(0, len(fast), self.max_batch_stripes):
+                batch = fast[i0:i0 + self.max_batch_stripes]
+                stacked = {
+                    s: np.stack([np.frombuffer(
+                        self.store.get(sid, s,
+                                       reader_cluster=reader_cluster),
+                        np.uint8) for sid in batch])
+                    for s in plan.sources}
+                if self.use_kernels:
+                    rec = np.asarray(ops.recover_many(plan, stacked))
+                else:
+                    rec = plan.apply(stacked)   # broadcasts over (S, B)
+                for i, sid in enumerate(batch):
+                    out[(sid, b)] = rec[i].tobytes()
+            for sid in slow:
+                try:
+                    out[(sid, b)] = self.degraded_read(
+                        self._meta_for(sid), b,
+                        reader_cluster=reader_cluster)
+                except (ValueError, NodeFailure):
+                    if strict:
+                        raise
+        return out
+
     # -- reconstruction ------------------------------------------------------
+    def _pick_rebuild_node(self, sid: int, block: int,
+                           occupied: set[int], exclude: int) -> Optional[int]:
+        """Live node of `block`'s home cluster holding no other block of
+        stripe `sid` (preserving the single-node fault-tolerance invariant
+        the constructor validates); falls back to a live co-located node
+        only when the cluster has no free node left, and None only when
+        the whole cluster is down."""
+        cluster = self.placement.assignment[block]
+        fallback = None
+        for slot in range(self.store.topo.nodes_per_cluster):
+            cand = self.store.topo.node_of(cluster, slot)
+            if cand in self.store.failed_nodes or cand == exclude:
+                continue
+            if cand in occupied:
+                if fallback is None:
+                    fallback = cand
+                continue
+            return cand
+        return fallback
+
+    def rebuild_blocks(self, pairs: list[tuple[int, int]], *,
+                       reader_cluster: Optional[int] = None,
+                       exclude_node: int = -1) -> int:
+        """Recover lost (stripe, block) pairs with the batched plan-grouped
+        engine and re-place each on a live node of its home cluster.
+        Returns #blocks placed; a pair is dropped (not fatal) when its
+        entire cluster is down or its stripe's erasure pattern is currently
+        beyond the code's tolerance — repair heals everything it can."""
+        pairs = list(dict.fromkeys(pairs))   # duplicates would double-place
+        recovered = self._recover_batched(pairs,
+                                          reader_cluster=reader_cluster,
+                                          strict=False)
+        needed = {sid for sid, _b in pairs}
+        occupied: dict[int, set[int]] = {}
+        for (s2, _b2), nd in self.store._block_node.items():
+            if s2 in needed:
+                occupied.setdefault(s2, set()).add(nd)
+        placed = 0
+        for (sid, b) in pairs:
+            data = recovered.get((sid, b))
+            if data is None:                 # unrecoverable right now
+                continue
+            occ = occupied.setdefault(sid, set())
+            cand = self._pick_rebuild_node(sid, b, occ, exclude_node)
+            if cand is None:
+                continue
+            self.store.put(sid, b, cand, data)
+            occ.add(cand)
+            placed += 1
+        return placed
+
     def reconstruct_node(self, node: int) -> int:
-        """Rebuild every block the failed node held, re-placing each on the
-        next free slot of its home cluster. Returns #blocks rebuilt."""
-        lost = [key for key in list(self.store._block_node)
-                if self.store._block_node[key] == node]
-        rebuilt = 0
+        """Rebuild every block the failed node held, re-placing each on a
+        free node of its home cluster. Returns #blocks rebuilt.
+
+        Lost blocks are grouped by recovery plan and rebuilt with one
+        batched kernel launch per group — a failed node holds one block per
+        stripe, so healing S stripes costs #distinct-blocks launches, not
+        S."""
+        lost = self.store.blocks_on_node(node)
         cluster = self.store.topo.cluster_of(node)
-        for (sid, b) in lost:
-            meta = self._stripes.get(sid)
-            if meta is None:
-                meta = StripeMeta(sid, self.code.k * self.block_size,
-                                  self.block_size)
-            data = self.degraded_read(meta, b, reader_cluster=cluster)
-            # place on a live node of the same cluster (keep topology local)
-            for slot in range(self.store.topo.nodes_per_cluster):
-                cand = self.store.topo.node_of(
-                    self.placement.assignment[b], slot)
-                if cand not in self.store.failed_nodes and cand != node:
-                    self.store.put(sid, b, cand, data)
-                    rebuilt += 1
-                    break
-        return rebuilt
+        return self.rebuild_blocks(lost, reader_cluster=cluster,
+                                   exclude_node=node)
 
     def read_all(self, metas: list[StripeMeta], *,
                  reader_cluster: Optional[int] = None) -> bytes:
-        return b"".join(self.normal_read(m, reader_cluster=reader_cluster)
-                        for m in metas)
+        """Read every stripe's data blocks; unavailable blocks across all
+        stripes are recovered by the batched plan-grouped engine rather
+        than one kernel launch per stripe."""
+        k = self.code.k
+        direct: dict[tuple[int, int], bytes] = {}
+        missing: list[tuple[int, int]] = []
+        for meta in metas:
+            for b in range(k):
+                if self.store.available(meta.stripe_id, b):
+                    direct[(meta.stripe_id, b)] = self.store.get(
+                        meta.stripe_id, b, reader_cluster=reader_cluster)
+                else:
+                    missing.append((meta.stripe_id, b))
+        recovered = (self._recover_batched(missing,
+                                           reader_cluster=reader_cluster)
+                     if missing else {})
+        parts = []
+        for meta in metas:
+            sid = meta.stripe_id
+            buf = b"".join(
+                direct[(sid, b)] if (sid, b) in direct
+                else recovered[(sid, b)] for b in range(k))
+            parts.append(buf[:meta.nbytes])
+        return b"".join(parts)
 
 
 def choose_code(topo: ClusterTopology, *, target_rate: float = 0.85,

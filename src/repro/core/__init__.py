@@ -1,8 +1,9 @@
 """UniLRC core: the paper's contribution (wide LRCs with unified locality)."""
 from .codes import (ALL_SCHEMES, Code, cauchy_matrix, make_alrc, make_olrc,
                     make_rs, make_ulrc, make_unilrc, paper_schemes)
-from .codec import (DecodePlan, RecoveryPlan, all_recovery_plans, decode_plan,
-                    single_recovery_plan, verify_erasure_tolerance)
+from .codec import (DecodePlan, RecoveryPlan, all_recovery_plans,
+                    clear_plan_caches, decode_plan, decode_plan_cached,
+                    plans_for, single_recovery_plan, verify_erasure_tolerance)
 from .metrics import LocalityMetrics, locality_metrics, recovery_locality
 from .mttdl import (MTTDLParams, code_mttdl_years, effective_recovery_traffic,
                     mttdl_years_stripe, tolerable_failures)
@@ -12,7 +13,8 @@ from .placement import (Placement, default_placement, place_ecwide,
 __all__ = [
     "ALL_SCHEMES", "Code", "cauchy_matrix", "make_alrc", "make_olrc",
     "make_rs", "make_ulrc", "make_unilrc", "paper_schemes", "DecodePlan",
-    "RecoveryPlan", "all_recovery_plans", "decode_plan",
+    "RecoveryPlan", "all_recovery_plans", "clear_plan_caches", "decode_plan",
+    "decode_plan_cached", "plans_for",
     "single_recovery_plan", "verify_erasure_tolerance", "LocalityMetrics",
     "locality_metrics", "recovery_locality", "MTTDLParams",
     "code_mttdl_years", "effective_recovery_traffic", "mttdl_years_stripe",

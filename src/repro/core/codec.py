@@ -10,7 +10,6 @@ exactly how production EC libraries (ISA-L et al.) structure it.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import numpy as np
 
@@ -40,11 +39,6 @@ class RecoveryPlan:
             term = blocks[s] if c == 1 else GF_MUL_TABLE[np.uint8(c), blocks[s]]
             out = term.copy() if out is None else out ^ term
         return out
-
-
-@functools.lru_cache(maxsize=None)
-def _plans_cached(code_key: tuple, checks_bytes: bytes, n: int) -> tuple:
-    raise RuntimeError("internal")  # placeholder; plans built per-code below
 
 
 def single_recovery_plan(code: Code, target: int) -> RecoveryPlan:
@@ -235,6 +229,82 @@ def decode_plan(code: Code, erased: tuple[int, ...] | list[int]) -> DecodePlan:
         for s, c in plan_rows[t].items():
             M[i, src_pos[s]] = c
     return DecodePlan(erased, tuple(sources), M)
+
+
+# ---------------------------------------------------------------------------
+# Plan cache — the metadata layer is computed once per (code, pattern).
+#
+# `Code` holds numpy arrays so it is neither hashable nor weakref-safe under
+# the generated dataclass __eq__; the cache is keyed by code *content*
+# (name + dimensions + coefficient bytes), so two equal constructions share
+# one cache entry. Plan construction runs GF Gaussian elimination — tiny in
+# absolute terms, but on the repair hot path it used to run once per stripe.
+# ---------------------------------------------------------------------------
+
+class _PlanCache:
+    __slots__ = ("singles", "decodes")
+
+    def __init__(self):
+        self.singles: tuple[RecoveryPlan, ...] | None = None
+        self.decodes: dict[tuple[int, ...], DecodePlan] = {}
+
+
+_PLAN_CACHES: dict[tuple, _PlanCache] = {}
+_MAX_CODES = 64            # parameter sweeps construct many distinct codes
+_MAX_DECODE_PLANS = 4096   # per code; long failure-injection runs vary patterns
+
+
+def _code_key(code: Code) -> tuple:
+    return (code.name, code.n, code.k,
+            code.A.tobytes(), code.checks.tobytes())
+
+
+def _cache_for(code: Code) -> _PlanCache:
+    key = _code_key(code)
+    cache = _PLAN_CACHES.get(key)
+    if cache is None:
+        if len(_PLAN_CACHES) >= _MAX_CODES:       # FIFO bound, like the
+            _PLAN_CACHES.pop(next(iter(_PLAN_CACHES)))  # kernel a_bits cache
+        cache = _PLAN_CACHES[key] = _PlanCache()
+    return cache
+
+
+def plans_for(code: Code) -> tuple[RecoveryPlan, ...]:
+    """All single-failure recovery plans for `code`, built once and memoized.
+
+    `plans_for(code)[i]` is the minimal plan for block i — same contents as
+    `single_recovery_plan(code, i)` but cached, so the stripe layer can ask
+    per block per stripe without re-scanning the check matrix."""
+    cache = _cache_for(code)
+    if cache.singles is None:
+        cache.singles = tuple(all_recovery_plans(code))
+    return cache.singles
+
+
+def decode_plan_cached(code: Code,
+                       erased: tuple[int, ...] | list[int]) -> DecodePlan:
+    """Memoized `decode_plan`: one Gaussian elimination per (code, pattern).
+
+    The pattern is normalized (sorted, deduplicated), and repeated calls
+    return the *identical* DecodePlan object — callers may key batched work
+    by plan identity. The cache is FIFO-bounded per code, so identity is
+    guaranteed only within a window of _MAX_DECODE_PLANS distinct
+    patterns."""
+    pattern = tuple(sorted(set(int(e) for e in erased)))
+    cache = _cache_for(code)
+    plan = cache.decodes.get(pattern)
+    if plan is None:
+        plan = decode_plan(code, pattern)
+        plan.M.setflags(write=False)   # shared object: no in-place poisoning
+        if len(cache.decodes) >= _MAX_DECODE_PLANS:
+            cache.decodes.pop(next(iter(cache.decodes)))
+        cache.decodes[pattern] = plan
+    return plan
+
+
+def clear_plan_caches() -> None:
+    """Drop every memoized plan (tests / long-lived processes)."""
+    _PLAN_CACHES.clear()
 
 
 def verify_erasure_tolerance(code: Code, num_erasures: int,

@@ -11,7 +11,7 @@ import dataclasses
 
 import numpy as np
 
-from .codec import all_recovery_plans
+from .codec import plans_for
 from .codes import Code
 from .placement import Placement
 
@@ -32,7 +32,7 @@ class LocalityMetrics:
 
 
 def locality_metrics(code: Code, placement: Placement) -> LocalityMetrics:
-    plans = all_recovery_plans(code)
+    plans = plans_for(code)
     k, n = code.k, code.n
 
     costs = np.array([p.cost for p in plans], dtype=float)
@@ -59,5 +59,5 @@ def locality_metrics(code: Code, placement: Placement) -> LocalityMetrics:
 
 def recovery_locality(code: Code) -> float:
     """r̄ — average blocks accessed for single-block recovery (§2.3.1)."""
-    plans = all_recovery_plans(code)
+    plans = plans_for(code)
     return float(np.mean([p.cost for p in plans]))

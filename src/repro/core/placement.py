@@ -49,13 +49,13 @@ class Placement:
 
     def tolerates_one_cluster_failure(self) -> bool:
         """Check every single-cluster wipe-out is decodable (used in tests)."""
-        from .codec import decode_plan
+        from .codec import decode_plan_cached
         for c in range(self.num_clusters):
             blocks = self.cluster_blocks(c)
             if not blocks:
                 continue
             try:
-                decode_plan(self.code, tuple(blocks))
+                decode_plan_cached(self.code, tuple(blocks))
             except ValueError:
                 return False
         return True
@@ -98,11 +98,11 @@ def place_ecwide(code: Code) -> Placement:
     still recoverable via the global parities) and splits the 9-wide groups
     in two. Distinct local groups do not share clusters.
     """
-    from .codec import decode_plan
+    from .codec import decode_plan_cached
 
     def _decodable(blocks: list[int]) -> bool:
         try:
-            decode_plan(code, tuple(blocks))
+            decode_plan_cached(code, tuple(blocks))
             return True
         except ValueError:
             return False

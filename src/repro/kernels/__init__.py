@@ -2,11 +2,21 @@
 
 gf_bitmatmul — GF(2^8) coding matmul as bit-plane binary matmul on the MXU.
 xor_reduce   — pure-VPU XOR fold (UniLRC's single-failure decode path).
-"""
-from .gf_bitmatmul import gf_bitmatmul
-from .xor_reduce import xor_reduce
-from .ops import (apply_decode, apply_matrix, default_interpret, encode,
-                  recover_single, xor_fold)
 
-__all__ = ["gf_bitmatmul", "xor_reduce", "apply_decode", "apply_matrix",
-           "default_interpret", "encode", "recover_single", "xor_fold"]
+Both have `_batched` variants with a leading stripe-batch grid dimension:
+S stripes of work run as ONE kernel launch (coefficient tile resident in
+VMEM across the batch) instead of S launches.
+"""
+from .gf_bitmatmul import gf_bitmatmul, gf_bitmatmul_batched
+from .xor_reduce import xor_reduce, xor_reduce_batched
+from .ops import (KERNEL_LAUNCHES, apply_decode, apply_decode_many,
+                  apply_matrix, apply_matrix_many, default_interpret, encode,
+                  encode_many, recover_many, recover_single,
+                  reset_kernel_launch_counts, xor_fold, xor_fold_many)
+
+__all__ = ["gf_bitmatmul", "gf_bitmatmul_batched", "xor_reduce",
+           "xor_reduce_batched", "KERNEL_LAUNCHES", "apply_decode",
+           "apply_decode_many", "apply_matrix", "apply_matrix_many",
+           "default_interpret", "encode", "encode_many", "recover_many",
+           "recover_single", "reset_kernel_launch_counts", "xor_fold",
+           "xor_fold_many"]

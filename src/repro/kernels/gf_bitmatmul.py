@@ -38,9 +38,8 @@ from jax.experimental import pallas as pl
 DEFAULT_BLOCK_B = 512
 
 
-def _kernel(a_bits_ref, data_ref, out_ref, *, m: int, k: int):
-    """One (k, Bt) -> (m, Bt) coding tile."""
-    data = data_ref[...]                                   # (k, Bt) uint8
+def _code_tile(a_bits, data, *, m: int, k: int):
+    """(8m, 8k) bit matrix x (k, Bt) byte tile -> (m, Bt) byte tile."""
     bt = data.shape[-1]
     # Unpack to bit-planes: row j*8 + b holds bit b of data row j (LSB-first,
     # matching gf.expand_coding_matrix_to_bits column order).
@@ -50,9 +49,8 @@ def _kernel(a_bits_ref, data_ref, out_ref, *, m: int, k: int):
         jax.lax.shift_right_logical(d32[:, None, :], shifts), 1)
     x_bits = bits.reshape(8 * k, bt).astype(jnp.float32)   # (8k, Bt)
 
-    a_bits = a_bits_ref[...].astype(jnp.float32)           # (8m, 8k)
     acc = jax.lax.dot_general(
-        a_bits, x_bits,
+        a_bits.astype(jnp.float32), x_bits,
         dimension_numbers=(((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)                # (8m, Bt)
     acc_i = acc.astype(jnp.int32) & 1                      # mod 2
@@ -61,7 +59,18 @@ def _kernel(a_bits_ref, data_ref, out_ref, *, m: int, k: int):
     acc3 = acc_i.reshape(m, 8, bt)
     weights = (jnp.int32(1) << jnp.arange(8, dtype=jnp.int32)).reshape(1, 8, 1)
     packed = jnp.sum(acc3 * weights, axis=1)               # (m, Bt) int32
-    out_ref[...] = packed.astype(jnp.uint8)
+    return packed.astype(jnp.uint8)
+
+
+def _kernel(a_bits_ref, data_ref, out_ref, *, m: int, k: int):
+    """One (k, Bt) -> (m, Bt) coding tile."""
+    out_ref[...] = _code_tile(a_bits_ref[...], data_ref[...], m=m, k=k)
+
+
+def _kernel_batched(a_bits_ref, data_ref, out_ref, *, m: int, k: int):
+    """One stripe's (1, k, Bt) -> (1, m, Bt) coding tile; A_bits resident
+    across the whole stripe-batch grid."""
+    out_ref[0] = _code_tile(a_bits_ref[...], data_ref[0], m=m, k=k)
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
@@ -91,5 +100,41 @@ def gf_bitmatmul(a_bits: jax.Array, data: jax.Array,
         ],
         out_specs=pl.BlockSpec((m, block_b), lambda b: (0, b)),
         out_shape=jax.ShapeDtypeStruct((m, B), jnp.uint8),
+        interpret=interpret,
+    )(a_bits, data)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def gf_bitmatmul_batched(a_bits: jax.Array, data: jax.Array,
+                         block_b: int = DEFAULT_BLOCK_B,
+                         interpret: bool = True) -> jax.Array:
+    """Stripe-batched coding matmul: one launch for S stripes.
+
+    a_bits: (8m, 8k) uint8 in {0,1} — shared across the batch.
+    data:   (S, k, B) uint8, B a multiple of `block_b` (ops.py pads).
+    Returns (S, m, B) uint8.
+
+    Grid is (S, B // block_b); the A_bits operand's index map is constant,
+    so the coefficient tile stays resident in VMEM for the whole batch —
+    the per-launch overhead and the A_bits HBM traffic are paid once, not
+    once per stripe.
+    """
+    m8, k8 = a_bits.shape
+    assert m8 % 8 == 0 and k8 % 8 == 0
+    m, k = m8 // 8, k8 // 8
+    S, kk, B = data.shape
+    assert kk == k, (kk, k)
+    assert B % block_b == 0, (B, block_b)
+
+    grid = (S, B // block_b)
+    return pl.pallas_call(
+        functools.partial(_kernel_batched, m=m, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m8, k8), lambda s, b: (0, 0)),     # resident
+            pl.BlockSpec((1, k, block_b), lambda s, b: (s, 0, b)),
+        ],
+        out_specs=pl.BlockSpec((1, m, block_b), lambda s, b: (s, 0, b)),
+        out_shape=jax.ShapeDtypeStruct((S, m, B), jnp.uint8),
         interpret=interpret,
     )(a_bits, data)

@@ -7,11 +7,22 @@ API (all uint8 byte streams):
   recover_single(plan, blocks)  -> one block             (xor path if plan
                                                           is XOR-only)
 
+Stripe-batched variants (leading S axis, ONE kernel launch per call):
+  encode_many(code, data)       -> (S, k, B) -> (S, n, B)
+  apply_matrix_many(M, blocks)  -> (S, k, B) -> (S, m, B)
+  xor_fold_many(blocks)         -> (S, s, B) -> (S, B)
+  recover_many(plan, blocks)    -> {src: (S, B)} -> (S, B)
+  apply_decode_many(plan, blocks) -> {src: (S, B)} -> {erased: (S, B)}
+
 `interpret` defaults to True on CPU (this container) and False when a real
 TPU is attached — the Pallas kernel body is identical.
+
+KERNEL_LAUNCHES counts pallas_call launches per kernel (host-side, outside
+jit) so tests and benchmarks can assert batching actually batches.
 """
 from __future__ import annotations
 
+import collections
 import functools
 
 import jax
@@ -22,8 +33,14 @@ from repro.core.codec import DecodePlan, RecoveryPlan
 from repro.core.codes import Code
 from repro.core.gf import expand_coding_matrix_to_bits
 
-from .gf_bitmatmul import gf_bitmatmul
-from .xor_reduce import xor_reduce
+from .gf_bitmatmul import gf_bitmatmul, gf_bitmatmul_batched
+from .xor_reduce import xor_reduce, xor_reduce_batched
+
+KERNEL_LAUNCHES: collections.Counter = collections.Counter()
+
+
+def reset_kernel_launch_counts() -> None:
+    KERNEL_LAUNCHES.clear()
 
 
 def _on_tpu() -> bool:
@@ -64,8 +81,27 @@ def apply_matrix(M: np.ndarray, blocks: jax.Array, *,
     a_bits = _bits(M, tag)
     blocks = jnp.asarray(blocks, dtype=jnp.uint8)
     padded, B = _pad_to(blocks, block_b, axis=1)
+    KERNEL_LAUNCHES["gf_bitmatmul"] += 1
     out = gf_bitmatmul(a_bits, padded, block_b=block_b, interpret=interpret)
     return out[:, :B]
+
+
+def apply_matrix_many(M: np.ndarray, blocks: jax.Array, *,
+                      block_b: int = 512, interpret: bool | None = None,
+                      tag: str = "adhoc") -> jax.Array:
+    """Stripe-batched GF(2^8) matmul: M (m,k) @ blocks (S,k,B) -> (S,m,B).
+
+    One `gf_bitmatmul_batched` launch for the whole batch; the expanded
+    A_bits tile is resident in VMEM across all S stripes."""
+    if interpret is None:
+        interpret = default_interpret()
+    a_bits = _bits(M, tag)
+    blocks = jnp.asarray(blocks, dtype=jnp.uint8)
+    padded, B = _pad_to(blocks, block_b, axis=2)
+    KERNEL_LAUNCHES["gf_bitmatmul"] += 1
+    out = gf_bitmatmul_batched(a_bits, padded, block_b=block_b,
+                               interpret=interpret)
+    return out[:, :, :B]
 
 
 def encode(code: Code, data: jax.Array, *, block_b: int = 512,
@@ -74,6 +110,17 @@ def encode(code: Code, data: jax.Array, *, block_b: int = 512,
     parity = apply_matrix(code.A, data, block_b=block_b,
                           interpret=interpret, tag=code.name)
     return jnp.concatenate([jnp.asarray(data, jnp.uint8), parity], axis=0)
+
+
+def encode_many(code: Code, data: jax.Array, *, block_b: int = 512,
+                interpret: bool | None = None) -> jax.Array:
+    """data (S, k, B) uint8 -> (S, n, B) codewords, ONE kernel launch.
+
+    The batched analogue of `encode`: S stripes ride a stripe-batch grid
+    dimension instead of S separate launches."""
+    parity = apply_matrix_many(code.A, data, block_b=block_b,
+                               interpret=interpret, tag=code.name)
+    return jnp.concatenate([jnp.asarray(data, jnp.uint8), parity], axis=1)
 
 
 def xor_fold(blocks: jax.Array, *, interpret: bool | None = None) -> jax.Array:
@@ -85,10 +132,28 @@ def xor_fold(blocks: jax.Array, *, interpret: bool | None = None) -> jax.Array:
     padded, _ = _pad_to(blocks, 8192, axis=1)   # 8192 B = 2048 int32 lanes
     lanes = jax.lax.bitcast_convert_type(
         padded.reshape(s, -1, 4), jnp.int32).reshape(s, -1)
+    KERNEL_LAUNCHES["xor_reduce"] += 1
     out32 = xor_reduce(lanes, interpret=interpret)
     out8 = jax.lax.bitcast_convert_type(
         out32.reshape(-1, 1), jnp.uint8).reshape(-1)
     return out8[:B]
+
+
+def xor_fold_many(blocks: jax.Array, *,
+                  interpret: bool | None = None) -> jax.Array:
+    """(S, s, B) uint8 -> (S, B) uint8 XOR-fold along axis 1, one launch."""
+    if interpret is None:
+        interpret = default_interpret()
+    blocks = jnp.asarray(blocks, dtype=jnp.uint8)
+    S, s, B = blocks.shape
+    padded, _ = _pad_to(blocks, 8192, axis=2)
+    lanes = jax.lax.bitcast_convert_type(
+        padded.reshape(S, s, -1, 4), jnp.int32).reshape(S, s, -1)
+    KERNEL_LAUNCHES["xor_reduce"] += 1
+    out32 = xor_reduce_batched(lanes, interpret=interpret)
+    out8 = jax.lax.bitcast_convert_type(
+        out32.reshape(S, -1, 1), jnp.uint8).reshape(S, -1)
+    return out8[:, :B]
 
 
 def recover_single(plan: RecoveryPlan, blocks: dict[int, jax.Array], *,
@@ -116,3 +181,36 @@ def apply_decode(plan: DecodePlan, blocks: dict[int, jax.Array], *,
         return {plan.erased[0]: xor_fold(sel, interpret=interpret)}
     rec = apply_matrix(plan.M, src, interpret=interpret)
     return {e: rec[i] for i, e in enumerate(plan.erased)}
+
+
+def recover_many(plan: RecoveryPlan, blocks: dict[int, jax.Array], *,
+                 interpret: bool | None = None) -> jax.Array:
+    """Execute one single-failure plan across S stripes in ONE launch.
+
+    blocks: {source block id -> (S, B) uint8} — the same source block read
+    from S stripes, stacked. Returns the recovered target as (S, B).
+    XOR-only plans take the batched VPU path; mixed-coefficient plans take
+    the batched MXU path with a (1, s) coefficient matrix."""
+    src = jnp.stack([jnp.asarray(blocks[s], jnp.uint8)
+                     for s in plan.sources], axis=1)       # (S, s, B)
+    if plan.xor_only:
+        return xor_fold_many(src, interpret=interpret)
+    M = np.array([plan.coeffs], dtype=np.uint8)            # (1, s)
+    return apply_matrix_many(M, src, interpret=interpret)[:, 0]
+
+
+def apply_decode_many(plan: DecodePlan, blocks: dict[int, jax.Array], *,
+                      interpret: bool | None = None
+                      ) -> dict[int, jax.Array]:
+    """Execute one multi-erasure decode plan across S stripes in one launch.
+
+    blocks: {source block id -> (S, B) uint8}. Returns {erased: (S, B)}."""
+    if not plan.erased:
+        return {}
+    src = jnp.stack([jnp.asarray(blocks[s], jnp.uint8)
+                     for s in plan.sources], axis=1)       # (S, s, B)
+    if np.all((plan.M == 0) | (plan.M == 1)) and len(plan.erased) == 1:
+        sel = src[:, np.flatnonzero(plan.M[0])]
+        return {plan.erased[0]: xor_fold_many(sel, interpret=interpret)}
+    rec = apply_matrix_many(plan.M, src, interpret=interpret)
+    return {e: rec[:, i] for i, e in enumerate(plan.erased)}

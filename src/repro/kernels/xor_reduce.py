@@ -27,6 +27,13 @@ def _kernel(blocks_ref, out_ref, *, s: int):
     out_ref[...] = acc
 
 
+def _kernel_batched(blocks_ref, out_ref, *, s: int):
+    acc = blocks_ref[0, 0, :]
+    for j in range(1, s):
+        acc = acc ^ blocks_ref[0, j, :]
+    out_ref[0] = acc
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def xor_reduce(blocks: jax.Array, block_b: int = DEFAULT_BLOCK_B,
                interpret: bool = True) -> jax.Array:
@@ -40,5 +47,26 @@ def xor_reduce(blocks: jax.Array, block_b: int = DEFAULT_BLOCK_B,
         in_specs=[pl.BlockSpec((s, block_b), lambda b: (0, b))],
         out_specs=pl.BlockSpec((block_b,), lambda b: (b,)),
         out_shape=jax.ShapeDtypeStruct((B,), blocks.dtype),
+        interpret=interpret,
+    )(blocks)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def xor_reduce_batched(blocks: jax.Array, block_b: int = DEFAULT_BLOCK_B,
+                       interpret: bool = True) -> jax.Array:
+    """(S, s, B) int array -> (S, B) XOR-fold along axis 1, one launch.
+
+    The stripe-batch analogue of `xor_reduce`: grid (S, B // block_b), so
+    recovering the same failed block across S stripes is a single kernel
+    launch instead of S."""
+    S, s, B = blocks.shape
+    assert B % block_b == 0, (B, block_b)
+    grid = (S, B // block_b)
+    return pl.pallas_call(
+        functools.partial(_kernel_batched, s=s),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, s, block_b), lambda si, b: (si, 0, b))],
+        out_specs=pl.BlockSpec((1, block_b), lambda si, b: (si, b)),
+        out_shape=jax.ShapeDtypeStruct((S, B), blocks.dtype),
         interpret=interpret,
     )(blocks)

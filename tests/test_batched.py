@@ -1,0 +1,253 @@
+"""Batched multi-stripe engine: batched kernels vs the per-stripe path
+(byte-identical), plan-cache hit identity, single-launch accounting, and
+the StripeCodec placement co-location guard."""
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.ckpt import BlockStore, ClusterTopology
+from repro.ckpt.stripe import StripeCodec
+from repro.core import ALL_SCHEMES, make_unilrc, paper_schemes
+from repro.core.codec import (clear_plan_caches, decode_plan,
+                              decode_plan_cached, plans_for,
+                              single_recovery_plan)
+from repro.kernels import ops
+
+S, B = 3, 512
+
+
+# ---------------------------------------------------------------------------
+# Batched kernels == per-stripe kernels == numpy oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+def test_encode_many_matches_per_stripe(scheme):
+    for name, code in paper_schemes(scheme).items():
+        rng = np.random.default_rng(zlib.crc32(f"{scheme}/{name}".encode()))
+        data = rng.integers(0, 256, (S, code.k, B), dtype=np.uint8)
+        batched = np.asarray(ops.encode_many(code, data))
+        for s in range(S):
+            per_stripe = np.asarray(ops.encode(code, data[s]))
+            assert np.array_equal(batched[s], per_stripe), (name, s)
+            assert np.array_equal(batched[s], code.encode(data[s])), (name, s)
+
+
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+def test_recover_many_matches_per_stripe(scheme):
+    code = paper_schemes(scheme)["UniLRC"]
+    rng = np.random.default_rng(1)
+    data = rng.integers(0, 256, (S, code.k, B), dtype=np.uint8)
+    cw = np.stack([code.encode(data[s]) for s in range(S)])
+    for target in (0, code.k - 1, code.k, code.n - 1):
+        plan = plans_for(code)[target]
+        stacked = {src: cw[:, src] for src in plan.sources}
+        batched = np.asarray(ops.recover_many(plan, stacked))
+        assert np.array_equal(batched, cw[:, target]), target
+        for s in range(S):
+            per_stripe = np.asarray(ops.recover_single(
+                plan, {src: cw[s, src] for src in plan.sources}))
+            assert np.array_equal(batched[s], per_stripe), (target, s)
+
+
+def test_apply_decode_many_matches_per_stripe():
+    code = make_unilrc(2, 4)
+    rng = np.random.default_rng(2)
+    data = rng.integers(0, 256, (S, code.k, B), dtype=np.uint8)
+    cw = np.stack([code.encode(data[s]) for s in range(S)])
+    erased = (0, 5, 11, 25)
+    plan = decode_plan_cached(code, erased)
+    stacked = {src: cw[:, src] for src in plan.sources}
+    rec = ops.apply_decode_many(plan, stacked)
+    for e in erased:
+        assert np.array_equal(np.asarray(rec[e]), cw[:, e]), e
+
+
+def test_encode_many_wide_single_launch():
+    """Acceptance: S=8 stripes of the widest paper code (210, 180) issue
+    ONE gf_bitmatmul launch and match the numpy oracle byte-for-byte."""
+    code = paper_schemes("180-of-210")["UniLRC"]
+    rng = np.random.default_rng(3)
+    data = rng.integers(0, 256, (8, code.k, B), dtype=np.uint8)
+    ops.reset_kernel_launch_counts()
+    batched = np.asarray(ops.encode_many(code, data))
+    assert ops.KERNEL_LAUNCHES["gf_bitmatmul"] == 1
+    for s in range(8):
+        assert np.array_equal(batched[s], code.encode(data[s])), s
+
+
+# ---------------------------------------------------------------------------
+# Plan cache
+# ---------------------------------------------------------------------------
+
+def test_decode_plan_cached_hit_is_identical_object():
+    code = make_unilrc(1, 4)
+    clear_plan_caches()
+    plan = decode_plan_cached(code, (3, 7))
+    assert decode_plan_cached(code, (3, 7)) is plan
+    # normalization: order and duplicates don't miss the cache
+    assert decode_plan_cached(code, [7, 3, 3]) is plan
+    # contents agree with an uncached solve
+    fresh = decode_plan(code, (3, 7))
+    assert fresh.erased == plan.erased and fresh.sources == plan.sources
+    assert np.array_equal(fresh.M, plan.M)
+    # an equal construction (different object) shares the cache entry
+    assert decode_plan_cached(make_unilrc(1, 4), (3, 7)) is plan
+
+
+def test_plans_for_cached_and_matches_single_recovery_plan():
+    code = make_unilrc(1, 6)
+    plans = plans_for(code)
+    assert plans_for(code) is plans
+    assert len(plans) == code.n
+    for t in (0, 17, code.n - 1):
+        assert plans[t] == single_recovery_plan(code, t)
+
+
+# ---------------------------------------------------------------------------
+# StripeCodec batched paths + placement guard
+# ---------------------------------------------------------------------------
+
+def _payload(code, bs, stripes, seed=0):
+    rng = np.random.default_rng(seed)
+    n = code.k * bs * stripes - bs // 2       # non-multiple: exercises padding
+    return rng.integers(0, 256, size=n, dtype=np.uint8).tobytes()
+
+
+def test_write_is_one_launch_and_reads_back():
+    code = make_unilrc(1, 4)
+    store = BlockStore(ClusterTopology(4, 8))
+    codec = StripeCodec(code, store, block_size=1024)
+    payload = _payload(code, 1024, stripes=4)
+    ops.reset_kernel_launch_counts()
+    metas = codec.write(payload)
+    assert len(metas) == 4
+    assert ops.KERNEL_LAUNCHES["gf_bitmatmul"] == 1
+    assert codec.read_all(metas) == payload
+
+
+def test_batched_recovery_matches_oracle_codec():
+    """Kernel-batched write/read_all/reconstruct_node produce the same
+    bytes and store state as the numpy-oracle (use_kernels=False) codec."""
+    code = make_unilrc(1, 4)
+    topo = ClusterTopology(4, 8)
+    results = {}
+    for use_kernels in (True, False):
+        store = BlockStore(topo)
+        codec = StripeCodec(code, store, block_size=512,
+                            use_kernels=use_kernels)
+        # 12 stripes > nodes_per_cluster: recovery groups span S > 1
+        # stripes, so both engines exercise the stacked (S, B) path.
+        payload = _payload(code, 512, stripes=12, seed=7)
+        metas = codec.write(payload)
+        victim = store.topo.node_of(1, 0)
+        store.fail_node(victim)
+        degraded = codec.read_all(metas)
+        rebuilt = codec.reconstruct_node(victim)
+        store.heal_node(victim)
+        clean = codec.read_all(metas)
+        results[use_kernels] = (degraded, rebuilt, clean)
+        assert degraded == payload
+        assert clean == payload
+    assert results[True] == results[False]
+
+
+def test_reconstruct_node_batches_by_plan():
+    """Healing a node holding one block per stripe over S stripes issues
+    one recovery launch per distinct lost block id, not per stripe.
+
+    Stripes (20) exceed nodes_per_cluster (8) so slot rotation wraps and
+    the victim holds the SAME block id in several stripes — at least one
+    plan group genuinely batches S > 1 stripes into one launch."""
+    code = make_unilrc(1, 4)
+    store = BlockStore(ClusterTopology(4, 8))
+    codec = StripeCodec(code, store, block_size=512)
+    payload = _payload(code, 512, stripes=20, seed=9)
+    metas = codec.write(payload)
+    victim = store.topo.node_of(0, 2)
+    lost = store.blocks_on_node(victim)
+    distinct_blocks = {b for _, b in lost}
+    assert len(lost) > len(distinct_blocks)   # some group has >= 2 stripes
+    store.fail_node(victim)
+    ops.reset_kernel_launch_counts()
+    rebuilt = codec.reconstruct_node(victim)
+    assert rebuilt == len(lost)
+    launches = sum(ops.KERNEL_LAUNCHES.values())
+    assert launches == len(distinct_blocks), (launches, lost)
+    store.heal_node(victim)
+    assert codec.read_all(metas) == payload
+
+
+def test_reconstruct_does_not_colocate_stripe_blocks():
+    """Re-placement after a failure must keep every stripe's blocks on
+    distinct nodes (the invariant the constructor validates), not just on
+    the first live node of the cluster."""
+    code = make_unilrc(1, 4)
+    store = BlockStore(ClusterTopology(4, 8))
+    codec = StripeCodec(code, store, block_size=512)
+    payload = _payload(code, 512, stripes=20, seed=11)
+    metas = codec.write(payload)
+    victim = store.topo.node_of(0, 2)
+    lost = store.blocks_on_node(victim)
+    assert lost
+    store.fail_node(victim)
+    rebuilt = codec.reconstruct_node(victim)
+    assert rebuilt == len(lost)
+    assert not store.blocks_on_node(victim)   # everything re-placed
+    per_stripe: dict[int, set] = {}
+    for (sid, b), nd in store._block_node.items():
+        assert nd not in per_stripe.setdefault(sid, set()), (sid, b, nd)
+        per_stripe[sid].add(nd)
+    store.heal_node(victim)
+    assert codec.read_all(metas) == payload
+
+
+def test_rebuild_skips_undecodable_stripes():
+    """One stripe lost beyond tolerance must not abort repair of the
+    other, fully recoverable stripes."""
+    code = make_unilrc(1, 4)
+    store = BlockStore(ClusterTopology(4, 8))
+    codec = StripeCodec(code, store, block_size=256)
+    payload = _payload(code, 256, stripes=2, seed=13)
+    codec.write(payload)
+    # wipe stripe 0 beyond tolerance (fewer than k survivors)
+    for b in range(code.n - code.k + 1):
+        store._block_node.pop((0, b))
+        store._blocks.pop((0, b))
+    placed = codec.rebuild_blocks([(0, 0), (1, 3)])
+    assert placed == 1                     # stripe 1 healed, stripe 0 skipped
+    assert store.available(1, 3)
+    assert not store.available(0, 0)
+
+
+def test_max_batch_stripes_caps_launches_not_bytes():
+    """A small max_batch_stripes chunks the encode into several launches
+    but the written stripes are identical to the unbounded batch."""
+    code = make_unilrc(1, 4)
+    payload = _payload(code, 512, stripes=5, seed=3)
+    outs = {}
+    for cap in (64, 2):
+        store = BlockStore(ClusterTopology(4, 8))
+        codec = StripeCodec(code, store, block_size=512,
+                            max_batch_stripes=cap)
+        ops.reset_kernel_launch_counts()
+        metas = codec.write(payload)
+        expect = 1 if cap >= 5 else -(-5 // cap)
+        assert ops.KERNEL_LAUNCHES["gf_bitmatmul"] == expect, cap
+        outs[cap] = codec.read_all(metas)
+        assert outs[cap] == payload
+    assert outs[64] == outs[2]
+    with pytest.raises(ValueError):
+        StripeCodec(code, BlockStore(ClusterTopology(4, 8)),
+                    max_batch_stripes=0)
+
+
+def test_colocating_placement_rejected():
+    """nodes_per_cluster < local group size would wrap slots and put two
+    group members on one node — constructor must refuse."""
+    code = make_unilrc(1, 4)            # group size 5
+    store = BlockStore(ClusterTopology(4, 4))
+    with pytest.raises(ValueError, match="co-locate"):
+        StripeCodec(code, store, block_size=512)
+    # one more node per cluster and the same code is accepted
+    StripeCodec(code, BlockStore(ClusterTopology(4, 5)), block_size=512)

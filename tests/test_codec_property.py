@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) on codec invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; property tests skipped")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (decode_plan, make_alrc, make_unilrc, paper_schemes,

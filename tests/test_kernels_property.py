@@ -1,0 +1,40 @@
+"""Property-based kernel tests (hypothesis) vs the ref.py oracles.
+
+Split from tests/test_kernels.py so the deterministic kernel validation
+there still runs on minimal environments; this module skips cleanly when
+hypothesis is not installed."""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; property tests skipped")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gf import expand_coding_matrix_to_bits, gf_matmul
+from repro.kernels import xor_fold
+from repro.kernels.gf_bitmatmul import gf_bitmatmul
+from repro.kernels.ref import xor_reduce_ref
+
+
+@given(st.integers(0, 2**31))
+@settings(deadline=None, max_examples=15)
+def test_gf_bitmatmul_property(seed):
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(1, 9))
+    k = int(rng.integers(1, 33))
+    A = rng.integers(0, 256, (m, k), dtype=np.uint8)
+    data = rng.integers(0, 256, (k, 512), dtype=np.uint8)
+    got = np.asarray(gf_bitmatmul(expand_coding_matrix_to_bits(A), data))
+    assert np.array_equal(got, gf_matmul(A, data))
+
+
+@given(st.integers(0, 2**31))
+@settings(deadline=None, max_examples=15)
+def test_xor_fold_unaligned_sizes(seed):
+    """ops.xor_fold pads arbitrary byte counts correctly."""
+    rng = np.random.default_rng(seed)
+    s = int(rng.integers(2, 9))
+    B = int(rng.integers(1, 5000))
+    blocks = rng.integers(0, 256, (s, B), dtype=np.uint8)
+    got = np.asarray(xor_fold(blocks))
+    assert np.array_equal(got, np.asarray(xor_reduce_ref(blocks)))
