@@ -1,0 +1,86 @@
+"""Bench-regression gate: fail CI when batched recovery stops paying off.
+
+Compares a fresh `fig_batched_recovery` result against the committed
+baseline JSON and enforces an absolute floor on the batched-recovery
+speedup. The committed baseline shows 3.7-4.5x across the paper schemes;
+a fresh run below `--min-speedup` (default 2x) means the stripe-batch
+grid dimension regressed into per-stripe work and the PR should not
+merge.
+
+Usage (what .github/workflows/ci.yml runs):
+    cp artifacts/bench/fig_batched_recovery.json /tmp/baseline.json
+    python -m benchmarks.run --tiny --only fig_batched_recovery
+    python -m benchmarks.check_regression \
+        --baseline /tmp/baseline.json \
+        --fresh artifacts/bench/fig_batched_recovery.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def check(baseline: dict, fresh: dict, min_speedup: float,
+          rel_floor: float = 0.4) -> list[str]:
+    """Return a list of human-readable failures (empty == gate passes).
+
+    Two conditions per scheme, both enforced:
+      * absolute: rec_speedup >= min_speedup (the 2x ISSUE criterion);
+      * relative: rec_speedup >= rel_floor * the committed baseline's —
+        catches a scheme sliding from 4.5x to 2.1x, which the absolute
+        floor alone would wave through. rel_floor is loose (0.4) because
+        interpret-mode timings on shared CI runners are noisy.
+    """
+    failures: list[str] = []
+    base_by_scheme = {r["scheme"]: r for r in baseline.get("rows", [])}
+    rows = fresh.get("rows", [])
+    if not rows:
+        return ["fresh result has no rows — benchmark did not run"]
+    for row in rows:
+        scheme = row["scheme"]
+        speedup = float(row["rec_speedup"])
+        base = base_by_scheme.get(scheme, {})
+        base_speedup = float(base.get("rec_speedup", 0.0))
+        note = (f"(baseline {base_speedup:.2f}x)" if base else
+                "(no baseline row)")
+        print(f"{scheme}: rec_speedup {speedup:.2f}x {note}")
+        if speedup < min_speedup:
+            failures.append(
+                f"{scheme}: batched recovery speedup {speedup:.2f}x is "
+                f"below the {min_speedup:.1f}x floor {note}")
+        elif speedup < rel_floor * base_speedup:
+            failures.append(
+                f"{scheme}: batched recovery speedup {speedup:.2f}x fell "
+                f"below {rel_floor:.0%} of the committed baseline "
+                f"{base_speedup:.2f}x")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, type=pathlib.Path,
+                    help="committed fig_batched_recovery.json")
+    ap.add_argument("--fresh", required=True, type=pathlib.Path,
+                    help="fig_batched_recovery.json from this run")
+    ap.add_argument("--min-speedup", type=float, default=2.0,
+                    help="absolute floor on rec_speedup per scheme")
+    ap.add_argument("--rel-floor", type=float, default=0.4,
+                    help="fresh speedup must also reach this fraction of "
+                         "the committed baseline's")
+    args = ap.parse_args(argv)
+
+    baseline = json.loads(args.baseline.read_text())
+    fresh = json.loads(args.fresh.read_text())
+    failures = check(baseline, fresh, args.min_speedup, args.rel_floor)
+    if failures:
+        for f in failures:
+            print(f"REGRESSION: {f}", file=sys.stderr)
+        return 1
+    print("bench-regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

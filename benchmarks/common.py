@@ -20,10 +20,11 @@ import json
 import pathlib
 import time
 
-import numpy as np
+from repro.core.codes import ALL_SCHEMES, paper_schemes
 
-from repro.core.codes import paper_schemes, ALL_SCHEMES
-from repro.core.placement import default_placement
+__all__ = ["ALL_SCHEMES", "BLOCK_SIZE", "NetModel", "all_codes",
+           "fmt_table", "gbps_to_Bps", "save_result", "timed",
+           "traffic_of_read"]
 
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 

@@ -1,0 +1,148 @@
+"""Simulated reliability vs the Markov MTTDL model (new figure).
+
+Three panels, all on a stressed small-scale parameterization (μ/λ ≈ 10
+instead of the paper's ~10⁵ — the real §5 numbers reach 1e60 years and
+no Monte Carlo can touch them; the *model structure* is what's under
+test, and it is scale-free):
+
+  1. Cross-validation: the event-driven chain simulator
+     (`sim.simulate_stripe_mttdl`) against `core.mttdl.mttdl_years_stripe`
+     on identical rates — memoryless, uncorrelated. The Markov answer
+     must land inside the 95% Monte Carlo CI.
+  2. Full-deployment campaign, exponential/uncorrelated: deterministic
+     bandwidth-limited repairs and per-node (not per-block) failure
+     granularity already shift MTTDL off the chain answer — the first,
+     mild divergence.
+  3. Correlated cluster-loss events: the Markov model has no state for
+     "a whole local group vanished at once"; simulated MTTDL collapses
+     by orders of magnitude while the closed form doesn't move. This is
+     the CR-SIM/PR-SIM critique, quantified per scheme and placement.
+
+Set REPRO_BENCH_TINY=1 (or `run.py --tiny`) for a CI-sized run.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.core import (make_rs, paper_schemes, tolerable_failures)
+from repro.core.metrics import locality_metrics
+from repro.core.mttdl import (MTTDLParams, effective_recovery_traffic,
+                              mttdl_years_stripe)
+from repro.core.placement import default_placement
+from repro.sim import (FailureModel, SimConfig, exponential_from_mttf_years,
+                       run_campaign, simulate_stripe_mttdl)
+
+from .common import fmt_table, save_result
+
+TINY = bool(int(os.environ.get("REPRO_BENCH_TINY", "0")))
+
+# Stressed regime for the chain panel: thin repair pipe (μ/λ ≈ 3) so
+# absorption happens within simulable time at n = 42.
+PARAMS = MTTDLParams(N=4, S_TB=1.0, epsilon=0.0017, delta=0.5,
+                     T_hours=300.0, B_Gbps=1.0, node_mttf_years=0.5)
+# Milder regime for the campaign panels: repairs keep up with independent
+# failures (uncorrelated losses rare), so correlated cluster losses are
+# the visible killer rather than background churn.
+PARAMS_CAMPAIGN = MTTDLParams(N=4, S_TB=1.0, epsilon=0.05, delta=0.5,
+                              T_hours=48.0, B_Gbps=1.0,
+                              node_mttf_years=0.5)
+CLUSTER_LOSS_MEAN_HOURS = 1500.0
+MISSION_YEARS = 2.0 if TINY else 4.0
+CHAIN_TRIALS = 80 if TINY else 400
+CAMPAIGN_TRIALS = 3 if TINY else 12
+SCHEME = "30-of-42"
+
+
+def bench_codes():
+    codes = dict(paper_schemes(SCHEME))
+    codes["RS"] = make_rs(42, 30)
+    if TINY:
+        codes = {k: codes[k] for k in ("UniLRC", "ALRC")}
+    return codes
+
+
+def chain_validation_rows() -> list[dict]:
+    rows = []
+    for code in bench_codes().values():
+        placement = default_placement(code)
+        m = locality_metrics(code, placement)
+        C = effective_recovery_traffic(m, PARAMS.delta)
+        f = tolerable_failures(code)
+        markov = mttdl_years_stripe(code.n, f, C, PARAMS)
+        est = simulate_stripe_mttdl(code.n, f, C, PARAMS,
+                                    trials=CHAIN_TRIALS, seed=0)
+        rows.append({
+            "code": code.name,
+            "markov_years": round(markov, 3),
+            "sim_years": round(est.mean_years, 3),
+            "ci95": round(est.ci95_years, 3),
+            "within_ci": est.contains(markov),
+        })
+    return rows
+
+
+def campaign_rows() -> list[dict]:
+    rows = []
+    for code in bench_codes().values():
+        placement = default_placement(code)
+        m = locality_metrics(code, placement)
+        C = effective_recovery_traffic(m, PARAMS_CAMPAIGN.delta)
+        markov = mttdl_years_stripe(code.n, tolerable_failures(code), C,
+                                    PARAMS_CAMPAIGN)
+        for regime in ("exponential", "correlated"):
+            fm = FailureModel(
+                node=exponential_from_mttf_years(
+                    PARAMS_CAMPAIGN.node_mttf_years),
+                cluster_loss_mean_hours=(CLUSTER_LOSS_MEAN_HOURS
+                                         if regime == "correlated" else None))
+            rep = run_campaign(SimConfig(
+                code=code, params=PARAMS_CAMPAIGN, placement=placement,
+                n_stripes=2, trials=CAMPAIGN_TRIALS, seed=1,
+                mission_hours=MISSION_YEARS * 8760.0, failure_model=fm))
+            sim_years = rep.mttdl_years
+            rows.append({
+                "code": code.name,
+                "placement": placement.name,
+                "regime": regime,
+                "markov_years": round(markov, 2),
+                "sim_mttdl_years": (round(sim_years, 2)
+                                    if sim_years is not None
+                                    else f">{rep.mttdl_lower_bound_years:.1f}"),
+                "loss_prob": round(rep.loss_probability, 3),
+                "degraded_frac": round(rep.degraded_fraction, 4),
+                "cross_frac": round(rep.cross_traffic_fraction, 4),
+            })
+    return rows
+
+
+def main():
+    val = chain_validation_rows()
+    print(fmt_table(
+        val, ["code", "markov_years", "sim_years", "ci95", "within_ci"],
+        "Chain-level cross-validation (memoryless regime)"))
+    bad = [r["code"] for r in val if not r["within_ci"]]
+    if bad:
+        raise AssertionError(
+            f"simulated MTTDL outside the 95% CI of the Markov answer "
+            f"for {bad} — simulator and model disagree in the regime "
+            f"where they must match")
+
+    camp = campaign_rows()
+    print(fmt_table(
+        camp, ["code", "placement", "regime", "markov_years",
+               "sim_mttdl_years", "loss_prob", "degraded_frac", "cross_frac"],
+        f"Deployment campaign ({SCHEME}, stressed params, "
+        f"cluster-loss mean {CLUSTER_LOSS_MEAN_HOURS}h)"))
+    save_result("fig_sim_reliability", {
+        "tiny": TINY,
+        "params_chain": PARAMS.__dict__,
+        "params_campaign": PARAMS_CAMPAIGN.__dict__,
+        "cluster_loss_mean_hours": CLUSTER_LOSS_MEAN_HOURS,
+        "chain_validation": val,
+        "campaign": camp,
+    })
+    return {"chain_validation": val, "campaign": camp}
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,7 @@ bandwidth model) and, if dry-run artifacts exist, the roofline table.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
@@ -15,19 +16,29 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="skip the slower kernel-timing benchmarks")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke sizes: sets REPRO_BENCH_TINY=1; "
+                         "benchmarks that support it shrink "
+                         "(fig_sim_reliability trials, "
+                         "fig_batched_recovery block bytes); artifacts "
+                         "are still written")
     ap.add_argument("--only", default="",
                     help="comma-separated benchmark names")
     args = ap.parse_args()
+    if args.tiny:
+        os.environ["REPRO_BENCH_TINY"] = "1"
 
     from . import (fig3_xor_vs_mul, fig5_tradeoff, fig8_locality,
                    fig10_operations, fig11_bandwidth, fig12_workload,
-                   fig_batched_recovery, roofline, table4_mttdl)
+                   fig_batched_recovery, fig_sim_reliability, roofline,
+                   table4_mttdl)
     suites = [
         ("fig5_tradeoff", fig5_tradeoff.main),
         ("fig8_locality", fig8_locality.main),
         ("table4_mttdl", table4_mttdl.main),
         ("fig12_workload", fig12_workload.main),
         ("fig10_operations", fig10_operations.main),
+        ("fig_sim_reliability", fig_sim_reliability.main),
     ]
     if not args.quick:
         suites += [

@@ -18,7 +18,7 @@ from repro.ckpt import BlockStore, CheckpointManager, ClusterTopology
 from repro.configs import get_config
 from repro.core.codes import make_unilrc
 from repro.models import init_params
-from repro.models.model import init_cache, pad_cache_to
+from repro.models.model import pad_cache_to
 from repro.train import make_serve_decode, make_serve_prefill
 
 

@@ -9,9 +9,7 @@ This wraps the production launcher (repro.launch.train); the same
 train_step lowers for the 512-chip mesh in the dry-run.
 """
 import argparse
-import sys
 
-import jax
 
 from repro.launch.train import run
 

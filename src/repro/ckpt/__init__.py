@@ -1,9 +1,9 @@
 from .serialize import serialize_tree, deserialize_tree, Manifest
 from .store import ClusterTopology, BlockStore, DiskBlockStore, NodeFailure
-from .stripe import StripeCodec, choose_code
+from .stripe import RepairReport, StripeCodec, choose_code
 from .manager import CheckpointManager, RestoreReport
 
 __all__ = ["serialize_tree", "deserialize_tree", "Manifest",
            "ClusterTopology", "BlockStore", "DiskBlockStore", "NodeFailure",
-           "StripeCodec", "choose_code",
+           "RepairReport", "StripeCodec", "choose_code",
            "CheckpointManager", "RestoreReport"]

@@ -22,14 +22,11 @@ import dataclasses
 import time
 from typing import Any, Optional
 
-import jax
-import numpy as np
-
 from repro.core.codes import Code
 
 from .serialize import Manifest, deserialize_tree, serialize_tree
-from .store import BlockStore, ClusterTopology, NodeFailure
-from .stripe import StripeCodec, StripeMeta, choose_code
+from .store import BlockStore, NodeFailure
+from .stripe import StripeCodec, choose_code
 
 
 @dataclasses.dataclass

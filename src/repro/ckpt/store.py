@@ -18,9 +18,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import pathlib
-from typing import Iterable, Optional
-
-import numpy as np
+from typing import Optional
 
 
 class NodeFailure(Exception):

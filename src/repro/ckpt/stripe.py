@@ -48,6 +48,23 @@ class StripeMeta:
     block_size: int
 
 
+@dataclasses.dataclass(frozen=True)
+class RepairReport:
+    """Accounting for one rebuild_blocks_report() call — the repair hook the
+    failure simulator's scheduler consumes. `launches` comes from the
+    kernel launch counters (one per plan group), so the scheduler can use
+    it as a traffic oracle: launches == distinct decode plans exercised."""
+    requested: int        # (stripe, block) pairs asked for
+    placed: int           # pairs recovered AND re-placed on a live node
+    launches: int         # batched kernel launches issued (0 on oracle path)
+    inner_bytes: int      # block bytes read within the reader's cluster
+    cross_bytes: int      # block bytes read across cluster gateways
+
+    @property
+    def dropped(self) -> int:
+        return self.requested - self.placed
+
+
 class StripeCodec:
     """Encode/decode byte buffers as stripes of a given Code on a store.
 
@@ -342,6 +359,34 @@ class StripeCodec:
         Returns #blocks placed; a pair is dropped (not fatal) when its
         entire cluster is down or its stripe's erasure pattern is currently
         beyond the code's tolerance — repair heals everything it can."""
+        return self.rebuild_blocks_report(
+            pairs, reader_cluster=reader_cluster,
+            exclude_node=exclude_node).placed
+
+    def rebuild_blocks_report(self, pairs: list[tuple[int, int]], *,
+                              reader_cluster: Optional[int] = None,
+                              exclude_node: int = -1) -> RepairReport:
+        """rebuild_blocks plus launch/traffic accounting (RepairReport).
+
+        The failure simulator's repair scheduler runs its data-path mode
+        through this hook: the launch delta tells it how many plan groups
+        actually hit the kernels, and the store's inner/cross byte deltas
+        feed the cross-cluster repair-traffic report."""
+        requested = len(dict.fromkeys(pairs))
+        launches0 = ops.kernel_launch_snapshot()
+        t = self.store.traffic
+        inner0, cross0 = t.inner_bytes, t.cross_bytes
+        placed = self._rebuild_blocks(pairs, reader_cluster=reader_cluster,
+                                      exclude_node=exclude_node)
+        return RepairReport(
+            requested=requested, placed=placed,
+            launches=ops.launches_since(launches0),
+            inner_bytes=t.inner_bytes - inner0,
+            cross_bytes=t.cross_bytes - cross0)
+
+    def _rebuild_blocks(self, pairs: list[tuple[int, int]], *,
+                        reader_cluster: Optional[int] = None,
+                        exclude_node: int = -1) -> int:
         pairs = list(dict.fromkeys(pairs))   # duplicates would double-place
         recovered = self._recover_batched(pairs,
                                           reader_cluster=reader_cluster,

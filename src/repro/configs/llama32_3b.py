@@ -1,6 +1,6 @@
 """Llama 3.2 3B — small llama3. [hf:meta-llama/Llama-3.2-1B; unverified]
 Assigned spec: 28L, d_model=3072, 24H (GQA kv=8), d_ff=8192, vocab=128256."""
-from repro.models import ModelConfig, Segment, uniform_segments
+from repro.models import ModelConfig, uniform_segments
 
 CONFIG = ModelConfig(
     name="llama3.2-3b", family="dense",

@@ -4,9 +4,13 @@ from .codes import (ALL_SCHEMES, Code, cauchy_matrix, make_alrc, make_olrc,
 from .codec import (DecodePlan, RecoveryPlan, all_recovery_plans,
                     clear_plan_caches, decode_plan, decode_plan_cached,
                     plans_for, single_recovery_plan, verify_erasure_tolerance)
-from .metrics import LocalityMetrics, locality_metrics, recovery_locality
+from .metrics import (LocalityMetrics, effective_block_traffic,
+                      locality_metrics, per_block_repair_traffic,
+                      recovery_locality)
 from .mttdl import (MTTDLParams, code_mttdl_years, effective_recovery_traffic,
-                    mttdl_years_stripe, tolerable_failures)
+                    failure_rate_per_hour, markov_rates, mttdl_years_stripe,
+                    repair_bandwidth_TB_per_hour, repair_rates,
+                    tolerable_failures)
 from .placement import (Placement, default_placement, place_ecwide,
                         place_unilrc, place_unilrc_relaxed)
 
@@ -16,8 +20,11 @@ __all__ = [
     "RecoveryPlan", "all_recovery_plans", "clear_plan_caches", "decode_plan",
     "decode_plan_cached", "plans_for",
     "single_recovery_plan", "verify_erasure_tolerance", "LocalityMetrics",
-    "locality_metrics", "recovery_locality", "MTTDLParams",
-    "code_mttdl_years", "effective_recovery_traffic", "mttdl_years_stripe",
+    "effective_block_traffic", "locality_metrics",
+    "per_block_repair_traffic", "recovery_locality", "MTTDLParams",
+    "code_mttdl_years", "effective_recovery_traffic", "failure_rate_per_hour",
+    "markov_rates", "mttdl_years_stripe", "repair_bandwidth_TB_per_hour",
+    "repair_rates",
     "tolerable_failures", "Placement", "default_placement", "place_ecwide",
     "place_unilrc", "place_unilrc_relaxed",
 ]

@@ -20,7 +20,7 @@ from typing import Optional
 
 import numpy as np
 
-from .gf import GF_EXP, GF_MUL_TABLE, gf_inv, gf_matmul, gf_pow, gf_rank
+from .gf import GF_EXP, gf_inv, gf_matmul, gf_pow
 
 
 @dataclasses.dataclass(frozen=True)

@@ -61,3 +61,29 @@ def recovery_locality(code: Code) -> float:
     """r̄ — average blocks accessed for single-block recovery (§2.3.1)."""
     plans = plans_for(code)
     return float(np.mean([p.cost for p in plans]))
+
+
+def per_block_repair_traffic(code: Code, placement: Placement) -> np.ndarray:
+    """(n, 2) int array: [total blocks read, cross-cluster blocks read] for
+    the minimal single-failure repair of each block under `placement`.
+
+    This is the per-block decomposition of ARC/CARC that the failure
+    simulator's repair scheduler charges against its bandwidth budget;
+    row-averaging column 0 gives ARC and column 1 gives CARC exactly."""
+    plans = plans_for(code)
+    out = np.zeros((code.n, 2), dtype=np.int64)
+    for i, p in enumerate(plans):
+        out[i, 0] = p.cost
+        out[i, 1] = placement.cross_cluster_cost(p.target, p.sources)
+    return out
+
+
+def effective_block_traffic(code: Code, placement: Placement,
+                            delta: float) -> np.ndarray:
+    """(n,) float array: δ-weighted recovery traffic C_i = cross_i +
+    δ·inner_i per block — the per-block analogue of
+    `mttdl.effective_recovery_traffic`, in block volumes."""
+    t = per_block_repair_traffic(code, placement)
+    cross = t[:, 1].astype(float)
+    inner = (t[:, 0] - t[:, 1]).astype(float)
+    return cross + delta * inner

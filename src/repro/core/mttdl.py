@@ -40,23 +40,48 @@ class MTTDLParams:
     node_mttf_years: float = 4.0
 
 
+def failure_rate_per_hour(p: MTTDLParams) -> float:
+    """λ in 1/hour — per-node failure rate of the §5 chain."""
+    return 1.0 / (p.node_mttf_years * HOURS_PER_YEAR)
+
+
+def repair_bandwidth_TB_per_hour(p: MTTDLParams) -> float:
+    """Aggregate repair bandwidth ε(N-1)B in TB/hour — the single shared
+    number behind both the Markov repair rate μ and the simulator's
+    bandwidth-constrained repair scheduler (sim/repair.py)."""
+    return p.epsilon * (p.N - 1) * p.B_Gbps * 3600 / 8 / 1000
+
+
 def repair_rates(C_blocks: float, p: MTTDLParams) -> tuple[float, float]:
     """(μ, μ') in 1/hour. C_blocks = effective recovery traffic per block
     (already δ-weighted), in units of block volumes; the node stores S of
     data so repairing a node moves C·S bytes."""
-    # total repair bandwidth ε(N-1)B, bytes/hour
-    bw_TB_per_hour = p.epsilon * (p.N - 1) * p.B_Gbps * 3600 / 8 / 1000  # TB/h
-    mu = bw_TB_per_hour / (C_blocks * p.S_TB)
+    mu = repair_bandwidth_TB_per_hour(p) / (C_blocks * p.S_TB)
     mu_prime = 1.0 / p.T_hours
     return mu, mu_prime
+
+
+def markov_rates(C_blocks: float, p: MTTDLParams) -> tuple[float, float, float]:
+    """(λ, μ, μ') in 1/hour — the exact transition rates of the §5 chain.
+
+    The Monte Carlo simulator (sim/montecarlo.py) draws its exponential
+    hazards from this same function, so the memoryless cross-validation
+    compares the two solvers on *identical* rates, not merely similar
+    parameterizations."""
+    mu, mu_p = repair_rates(C_blocks, p)
+    return failure_rate_per_hour(p), mu, mu_p
 
 
 def mttdl_years_stripe(code_n: int, f: int, C_blocks: float,
                        p: MTTDLParams = MTTDLParams()) -> float:
     """MTTDL (years) with the paper's stripe-level chain: states
-    code_n .. code_n-f-1, failure rate i·λ at state i."""
-    lam = Fraction(1) / Fraction(int(p.node_mttf_years * HOURS_PER_YEAR))
-    mu_f, mu_pf = repair_rates(C_blocks, p)
+    code_n .. code_n-f-1, failure rate i·λ at state i.
+
+    f=0 (an MDS code with d=1, or any code whose single surviving-state
+    chain is degenerate) collapses to E = 1/(n·λ): the first failure is
+    data loss and repairs never enter."""
+    lam_f, mu_f, mu_pf = markov_rates(C_blocks, p)
+    lam = Fraction(lam_f).limit_denominator(10**15)
     mu = Fraction(mu_f).limit_denominator(10**15)
     mu_p = Fraction(mu_pf).limit_denominator(10**15)
 

@@ -33,6 +33,18 @@ class Placement:
     def cluster_blocks(self, c: int) -> list[int]:
         return [i for i, a in enumerate(self.assignment) if a == c]
 
+    def blocks_by_cluster(self) -> list[list[int]]:
+        """One pass over the assignment: cluster id -> its block ids.
+        The simulator calls this per correlated cluster-loss event, where
+        the per-cluster `cluster_blocks` scan would be O(n·z)."""
+        out: list[list[int]] = [[] for _ in range(self.num_clusters)]
+        for i, a in enumerate(self.assignment):
+            out[a].append(i)
+        return out
+
+    def cluster_sizes(self) -> list[int]:
+        return [len(b) for b in self.blocks_by_cluster()]
+
     def cross_cluster_cost(self, target: int, sources,
                            aggregate: bool = False) -> int:
         """# source blocks living outside the failed block's cluster.

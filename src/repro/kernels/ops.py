@@ -43,6 +43,20 @@ def reset_kernel_launch_counts() -> None:
     KERNEL_LAUNCHES.clear()
 
 
+def kernel_launch_snapshot() -> dict[str, int]:
+    """Point-in-time copy of KERNEL_LAUNCHES. Callers that need a delta
+    (the repair engine's launch accounting, the simulator's traffic
+    oracle) take a snapshot before and after instead of mutating the
+    live counter, so concurrent accounting consumers don't clobber each
+    other."""
+    return dict(KERNEL_LAUNCHES)
+
+
+def launches_since(snapshot: dict[str, int]) -> int:
+    """Total launches since `snapshot` (see kernel_launch_snapshot)."""
+    return sum(KERNEL_LAUNCHES.values()) - sum(snapshot.values())
+
+
 def _on_tpu() -> bool:
     return any(d.platform == "tpu" for d in jax.devices())
 

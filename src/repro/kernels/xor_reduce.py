@@ -14,7 +14,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK_B = 2048  # int32 lanes per tile (= 8 KiB of payload)

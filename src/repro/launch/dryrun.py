@@ -36,7 +36,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *,
     from repro.launch.hlo import collective_stats, count_ops
     from repro.launch.mesh import make_production_mesh
     from repro.launch.shapes import SHAPES, cell_status
-    from repro.launch.specs import cell_args, replicated
+    from repro.launch.specs import cell_args
     from repro.models import forward
     from repro.optim import AdamWConfig
     from repro.train import (TrainConfig, make_serve_decode,

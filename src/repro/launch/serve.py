@@ -16,13 +16,12 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.launch.mesh import make_host_mesh
 from repro.models import init_params
 from repro.models.model import pad_cache_to
-from repro.models.partitioning import input_sharding, param_shardings
+from repro.models.partitioning import param_shardings
 from repro.train import make_serve_decode, make_serve_prefill
 
 

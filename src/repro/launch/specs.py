@@ -15,7 +15,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
 from repro.models.model import abstract_params, init_cache
-from repro.models.partitioning import (batch_axes, cache_shardings,
+from repro.models.partitioning import (cache_shardings,
                                        input_sharding_for, param_shardings)
 from repro.train.step import TrainState, init_train_state
 

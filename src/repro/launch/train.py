@@ -29,7 +29,7 @@ from repro.configs import get_config
 from repro.core.codes import make_unilrc
 from repro.data import DataConfig, SyntheticTokenDataset
 from repro.launch.mesh import make_host_mesh
-from repro.models.partitioning import input_sharding, param_shardings
+from repro.models.partitioning import input_sharding
 from repro.optim import AdamWConfig
 from repro.train import TrainConfig, init_train_state, make_train_step
 from repro.train.step import TrainState

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .config import MLAConfig, ModelConfig, MoEConfig, _rg_width
+from .config import ModelConfig, MoEConfig, _rg_width
 
 Params = Any
 DEFAULT_ATTN_SCHEDULE = "bounded"

@@ -8,13 +8,13 @@ host devices stays tractable on one CPU.
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from . import layers as L
-from .config import ModelConfig, Segment
+from .config import ModelConfig
 
 Params = Any
 

@@ -12,7 +12,6 @@ the `data` axis shards whichever large dim TP left unsharded).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any
 
 import jax

@@ -1,0 +1,199 @@
+"""Bandwidth-constrained repair scheduling, plan-grouped like the batched
+recovery engine.
+
+The scheduler owns one aggregate repair "pipe" of ε(N-1)B bandwidth —
+`core.mttdl.repair_bandwidth_TB_per_hour`, the exact number behind the
+Markov chain's μ — and serializes damaged (stripe, block) pairs through
+it. Pairs are grouped by recovery plan (same block id => same minimal
+plan, the invariant `StripeCodec._recover_batched` batches on), so one
+scheduled job is exactly one batched kernel launch in data-path mode.
+
+Repair duration of a job is its δ-weighted traffic over the pipe:
+    hours = Σ_b C_b · block_TB / bw,   C_b = cross_b + δ·inner_b
+which makes a whole-node repair (blocks summing to S TB, common traffic
+C) take C·S/bw = 1/μ — the scheduler and the Markov model agree on
+units by construction (tests/test_mttdl.py pins this).
+
+Stripes with ≥ 2 missing blocks jump the queue and finish in T_hours
+(detection-limited), mirroring the chain's prioritised multi-failure
+repair rate μ' = 1/T.
+
+In data-path mode the scheduler drives real bytes through
+`StripeCodec.rebuild_blocks_report` on job completion and folds the
+returned kernel-launch delta into its ledger — the launch counters act
+as a traffic oracle: launches == plan groups actually repaired.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import AbstractSet, Callable, Optional
+
+from repro.core.codec import decode_plan_cached, plans_for
+from repro.core.metrics import (effective_block_traffic,
+                                per_block_repair_traffic)
+from repro.core.mttdl import MTTDLParams, repair_bandwidth_TB_per_hour
+from repro.core.placement import Placement
+
+from .events import Event, Simulator
+
+REPAIR_DONE = "repair_done"
+
+
+def node_repair_hours(C_blocks: float, p: MTTDLParams) -> float:
+    """Hours to repair one node's worth of data (S TB at effective traffic
+    C) through the aggregate pipe — by definition equal to 1/μ."""
+    return C_blocks * p.S_TB / repair_bandwidth_TB_per_hour(p)
+
+
+@dataclasses.dataclass
+class RepairLedger:
+    """Traffic + launch accounting across one trial."""
+    jobs: int = 0
+    repaired_blocks: int = 0
+    dropped_blocks: int = 0
+    inner_blocks_read: int = 0
+    cross_blocks_read: int = 0
+    busy_hours: float = 0.0
+    kernel_launches: int = 0       # data-path mode only
+    data_bytes_read: int = 0       # data-path mode only
+
+    @property
+    def cross_traffic_fraction(self) -> float:
+        total = self.inner_blocks_read + self.cross_blocks_read
+        return self.cross_blocks_read / total if total else 0.0
+
+
+class RepairScheduler:
+    """Single-pipe, plan-grouped, multi-failure-prioritised repair.
+
+    Wiring: the owner (montecarlo.DssTrial) constructs the scheduler with
+    callbacks, calls `damaged(pairs)` as failures land, and receives
+    `on_repaired(pairs)` when a job completes. The scheduler registers
+    its own REPAIR_DONE handler on the simulator.
+    """
+
+    def __init__(self, sim: Simulator, placement: Placement,
+                 params: MTTDLParams, *,
+                 block_TB: float,
+                 stripe_missing: Callable[[int], AbstractSet[int]],
+                 on_repaired: Callable[[list[tuple[int, int]]], None],
+                 codec=None,
+                 exclude_node_of: Optional[Callable[[int, int], int]] = None):
+        self.sim = sim
+        self.placement = placement
+        self.params = params
+        self.block_TB = block_TB
+        # currently-missing blocks of a stripe (including ones queued or in
+        # flight here) — drives both multi-failure prioritisation and the
+        # actual-plan traffic accounting.
+        self.stripe_missing = stripe_missing
+        self.on_repaired = on_repaired
+        self.codec = codec                      # StripeCodec for data-path
+        self.exclude_node_of = exclude_node_of
+        self.ledger = RepairLedger()
+        code = placement.code
+        self._traffic = per_block_repair_traffic(code, placement)
+        self._eff = effective_block_traffic(code, placement, params.delta)
+        self._bw = repair_bandwidth_TB_per_hour(params)
+        self._pending: dict[tuple[int, int], None] = {}   # ordered set
+        self._in_flight: Optional[Event] = None
+        sim.on(REPAIR_DONE, self._handle_done)
+
+    # -- damage intake -------------------------------------------------------
+    def damaged(self, pairs: list[tuple[int, int]]) -> None:
+        for p in pairs:
+            self._pending.setdefault(p, None)
+        self._kick()
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def _multi(self, sid: int) -> bool:
+        return len(self.stripe_missing(sid)) >= 2
+
+    # -- scheduling ----------------------------------------------------------
+    def _next_group(self) -> list[tuple[int, int]]:
+        """Pick the next plan group: multi-failure stripes first, then the
+        lowest block id; the group is every pending pair sharing that
+        block id and priority class (one plan == one batched launch)."""
+        best_key = None
+        for (sid, b) in self._pending:
+            prio = 0 if self._multi(sid) else 1
+            if best_key is None or (prio, b) < best_key:
+                best_key = (prio, b)
+        prio, block = best_key
+        return [(sid, b) for (sid, b) in self._pending
+                if b == block and (0 if self._multi(sid) else 1) == prio]
+
+    def _job_hours(self, group: list[tuple[int, int]]) -> float:
+        if any(self._multi(sid) for sid, _ in group):
+            return self.params.T_hours          # prioritised, μ' = 1/T
+        traffic_TB = sum(self._eff[b] for _, b in group) * self.block_TB
+        # δ=0 with zero cross traffic would yield zero-duration jobs and a
+        # livelocked event loop when a job re-enqueues its dropped pairs.
+        return max(traffic_TB / self._bw, 1e-9)
+
+    def _pair_traffic(self, sid: int, b: int) -> tuple[int, int]:
+        """(total, cross) blocks read to repair (sid, b) given the stripe's
+        CURRENT erasure pattern. Single failure (or plan sources intact):
+        the minimal plan. Otherwise the real multi-erasure decode plan —
+        whose sources differ, e.g. a UniLRC double-failure inside one
+        local group reads global parities from other clusters even under
+        the native placement."""
+        plan = plans_for(self.placement.code)[b]
+        others = set(self.stripe_missing(sid)) - {b}
+        if not others.intersection(plan.sources):
+            return (int(self._traffic[b, 0]), int(self._traffic[b, 1]))
+        try:
+            dplan = decode_plan_cached(self.placement.code,
+                                       tuple(others | {b}))
+        except ValueError:                       # beyond tolerance right now
+            return (int(self._traffic[b, 0]), int(self._traffic[b, 1]))
+        cross = self.placement.cross_cluster_cost(b, dplan.sources)
+        return (len(dplan.sources), cross)
+
+    def _kick(self) -> None:
+        if self._in_flight is not None or not self._pending:
+            return
+        group = self._next_group()
+        for p in group:
+            del self._pending[p]
+        hours = self._job_hours(group)
+        self._in_flight = self.sim.schedule(hours, REPAIR_DONE,
+                                            pairs=group, hours=hours)
+
+    # -- completion ----------------------------------------------------------
+    def _handle_done(self, sim: Simulator, ev: Event) -> None:
+        group: list[tuple[int, int]] = ev.payload["pairs"]
+        self._in_flight = None
+        self.ledger.jobs += 1
+        self.ledger.busy_hours += ev.payload["hours"]
+        placed = group
+        if self.codec is not None:
+            exclude = (self.exclude_node_of(*group[0])
+                       if self.exclude_node_of else -1)
+            report = self.codec.rebuild_blocks_report(
+                group, exclude_node=exclude)
+            self.ledger.kernel_launches += report.launches
+            self.ledger.data_bytes_read += (report.inner_bytes
+                                            + report.cross_bytes)
+            if report.placed < report.requested:
+                # unrecoverable right now (overlapping failure landed while
+                # this job was in flight) — the owner decides whether the
+                # stripe is lost; recoverable leftovers re-enter the queue.
+                placed = [p for p in group if self.codec.store.available(*p)]
+        for sid, b in placed:
+            total, cross = self._pair_traffic(sid, b)
+            self.ledger.repaired_blocks += 1
+            self.ledger.inner_blocks_read += total - cross
+            self.ledger.cross_blocks_read += cross
+        dropped = [p for p in group if p not in set(placed)]
+        self.ledger.dropped_blocks += len(dropped)
+        self.on_repaired(placed)
+        # transiently unrecoverable pairs go back in the queue; each job
+        # costs positive time, so retries cannot livelock the clock.
+        if dropped:
+            self.damaged(dropped)
+        else:
+            self._kick()

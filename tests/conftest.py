@@ -1,0 +1,20 @@
+"""Shared fixtures.
+
+`kernel_counters` is the sanctioned way to assert on kernel launch
+counts: it hands the test a freshly-zeroed `ops.KERNEL_LAUNCHES` and
+zeroes it again afterwards, so batched-engine tests and simulator tests
+(whose RepairLedger snapshots the same counters) can interleave in one
+process without inheriting each other's launches.
+"""
+import pytest
+
+from repro.kernels import ops
+
+
+@pytest.fixture
+def kernel_counters():
+    ops.reset_kernel_launch_counts()
+    try:
+        yield ops.KERNEL_LAUNCHES
+    finally:
+        ops.reset_kernel_launch_counts()

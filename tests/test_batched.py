@@ -63,15 +63,14 @@ def test_apply_decode_many_matches_per_stripe():
         assert np.array_equal(np.asarray(rec[e]), cw[:, e]), e
 
 
-def test_encode_many_wide_single_launch():
+def test_encode_many_wide_single_launch(kernel_counters):
     """Acceptance: S=8 stripes of the widest paper code (210, 180) issue
     ONE gf_bitmatmul launch and match the numpy oracle byte-for-byte."""
     code = paper_schemes("180-of-210")["UniLRC"]
     rng = np.random.default_rng(3)
     data = rng.integers(0, 256, (8, code.k, B), dtype=np.uint8)
-    ops.reset_kernel_launch_counts()
     batched = np.asarray(ops.encode_many(code, data))
-    assert ops.KERNEL_LAUNCHES["gf_bitmatmul"] == 1
+    assert kernel_counters["gf_bitmatmul"] == 1
     for s in range(8):
         assert np.array_equal(batched[s], code.encode(data[s])), s
 
@@ -114,15 +113,14 @@ def _payload(code, bs, stripes, seed=0):
     return rng.integers(0, 256, size=n, dtype=np.uint8).tobytes()
 
 
-def test_write_is_one_launch_and_reads_back():
+def test_write_is_one_launch_and_reads_back(kernel_counters):
     code = make_unilrc(1, 4)
     store = BlockStore(ClusterTopology(4, 8))
     codec = StripeCodec(code, store, block_size=1024)
     payload = _payload(code, 1024, stripes=4)
-    ops.reset_kernel_launch_counts()
     metas = codec.write(payload)
     assert len(metas) == 4
-    assert ops.KERNEL_LAUNCHES["gf_bitmatmul"] == 1
+    assert kernel_counters["gf_bitmatmul"] == 1
     assert codec.read_all(metas) == payload
 
 
@@ -152,7 +150,7 @@ def test_batched_recovery_matches_oracle_codec():
     assert results[True] == results[False]
 
 
-def test_reconstruct_node_batches_by_plan():
+def test_reconstruct_node_batches_by_plan(kernel_counters):
     """Healing a node holding one block per stripe over S stripes issues
     one recovery launch per distinct lost block id, not per stripe.
 
@@ -169,10 +167,10 @@ def test_reconstruct_node_batches_by_plan():
     distinct_blocks = {b for _, b in lost}
     assert len(lost) > len(distinct_blocks)   # some group has >= 2 stripes
     store.fail_node(victim)
-    ops.reset_kernel_launch_counts()
+    before = sum(kernel_counters.values())
     rebuilt = codec.reconstruct_node(victim)
     assert rebuilt == len(lost)
-    launches = sum(ops.KERNEL_LAUNCHES.values())
+    launches = sum(kernel_counters.values()) - before
     assert launches == len(distinct_blocks), (launches, lost)
     store.heal_node(victim)
     assert codec.read_all(metas) == payload
@@ -220,7 +218,7 @@ def test_rebuild_skips_undecodable_stripes():
     assert not store.available(0, 0)
 
 
-def test_max_batch_stripes_caps_launches_not_bytes():
+def test_max_batch_stripes_caps_launches_not_bytes(kernel_counters):
     """A small max_batch_stripes chunks the encode into several launches
     but the written stripes are identical to the unbounded batch."""
     code = make_unilrc(1, 4)
@@ -230,10 +228,10 @@ def test_max_batch_stripes_caps_launches_not_bytes():
         store = BlockStore(ClusterTopology(4, 8))
         codec = StripeCodec(code, store, block_size=512,
                             max_batch_stripes=cap)
-        ops.reset_kernel_launch_counts()
+        before = kernel_counters["gf_bitmatmul"]
         metas = codec.write(payload)
         expect = 1 if cap >= 5 else -(-5 // cap)
-        assert ops.KERNEL_LAUNCHES["gf_bitmatmul"] == expect, cap
+        assert kernel_counters["gf_bitmatmul"] - before == expect, cap
         outs[cap] = codec.read_all(metas)
         assert outs[cap] == payload
     assert outs[64] == outs[2]

@@ -3,7 +3,6 @@ cluster-failure tolerance, reconstruction, straggler reads, disk tier."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.ckpt import (BlockStore, CheckpointManager, ClusterTopology,
                         DiskBlockStore)
@@ -197,7 +196,7 @@ def test_crosspod_gradient_compression_in_shard_map():
     (the cross-pod all-reduce leg) — decompressed mean stays within the
     int8 quantisation bound."""
     import jax
-    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
     from repro.optim import compress_grads, decompress_grads
 

@@ -6,10 +6,10 @@ pytest.importorskip(
     "hypothesis", reason="hypothesis not installed; property tests skipped")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (decode_plan, make_alrc, make_unilrc, paper_schemes,
+from repro.core import (decode_plan, make_alrc, make_unilrc,
                         tolerable_failures)
-from repro.core.gf import (GF_MUL_TABLE, bitplanes_to_bytes,
-                           bytes_to_bitplanes, expand_coding_matrix_to_bits,
+from repro.core.gf import (bitplanes_to_bytes, bytes_to_bitplanes,
+                           expand_coding_matrix_to_bits,
                            gf_inv, gf_matmul, gf_mul, gf_solve)
 
 CODES = {

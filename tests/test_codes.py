@@ -4,9 +4,9 @@ import itertools
 import numpy as np
 import pytest
 
-from repro.core import (ALL_SCHEMES, all_recovery_plans, decode_plan,
+from repro.core import (all_recovery_plans, decode_plan,
                         default_placement, locality_metrics, make_alrc,
-                        make_olrc, make_rs, make_ulrc, make_unilrc,
+                        make_rs, make_unilrc,
                         paper_schemes, single_recovery_plan,
                         tolerable_failures, verify_erasure_tolerance)
 from repro.core.gf import gf_rank

@@ -5,8 +5,7 @@ import numpy as np
 
 from repro.data import DataConfig, SyntheticTokenDataset
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
-                         compress_grads, cosine_lr, decompress_grads,
-                         global_norm)
+                         compress_grads, cosine_lr, decompress_grads)
 
 
 def test_data_deterministic_and_seekable():

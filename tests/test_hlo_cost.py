@@ -2,8 +2,6 @@
 collective multiplication — validated on a real compiled module."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.launch.hlo_cost import analyze, parse_module
 

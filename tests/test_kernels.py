@@ -12,7 +12,7 @@ import pytest
 from repro.core import make_unilrc, paper_schemes
 from repro.core.codec import decode_plan, single_recovery_plan
 from repro.core.gf import expand_coding_matrix_to_bits, gf_matmul
-from repro.kernels import apply_decode, apply_matrix, encode, recover_single
+from repro.kernels import apply_decode, encode, recover_single
 from repro.kernels.gf_bitmatmul import gf_bitmatmul
 from repro.kernels.ref import gf_bitmatmul_ref, gf_matmul_ref
 from repro.kernels.xor_reduce import xor_reduce
@@ -125,7 +125,6 @@ def test_ref_table_path_matches_host():
 # Pallas flash attention forward vs naive oracle (interpret mode)
 # ---------------------------------------------------------------------------
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_fwd

@@ -1,10 +1,7 @@
 """Launch layer: cell enumeration, HLO collective parser, specs sanity."""
 import jax
-import jax.numpy as jnp
-import numpy as np
-import pytest
 
-from repro.configs import all_archs, get_config
+from repro.configs import get_config
 from repro.launch.hlo import collective_stats, count_ops
 from repro.launch.shapes import SHAPES, all_cells, cell_status, runnable_cells
 

@@ -1,0 +1,98 @@
+"""core/mttdl.py edge cases + unit agreement with the simulator's
+bandwidth accounting (ISSUE 2 satellite)."""
+import math
+
+import pytest
+
+from repro.core import make_rs, make_unilrc
+from repro.core.mttdl import (HOURS_PER_YEAR, MTTDLParams,
+                              failure_rate_per_hour, markov_rates,
+                              mttdl_years_stripe,
+                              repair_bandwidth_TB_per_hour, repair_rates,
+                              tolerable_failures)
+from repro.sim.repair import node_repair_hours
+
+P = MTTDLParams()
+
+
+# ---------------------------------------------------------------------------
+# Degenerate chains
+# ---------------------------------------------------------------------------
+
+def test_f0_first_failure_is_loss():
+    """f=0: no repair state exists; MTTDL = 1/(nλ) exactly."""
+    lam = failure_rate_per_hour(P)
+    for n in (1, 6, 42):
+        expect = 1.0 / (n * lam) / HOURS_PER_YEAR
+        got = mttdl_years_stripe(n, 0, C_blocks=1.0, p=P)
+        assert math.isclose(got, expect, rel_tol=1e-12), n
+
+
+def test_single_state_chain_is_node_mttf():
+    """n=1, f=0 — the truly degenerate single-live-state chain: MTTDL is
+    just the node MTTF."""
+    got = mttdl_years_stripe(1, 0, C_blocks=1.0, p=P)
+    assert math.isclose(got, P.node_mttf_years, rel_tol=1e-12)
+
+
+def test_f1_closed_form():
+    """f=1 two-state chain has the textbook closed form
+    E = (（n-1)λ + μ + nλ) / (n(n-1)λ²) — pin the solver against it."""
+    lam, mu, _ = markov_rates(1.0, P)
+    n = 10
+    expect_h = ((n - 1) * lam + mu + n * lam) / (n * (n - 1) * lam * lam)
+    got = mttdl_years_stripe(n, 1, C_blocks=1.0, p=P)
+    assert math.isclose(got, expect_h / HOURS_PER_YEAR, rel_tol=1e-9)
+
+
+def test_mttdl_monotone_in_f_and_traffic():
+    for f in range(0, 5):
+        a = mttdl_years_stripe(20, f, 2.0, P)
+        b = mttdl_years_stripe(20, f + 1, 2.0, P)
+        assert b > a, f
+    # heavier recovery traffic => slower repair => lower MTTDL (f >= 1)
+    assert mttdl_years_stripe(20, 2, 1.0, P) > mttdl_years_stripe(20, 2, 8.0, P)
+
+
+def test_tolerable_failures_fallback():
+    code = make_unilrc(1, 4)
+    assert tolerable_failures(code) == code.meta["d"] - 1
+    rs = make_rs(8, 5)
+    assert tolerable_failures(rs) == 3            # d = n-k+1 = 4
+    # meta without d: falls back to g+2 via meta g or n-k
+    stripped = code.meta.copy()
+    del stripped["d"]
+    object.__setattr__(code, "meta", stripped)
+    assert tolerable_failures(code) == code.meta["g"] + 1
+
+
+# ---------------------------------------------------------------------------
+# Unit agreement with the simulator's bandwidth accounting
+# ---------------------------------------------------------------------------
+
+def test_repair_rates_units_match_scheduler():
+    """The scheduler's whole-node repair time must be exactly 1/μ: both
+    sides divide C·S TB by the ε(N-1)B pipe. If either side changes
+    units (bits vs bytes, per-block vs per-node) this breaks."""
+    for C in (0.5, 1.0, 3.7):
+        mu, _ = repair_rates(C, P)
+        assert math.isclose(node_repair_hours(C, P), 1.0 / mu, rel_tol=1e-12)
+
+
+def test_markov_rates_composition():
+    lam, mu, mu_p = markov_rates(2.0, P)
+    assert lam == failure_rate_per_hour(P)
+    assert (mu, mu_p) == repair_rates(2.0, P)
+    assert mu_p == 1.0 / P.T_hours
+
+
+def test_repair_bandwidth_units():
+    """ε(N-1)B with paper defaults: 0.1·399·1Gb/s = 39.9 Gb/s
+    = 17.955 TB/h."""
+    assert math.isclose(repair_bandwidth_TB_per_hour(P),
+                        0.1 * 399 * 1e9 / 8 * 3600 / 1e12, rel_tol=1e-12)
+
+
+def test_zero_traffic_rejected():
+    with pytest.raises(ZeroDivisionError):
+        repair_rates(0.0, P)

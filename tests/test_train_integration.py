@@ -3,7 +3,6 @@ checkpoint restore resumes bit-identically (same loss trajectory)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.ckpt import BlockStore, CheckpointManager, ClusterTopology
 from repro.core.codes import make_unilrc
