@@ -1,18 +1,24 @@
 """Bench-regression gate: fail CI when batched recovery stops paying off.
 
-Compares a fresh `fig_batched_recovery` result against the committed
-baseline JSON and enforces an absolute floor on the batched-recovery
-speedup. The committed baseline shows 3.7-4.5x across the paper schemes;
-a fresh run below `--min-speedup` (default 2x) means the stripe-batch
-grid dimension regressed into per-stripe work and the PR should not
-merge.
+Compares fresh `fig_batched_recovery` / `fig_correlated_recovery` results
+against the committed baseline JSONs and enforces an absolute floor on
+the batched speedups. The committed baselines show 3.7-4.5x (batched
+single-failure recovery) and 2.9-4.7x (pattern-grouped correlated
+recovery) across the paper schemes; a fresh run below `--min-speedup`
+(default 2x) means the stripe-batch grid dimension — or the
+pattern-grouped multi-erasure engine — regressed into per-stripe work
+and the PR should not merge.
 
 Usage (what .github/workflows/ci.yml runs):
     cp artifacts/bench/fig_batched_recovery.json /tmp/baseline.json
-    python -m benchmarks.run --tiny --only fig_batched_recovery
+    cp artifacts/bench/fig_correlated_recovery.json /tmp/corr_baseline.json
+    python -m benchmarks.run --tiny \
+        --only fig_batched_recovery,fig_correlated_recovery
     python -m benchmarks.check_regression \
         --baseline /tmp/baseline.json \
-        --fresh artifacts/bench/fig_batched_recovery.json
+        --fresh artifacts/bench/fig_batched_recovery.json \
+        --corr-baseline /tmp/corr_baseline.json \
+        --corr-fresh artifacts/bench/fig_correlated_recovery.json
 """
 from __future__ import annotations
 
@@ -22,39 +28,67 @@ import pathlib
 import sys
 
 
+def _row_id(row: dict) -> str:
+    rid = row.get("scheme", "?")
+    if "scenario" in row:
+        rid += f"/{row['scenario']}"
+    return rid
+
+
 def check(baseline: dict, fresh: dict, min_speedup: float,
-          rel_floor: float = 0.4) -> list[str]:
+          rel_floor: float = 0.4, key: str = "rec_speedup",
+          what: str = "batched recovery") -> list[str]:
     """Return a list of human-readable failures (empty == gate passes).
 
-    Two conditions per scheme, both enforced:
-      * absolute: rec_speedup >= min_speedup (the 2x ISSUE criterion);
-      * relative: rec_speedup >= rel_floor * the committed baseline's —
+    Two conditions per row (scheme, or scheme/scenario), both enforced:
+      * absolute: speedup >= min_speedup (the 2x ISSUE criterion);
+      * relative: speedup >= rel_floor * the committed baseline's —
         catches a scheme sliding from 4.5x to 2.1x, which the absolute
         floor alone would wave through. rel_floor is loose (0.4) because
         interpret-mode timings on shared CI runners are noisy.
     """
     failures: list[str] = []
-    base_by_scheme = {r["scheme"]: r for r in baseline.get("rows", [])}
+    base_by_id = {_row_id(r): r for r in baseline.get("rows", [])}
     rows = fresh.get("rows", [])
     if not rows:
-        return ["fresh result has no rows — benchmark did not run"]
+        return [f"fresh {what} result has no rows — benchmark did not run"]
     for row in rows:
-        scheme = row["scheme"]
-        speedup = float(row["rec_speedup"])
-        base = base_by_scheme.get(scheme, {})
-        base_speedup = float(base.get("rec_speedup", 0.0))
+        rid = _row_id(row)
+        speedup = float(row[key])
+        base = base_by_id.get(rid, {})
+        base_speedup = float(base.get(key, 0.0))
         note = (f"(baseline {base_speedup:.2f}x)" if base else
                 "(no baseline row)")
-        print(f"{scheme}: rec_speedup {speedup:.2f}x {note}")
+        print(f"{rid}: {key} {speedup:.2f}x {note}")
         if speedup < min_speedup:
             failures.append(
-                f"{scheme}: batched recovery speedup {speedup:.2f}x is "
+                f"{rid}: {what} speedup {speedup:.2f}x is "
                 f"below the {min_speedup:.1f}x floor {note}")
         elif speedup < rel_floor * base_speedup:
             failures.append(
-                f"{scheme}: batched recovery speedup {speedup:.2f}x fell "
+                f"{rid}: {what} speedup {speedup:.2f}x fell "
                 f"below {rel_floor:.0%} of the committed baseline "
                 f"{base_speedup:.2f}x")
+    return failures
+
+
+def check_correlated(baseline: dict, fresh: dict, min_speedup: float,
+                     rel_floor: float = 0.4) -> list[str]:
+    """fig_correlated_recovery gate: the wall-clock floor, plus a launch
+    invariant the timings cannot hide — the engine must issue one launch
+    per distinct erasure pattern, not per stripe."""
+    failures = check(baseline, fresh, min_speedup, rel_floor,
+                     key="speedup", what="correlated recovery")
+    for row in fresh.get("rows", []):
+        if "launches_batched" not in row or "patterns" not in row:
+            failures.append(
+                f"{_row_id(row)}: row lacks launches_batched/patterns — "
+                f"the launch invariant cannot be checked (schema drift?)")
+        elif row["launches_batched"] > row["patterns"]:
+            failures.append(
+                f"{_row_id(row)}: {row['launches_batched']} batched "
+                f"launches for {row['patterns']} erasure pattern(s) — "
+                f"pattern grouping regressed into per-stripe work")
     return failures
 
 
@@ -64,8 +98,12 @@ def main(argv: list[str] | None = None) -> int:
                     help="committed fig_batched_recovery.json")
     ap.add_argument("--fresh", required=True, type=pathlib.Path,
                     help="fig_batched_recovery.json from this run")
+    ap.add_argument("--corr-baseline", type=pathlib.Path,
+                    help="committed fig_correlated_recovery.json")
+    ap.add_argument("--corr-fresh", type=pathlib.Path,
+                    help="fig_correlated_recovery.json from this run")
     ap.add_argument("--min-speedup", type=float, default=2.0,
-                    help="absolute floor on rec_speedup per scheme")
+                    help="absolute floor on batched speedup per row")
     ap.add_argument("--rel-floor", type=float, default=0.4,
                     help="fresh speedup must also reach this fraction of "
                          "the committed baseline's")
@@ -74,6 +112,13 @@ def main(argv: list[str] | None = None) -> int:
     baseline = json.loads(args.baseline.read_text())
     fresh = json.loads(args.fresh.read_text())
     failures = check(baseline, fresh, args.min_speedup, args.rel_floor)
+    if (args.corr_baseline is None) != (args.corr_fresh is None):
+        ap.error("--corr-baseline and --corr-fresh go together")
+    if args.corr_fresh is not None:
+        failures += check_correlated(
+            json.loads(args.corr_baseline.read_text()),
+            json.loads(args.corr_fresh.read_text()),
+            args.min_speedup, args.rel_floor)
     if failures:
         for f in failures:
             print(f"REGRESSION: {f}", file=sys.stderr)

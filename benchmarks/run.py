@@ -20,8 +20,9 @@ def main():
                     help="CI smoke sizes: sets REPRO_BENCH_TINY=1; "
                          "benchmarks that support it shrink "
                          "(fig_sim_reliability trials, "
-                         "fig_batched_recovery block bytes); artifacts "
-                         "are still written")
+                         "fig_batched_recovery block bytes, "
+                         "fig_correlated_recovery stripes+block bytes); "
+                         "artifacts are still written")
     ap.add_argument("--only", default="",
                     help="comma-separated benchmark names")
     args = ap.parse_args()
@@ -30,8 +31,8 @@ def main():
 
     from . import (fig3_xor_vs_mul, fig5_tradeoff, fig8_locality,
                    fig10_operations, fig11_bandwidth, fig12_workload,
-                   fig_batched_recovery, fig_sim_reliability, roofline,
-                   table4_mttdl)
+                   fig_batched_recovery, fig_correlated_recovery,
+                   fig_sim_reliability, roofline, table4_mttdl)
     suites = [
         ("fig5_tradeoff", fig5_tradeoff.main),
         ("fig8_locality", fig8_locality.main),
@@ -45,6 +46,7 @@ def main():
             ("fig3_xor_vs_mul", fig3_xor_vs_mul.main),
             ("fig11_bandwidth", fig11_bandwidth.main),
             ("fig_batched_recovery", fig_batched_recovery.main),
+            ("fig_correlated_recovery", fig_correlated_recovery.main),
         ]
     suites.append(("roofline", roofline.main))
 

@@ -1,9 +1,9 @@
 from .serialize import serialize_tree, deserialize_tree, Manifest
 from .store import ClusterTopology, BlockStore, DiskBlockStore, NodeFailure
-from .stripe import RepairReport, StripeCodec, choose_code
+from .stripe import RecoveryStats, RepairReport, StripeCodec, choose_code
 from .manager import CheckpointManager, RestoreReport
 
 __all__ = ["serialize_tree", "deserialize_tree", "Manifest",
            "ClusterTopology", "BlockStore", "DiskBlockStore", "NodeFailure",
-           "RepairReport", "StripeCodec", "choose_code",
+           "RecoveryStats", "RepairReport", "StripeCodec", "choose_code",
            "CheckpointManager", "RestoreReport"]

@@ -84,6 +84,22 @@ class BlockStore:
     def blocks_on_node(self, node: int) -> list[tuple]:
         return [k for k, nd in self._block_node.items() if nd == node]
 
+    def nodes_holding(self, stripe: int) -> set[int]:
+        """Nodes currently holding any block of `stripe` — the public view
+        the rebuild engine consults to avoid co-locating re-placed blocks
+        of one stripe (the invariant StripeCodec's constructor validates)."""
+        return {nd for (s, _b), nd in self._block_node.items() if s == stripe}
+
+    def nodes_holding_many(self, stripes: set[int]) -> dict[int, set[int]]:
+        """nodes_holding for many stripes in ONE index pass — the rebuild
+        engine heals S stripes per call, and a per-stripe scan would make
+        node repair O(S * total_blocks)."""
+        out: dict[int, set[int]] = {s: set() for s in stripes}
+        for (s, _b), nd in self._block_node.items():
+            if s in stripes:
+                out[s].add(nd)
+        return out
+
     # -- failure / straggler injection --------------------------------------
     def fail_node(self, node: int):
         self._failed.add(node)
@@ -119,6 +135,13 @@ class BlockStore:
                  and self.topo.cluster_of(node) != reader_cluster)
         self.traffic.add(len(data), cross)
         return data
+
+    def drop_block(self, stripe: int, block: int):
+        """Simulate loss of a single block replica (latent sector error /
+        scrub-detected corruption) while its node stays up. Lets tests and
+        failure injection construct arbitrary per-stripe erasure patterns."""
+        self._blocks.pop((stripe, block), None)
+        self._block_node.pop((stripe, block), None)
 
     def delete_node_blocks(self, node: int):
         """Simulate permanent loss of a node's disks."""
@@ -157,7 +180,7 @@ class DiskBlockStore(BlockStore):
         if node is None:
             raise KeyError(key)
         if node in self._failed:
-            raise NodeFailure(f"node {node}")
+            raise NodeFailure(f"node {node} (stripe {stripe} block {block})")
         data = self._path(stripe, block, node).read_bytes()
         cross = (reader_cluster is not None
                  and self.topo.cluster_of(node) != reader_cluster)
@@ -174,6 +197,14 @@ class DiskBlockStore(BlockStore):
                 s, b = f.name[1:].split("_b")
                 self._blocks[(int(s), int(b))] = b""
                 self._block_node[(int(s), int(b))] = node
+
+    def drop_block(self, stripe: int, block: int):
+        node = self._block_node.get((stripe, block))
+        if node is not None:
+            p = self._path(stripe, block, node)
+            if p.exists():
+                p.unlink()
+        super().drop_block(stripe, block)
 
     def delete_node_blocks(self, node: int):
         for key in self.blocks_on_node(node):

@@ -18,9 +18,16 @@ MXU bit-plane GF matmul, single-failure decode via the VPU XOR kernel.
 Multi-stripe operations (write, read_all, reconstruct_node) group work by
 recovery plan and drive the stripe-batched kernels: one encode launch per
 write() call, one XOR-fold launch per failed-node group — S stripes cost
-one launch, not S. Plans come from the memoized layer in core.codec
-(plans_for / decode_plan_cached), so the GF Gaussian elimination runs once
-per (code, erasure pattern), not once per stripe.
+one launch, not S. Multi-erasure recovery is *pattern-grouped*: each
+damaged stripe's live erasure pattern is computed once, stripes sharing a
+cached DecodePlan (decode_plan_cached returns the identical plan object
+per (code, pattern)) ride ONE apply_decode_many launch, and the correlated
+worst case costs O(#distinct patterns) launches instead of O(S).
+`recover_blocks(pairs)` is the public engine; degraded_read, normal_read,
+read_all, rebuild_blocks, and the failure simulator's data-path repair
+mode all route through it. Plans come from the memoized layer in
+core.codec (plans_for / decode_plan_cached), so the GF Gaussian
+elimination runs once per (code, erasure pattern), not once per stripe.
 choose_code() picks (α, z) for a topology + target rate, MTTDL-checked.
 """
 from __future__ import annotations
@@ -38,7 +45,7 @@ from repro.core.mttdl import MTTDLParams, code_mttdl_years
 from repro.core.placement import Placement, default_placement
 from repro.kernels import ops
 
-from .store import BlockStore, ClusterTopology, NodeFailure
+from .store import BlockStore, ClusterTopology
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,10 +66,27 @@ class RepairReport:
     launches: int         # batched kernel launches issued (0 on oracle path)
     inner_bytes: int      # block bytes read within the reader's cluster
     cross_bytes: int      # block bytes read across cluster gateways
+    plan_groups: int = 0  # batched groups executed (fast + pattern groups)
+    patterns: int = 0     # distinct multi-erasure patterns decoded
+    multi_pairs: int = 0  # pairs recovered via the pattern-decode path
 
     @property
     def dropped(self) -> int:
         return self.requested - self.placed
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryStats:
+    """Grouping accounting from one recover_blocks() call: how the engine
+    carved the request into batched launches."""
+    fast_groups: int      # single-failure groups (one minimal plan each)
+    pattern_groups: int   # multi-erasure groups (one DecodePlan each)
+    fast_pairs: int       # pairs recovered via the minimal-plan fast path
+    multi_pairs: int      # pairs recovered via the pattern-decode path
+
+    @property
+    def plan_groups(self) -> int:
+        return self.fast_groups + self.pattern_groups
 
 
 class StripeCodec:
@@ -167,49 +191,32 @@ class StripeCodec:
     # -- reads ---------------------------------------------------------------
     def normal_read(self, meta: StripeMeta, *,
                     reader_cluster: Optional[int] = None) -> bytes:
-        """Read the k data blocks; degraded-read any that are unavailable."""
+        """Read the k data blocks; unavailable ones are recovered in one
+        recover_blocks() call — one launch per erasure pattern / fast
+        group, not one decode per missing block."""
         k = self.code.k
+        sid = meta.stripe_id
+        missing = [(sid, b) for b in range(k)
+                   if not self.store.available(sid, b)]
+        rec = (self.recover_blocks(missing, reader_cluster=reader_cluster)
+               if missing else {})
         out = bytearray()
         for b in range(k):
-            try:
-                blk = self.store.get(meta.stripe_id, b,
-                                     reader_cluster=reader_cluster)
-            except NodeFailure:
-                blk = self.degraded_read(meta, b,
-                                         reader_cluster=reader_cluster)
-            out += blk
+            out += (rec[(sid, b)] if (sid, b) in rec else
+                    self.store.get(sid, b, reader_cluster=reader_cluster))
         return bytes(out[:meta.nbytes])
 
     def degraded_read(self, meta: StripeMeta, block: int, *,
                       reader_cluster: Optional[int] = None) -> bytes:
-        """Recover one unavailable block from survivors.
+        """Recover one unavailable block from survivors via the engine.
 
         Fast path: the minimal single-failure plan (group-local, XOR-only
-        for UniLRC). If plan sources are also unavailable, fall back to a
-        general multi-erasure decode.
+        for UniLRC). If plan sources are also unavailable, the engine
+        decodes the stripe's full live erasure pattern.
         """
         sid = meta.stripe_id
-        plan = plans_for(self.code)[block]
-        if all(self.store.available(sid, s) for s in plan.sources):
-            blocks = {s: np.frombuffer(
-                self.store.get(sid, s, reader_cluster=reader_cluster),
-                np.uint8) for s in plan.sources}
-            if self.use_kernels:
-                return np.asarray(ops.recover_single(plan, blocks)).tobytes()
-            return plan.apply(blocks).tobytes()
-        # correlated failures: full decode
-        erased = [b for b in range(self.code.n)
-                  if not self.store.available(sid, b)]
-        if block not in erased:
-            erased.append(block)
-        dplan = decode_plan_cached(self.code, tuple(erased))
-        blocks = {s: np.frombuffer(
-            self.store.get(sid, s, reader_cluster=reader_cluster), np.uint8)
-            for s in dplan.sources}
-        if self.use_kernels:
-            rec = ops.apply_decode(dplan, blocks)
-            return np.asarray(rec[block]).tobytes()
-        return dplan.apply(blocks)[block].tobytes()
+        return self.recover_blocks(
+            [(sid, block)], reader_cluster=reader_cluster)[(sid, block)]
 
     def straggler_read(self, meta: StripeMeta, group_idx: int, *,
                        reader_cluster: Optional[int] = None
@@ -241,8 +248,10 @@ class StripeCodec:
         Δ = old ⊕ new — the partial-update property the paper's related
         work (CoRD [38]) builds on. Training-state deltas between
         checkpoints touch a fraction of blocks; this writes O(Δ·(n−k)/k)
-        bytes instead of re-encoding the stripe. Returns parity blocks
-        touched."""
+        bytes instead of re-encoding the stripe. All reads (old data +
+        every touched parity) complete before the first write, so a
+        NodeFailure anywhere aborts with the stripe untouched. Returns
+        parity blocks touched."""
         assert self.code.block_type[block] == 'd', "update data blocks only"
         sid = meta.stripe_id
         old = np.frombuffer(self.store.get(sid, block,
@@ -250,64 +259,100 @@ class StripeCodec:
                             np.uint8)
         new = np.frombuffer(new_data, np.uint8)
         assert new.shape == old.shape
-        delta = old ^ new
-        self.store.put(sid, block, self.store.node_of(sid, block),
-                       new.tobytes())
-        touched = 0
         coeffs = self.code.A[:, block]              # (n-k,) parity coeffs
-        for pi, c in enumerate(coeffs):
-            if c == 0:
-                continue
-            pblock = self.code.k + pi
-            pold = np.frombuffer(self.store.get(
-                sid, pblock, reader_cluster=reader_cluster), np.uint8)
-            if self.use_kernels:
-                term = np.asarray(ops.apply_matrix(
-                    np.array([[c]], np.uint8), delta[None, :]))[0]
+        touched = [int(pi) for pi in np.flatnonzero(coeffs)]
+        # Stage phase: EVERY read happens before ANY write. A NodeFailure
+        # on a touched parity must surface with the stripe fully intact —
+        # the old write-data-first ordering left data updated and parities
+        # stale, so later decodes returned garbage with no error.
+        polds = {pi: np.frombuffer(self.store.get(
+            sid, self.code.k + pi, reader_cluster=reader_cluster), np.uint8)
+            for pi in touched}
+        delta = old ^ new
+        if touched:
+            if self.use_kernels:        # all delta terms, ONE matmul launch
+                terms = np.asarray(ops.apply_matrix(
+                    coeffs[touched][:, None], delta[None, :]))
             else:
                 from repro.core.gf import GF_MUL_TABLE
-                term = GF_MUL_TABLE[np.uint8(c), delta]
+                terms = np.stack(
+                    [GF_MUL_TABLE[coeffs[pi], delta] for pi in touched])
+        # Apply phase: every source value is staged, so no read can fail
+        # between the first and last put.
+        self.store.put(sid, block, self.store.node_of(sid, block),
+                       new.tobytes())
+        for i, pi in enumerate(touched):
+            pblock = self.code.k + pi
             self.store.put(sid, pblock, self.store.node_of(sid, pblock),
-                           (pold ^ term).tobytes())
-            touched += 1
-        return touched
+                           (polds[pi] ^ terms[i]).tobytes())
+        return len(touched)
 
     # -- batched recovery engine --------------------------------------------
-    def _meta_for(self, sid: int) -> StripeMeta:
-        meta = self._stripes.get(sid)
-        if meta is None:
-            meta = StripeMeta(sid, self.code.k * self.block_size,
-                              self.block_size)
-        return meta
+    def recover_blocks(self, pairs: list[tuple[int, int]], *,
+                       reader_cluster: Optional[int] = None,
+                       strict: bool = True
+                       ) -> dict[tuple[int, int], bytes]:
+        """Recover many (stripe, block) pairs: the pattern-grouped engine.
 
-    def _recover_batched(self, pairs: list[tuple[int, int]], *,
-                         reader_cluster: Optional[int] = None,
-                         strict: bool = True
-                         ) -> dict[tuple[int, int], bytes]:
-        """Recover many (stripe, block) pairs, grouped by recovery plan.
+        Two tiers, both batched over stripes:
 
-        Pairs share a plan iff they target the same block id (slot rotation
-        moves blocks across nodes per stripe, but the code structure — and
-        hence the minimal plan — depends only on the block). Each group
-        whose plan sources are all alive is recovered with ONE batched
-        kernel launch (XOR-fold for UniLRC's XOR-only plans); stripes with
-        additionally failed sources fall back to the per-stripe
-        multi-erasure path. With strict=False an unrecoverable pair is
-        omitted from the result instead of aborting the whole batch (reads
-        must raise; repair should heal everything it can)."""
+        * fast path — a requested block whose minimal single-failure plan
+          has no failed source (slot rotation moves blocks across nodes
+          per stripe, but the code structure — hence the minimal plan —
+          depends only on the block id). Grouped by block id; one
+          `recover_many` launch per group (XOR-fold for UniLRC's XOR-only
+          plans, group-local traffic — Property 2 is preserved even when
+          unrelated blocks of the stripe are down).
+        * pattern path — everything else. Each stripe's live erasure
+          pattern is computed ONCE (one availability scan), stripes are
+          grouped by pattern — `decode_plan_cached` returns the identical
+          DecodePlan per (code, pattern), so plan identity == pattern
+          identity — and each group rides ONE `apply_decode_many` launch
+          recovering every requested block of all its stripes. Correlated
+          failures over S stripes cost O(#distinct patterns) launches,
+          not O(S).
+
+        Groups larger than `max_batch_stripes` are chunked. With
+        strict=False an unrecoverable pair (pattern beyond the code's
+        tolerance) is omitted from the result instead of aborting the
+        whole batch (reads must raise; repair heals everything it can)."""
+        out, _ = self._recover_blocks(pairs, reader_cluster=reader_cluster,
+                                      strict=strict)
+        return out
+
+    def _recover_blocks(self, pairs: list[tuple[int, int]], *,
+                        reader_cluster: Optional[int] = None,
+                        strict: bool = True
+                        ) -> tuple[dict[tuple[int, int], bytes],
+                                   RecoveryStats]:
+        """recover_blocks plus grouping stats (see RecoveryStats)."""
         out: dict[tuple[int, int], bytes] = {}
-        by_block: dict[int, list[int]] = {}
-        for sid, b in pairs:
-            by_block.setdefault(b, []).append(sid)
-        for b, sids in sorted(by_block.items()):
-            plan = plans_for(self.code)[b]
-            fast = [sid for sid in sids
-                    if all(self.store.available(sid, s)
-                           for s in plan.sources)]
-            fast_set = set(fast)
-            slow = [sid for sid in sids if sid not in fast_set]
-            for i0 in range(0, len(fast), self.max_batch_stripes):
-                batch = fast[i0:i0 + self.max_batch_stripes]
+        by_stripe: dict[int, list[int]] = {}
+        for sid, b in dict.fromkeys(pairs):
+            by_stripe.setdefault(sid, []).append(b)
+        plans = plans_for(self.code)
+        n = self.code.n
+        fast: dict[int, list[int]] = {}      # block id -> [stripe ids]
+        # pattern -> [(stripe id, requested blocks under that pattern)]
+        slow: dict[tuple[int, ...], list[tuple[int, list[int]]]] = {}
+        for sid in sorted(by_stripe):
+            eset = {b for b in range(n)
+                    if not self.store.available(sid, b)}
+            slow_blocks = []
+            for b in by_stripe[sid]:
+                if eset.intersection(plans[b].sources):
+                    slow_blocks.append(b)
+                else:
+                    fast.setdefault(b, []).append(sid)
+            if slow_blocks:
+                pattern = tuple(sorted(eset.union(slow_blocks)))
+                slow.setdefault(pattern, []).append((sid, slow_blocks))
+
+        fast_pairs = 0
+        for b, sids in sorted(fast.items()):
+            plan = plans[b]
+            for i0 in range(0, len(sids), self.max_batch_stripes):
+                batch = sids[i0:i0 + self.max_batch_stripes]
                 stacked = {
                     s: np.stack([np.frombuffer(
                         self.store.get(sid, s,
@@ -320,15 +365,41 @@ class StripeCodec:
                     rec = plan.apply(stacked)   # broadcasts over (S, B)
                 for i, sid in enumerate(batch):
                     out[(sid, b)] = rec[i].tobytes()
-            for sid in slow:
-                try:
-                    out[(sid, b)] = self.degraded_read(
-                        self._meta_for(sid), b,
-                        reader_cluster=reader_cluster)
-                except (ValueError, NodeFailure):
-                    if strict:
-                        raise
-        return out
+            fast_pairs += len(sids)
+
+        multi_pairs = 0
+        pattern_groups = 0
+        for pattern, entries in sorted(slow.items()):
+            try:
+                dplan = decode_plan_cached(self.code, pattern)
+            except ValueError:          # beyond the code's tolerance now
+                if strict:
+                    raise
+                continue
+            pattern_groups += 1
+            # Every member stripe's erased set is a subset of `pattern`,
+            # so the plan's sources are alive for the whole group.
+            for i0 in range(0, len(entries), self.max_batch_stripes):
+                chunk = entries[i0:i0 + self.max_batch_stripes]
+                sids = [sid for sid, _ in chunk]
+                stacked = {
+                    s: np.stack([np.frombuffer(
+                        self.store.get(sid, s,
+                                       reader_cluster=reader_cluster),
+                        np.uint8) for sid in sids])
+                    for s in dplan.sources}
+                if self.use_kernels:
+                    rec = {e: np.asarray(v) for e, v in
+                           ops.apply_decode_many(dplan, stacked).items()}
+                else:
+                    rec = dplan.apply(stacked)      # {erased: (S, B)}
+                for i, (sid, blocks) in enumerate(chunk):
+                    for b in blocks:
+                        out[(sid, b)] = rec[b][i].tobytes()
+                        multi_pairs += 1
+        return out, RecoveryStats(
+            fast_groups=len(fast), pattern_groups=pattern_groups,
+            fast_pairs=fast_pairs, multi_pairs=multi_pairs)
 
     # -- reconstruction ------------------------------------------------------
     def _pick_rebuild_node(self, sid: int, block: int,
@@ -376,39 +447,36 @@ class StripeCodec:
         launches0 = ops.kernel_launch_snapshot()
         t = self.store.traffic
         inner0, cross0 = t.inner_bytes, t.cross_bytes
-        placed = self._rebuild_blocks(pairs, reader_cluster=reader_cluster,
-                                      exclude_node=exclude_node)
+        placed, stats = self._rebuild_blocks(
+            pairs, reader_cluster=reader_cluster, exclude_node=exclude_node)
         return RepairReport(
             requested=requested, placed=placed,
             launches=ops.launches_since(launches0),
             inner_bytes=t.inner_bytes - inner0,
-            cross_bytes=t.cross_bytes - cross0)
+            cross_bytes=t.cross_bytes - cross0,
+            plan_groups=stats.plan_groups, patterns=stats.pattern_groups,
+            multi_pairs=stats.multi_pairs)
 
     def _rebuild_blocks(self, pairs: list[tuple[int, int]], *,
                         reader_cluster: Optional[int] = None,
-                        exclude_node: int = -1) -> int:
+                        exclude_node: int = -1) -> tuple[int, RecoveryStats]:
         pairs = list(dict.fromkeys(pairs))   # duplicates would double-place
-        recovered = self._recover_batched(pairs,
-                                          reader_cluster=reader_cluster,
-                                          strict=False)
-        needed = {sid for sid, _b in pairs}
-        occupied: dict[int, set[int]] = {}
-        for (s2, _b2), nd in self.store._block_node.items():
-            if s2 in needed:
-                occupied.setdefault(s2, set()).add(nd)
+        recovered, stats = self._recover_blocks(
+            pairs, reader_cluster=reader_cluster, strict=False)
+        occupied = self.store.nodes_holding_many({sid for sid, _b in pairs})
         placed = 0
         for (sid, b) in pairs:
             data = recovered.get((sid, b))
             if data is None:                 # unrecoverable right now
                 continue
-            occ = occupied.setdefault(sid, set())
+            occ = occupied[sid]
             cand = self._pick_rebuild_node(sid, b, occ, exclude_node)
             if cand is None:
                 continue
             self.store.put(sid, b, cand, data)
             occ.add(cand)
             placed += 1
-        return placed
+        return placed, stats
 
     def reconstruct_node(self, node: int) -> int:
         """Rebuild every block the failed node held, re-placing each on a
@@ -426,8 +494,8 @@ class StripeCodec:
     def read_all(self, metas: list[StripeMeta], *,
                  reader_cluster: Optional[int] = None) -> bytes:
         """Read every stripe's data blocks; unavailable blocks across all
-        stripes are recovered by the batched plan-grouped engine rather
-        than one kernel launch per stripe."""
+        stripes are recovered by the pattern-grouped engine rather than
+        one kernel launch per stripe."""
         k = self.code.k
         direct: dict[tuple[int, int], bytes] = {}
         missing: list[tuple[int, int]] = []
@@ -438,8 +506,8 @@ class StripeCodec:
                         meta.stripe_id, b, reader_cluster=reader_cluster)
                 else:
                     missing.append((meta.stripe_id, b))
-        recovered = (self._recover_batched(missing,
-                                           reader_cluster=reader_cluster)
+        recovered = (self.recover_blocks(missing,
+                                         reader_cluster=reader_cluster)
                      if missing else {})
         parts = []
         for meta in metas:
@@ -474,6 +542,18 @@ def choose_code(topo: ClusterTopology, *, target_rate: float = 0.85,
             m = locality_metrics(code, default_placement(code))
             if code_mttdl_years(code, m, params) >= min_mttdl_years:
                 return code
-    # fall back: largest feasible alpha by node count, rate be damned
-    alpha = max(1, (topo.num_nodes - z) // (z * z))
-    return make_unilrc(min(alpha, 8), z)
+    # Fall back: widest feasible alpha, rate be damned — the old
+    # max(1, ...) clamp could hand a tiny topology a stripe wider than
+    # its node count. Feasible means each local group (alpha*zz + 1
+    # blocks, one cluster each) fits nodes_per_cluster — the bound
+    # StripeCodec's constructor enforces, and exactly n <= num_nodes
+    # when zz == num_clusters. If even alpha=1 does not fit, shrink the
+    # cluster span until some UniLRC does.
+    for zz in range(z, 1, -1):
+        alpha = min(8, (topo.nodes_per_cluster - 1) // zz)
+        if alpha >= 1:
+            return make_unilrc(alpha, zz)
+    raise ValueError(
+        f"no UniLRC fits a {topo.num_clusters}x{topo.nodes_per_cluster} "
+        f"topology; the smallest stripe, UniLRC(1, 2), needs 3-node "
+        f"clusters")

@@ -19,10 +19,12 @@ failures.py
 repair.py
     `RepairScheduler`: a single ε(N-1)B repair pipe (same units as the
     Markov μ — see `node_repair_hours`), damaged pairs grouped by
-    recovery plan (one job == one batched kernel launch), multi-failure
-    stripes prioritised at μ' = 1/T. Data-path mode drives real bytes
-    through `StripeCodec.rebuild_blocks_report` and folds its
-    kernel-launch delta into the `RepairLedger`.
+    recovery plan (a single-failure job == one batched kernel launch;
+    multi-erasure jobs are pattern-grouped by the codec engine — one
+    launch per distinct live erasure pattern), multi-failure stripes
+    prioritised at μ' = 1/T. Data-path mode drives real bytes through
+    `StripeCodec.rebuild_blocks_report` and folds its kernel-launch,
+    plan-group, and multi-erasure deltas into the `RepairLedger`.
 montecarlo.py
     Drivers: `simulate_stripe_mttdl` (the §5 chain event-by-event, for
     cross-validation against `mttdl_years_stripe`) and `run_campaign`

@@ -5,8 +5,10 @@ The scheduler owns one aggregate repair "pipe" of ε(N-1)B bandwidth —
 `core.mttdl.repair_bandwidth_TB_per_hour`, the exact number behind the
 Markov chain's μ — and serializes damaged (stripe, block) pairs through
 it. Pairs are grouped by recovery plan (same block id => same minimal
-plan, the invariant `StripeCodec._recover_batched` batches on), so one
-scheduled job is exactly one batched kernel launch in data-path mode.
+plan, the fast-path invariant `StripeCodec.recover_blocks` batches on),
+so a single-failure job is exactly one batched kernel launch in
+data-path mode; a multi-failure job's pairs are further pattern-grouped
+by the codec engine — one launch per distinct live erasure pattern.
 
 Repair duration of a job is its δ-weighted traffic over the pipe:
     hours = Σ_b C_b · block_TB / bw,   C_b = cross_b + δ·inner_b
@@ -56,6 +58,8 @@ class RepairLedger:
     busy_hours: float = 0.0
     kernel_launches: int = 0       # data-path mode only
     data_bytes_read: int = 0       # data-path mode only
+    plan_groups: int = 0           # batched groups (fast + pattern) executed
+    multi_erasure_blocks: int = 0  # blocks healed via pattern decodes
 
     @property
     def cross_traffic_fraction(self) -> float:
@@ -178,6 +182,8 @@ class RepairScheduler:
             self.ledger.kernel_launches += report.launches
             self.ledger.data_bytes_read += (report.inner_bytes
                                             + report.cross_bytes)
+            self.ledger.plan_groups += report.plan_groups
+            self.ledger.multi_erasure_blocks += report.multi_pairs
             if report.placed < report.requested:
                 # unrecoverable right now (overlapping failure landed while
                 # this job was in flight) — the owner decides whether the

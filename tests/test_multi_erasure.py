@@ -1,0 +1,270 @@
+"""Pattern-grouped multi-erasure recovery engine + the partial-update and
+choose_code bugfixes.
+
+Launch-count assertions ride the `kernel_counters` fixture: S stripes
+sharing one live-erasure pattern must cost ONE batched kernel launch
+(apply_decode_many), mixed patterns one launch per pattern — the
+O(#patterns) vs O(S) claim — and the numpy-oracle path must be
+byte-identical to the kernel path.
+"""
+import numpy as np
+import pytest
+
+from repro.ckpt import BlockStore, ClusterTopology, DiskBlockStore
+from repro.ckpt.store import NodeFailure
+from repro.ckpt.stripe import StripeCodec, choose_code
+from repro.core.codes import make_unilrc
+
+BS = 256
+
+
+def _setup(stripes, *, use_kernels=True, seed=0, block_size=BS):
+    code = make_unilrc(1, 4)                  # n=20, k=12, group size 5
+    store = BlockStore(ClusterTopology(4, 8))
+    codec = StripeCodec(code, store, block_size=block_size,
+                        use_kernels=use_kernels)
+    rng = np.random.default_rng(seed)
+    payload = rng.integers(0, 256, size=code.k * block_size * stripes,
+                           dtype=np.uint8).tobytes()
+    metas = codec.write(payload)
+    return code, store, codec, payload, metas
+
+
+def _expect(payload, code, sid, b, bs=BS):
+    off = (sid * code.k + b) * bs
+    return payload[off:off + bs]
+
+
+def _group_data(code, gi):
+    return [b for b in code.groups[gi] if code.block_type[b] == 'd']
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: pattern-grouped batching
+# ---------------------------------------------------------------------------
+
+def test_shared_two_erasure_pattern_is_one_launch(kernel_counters):
+    """Acceptance: 32 stripes sharing one two-erasure pattern (both blocks
+    in one local group, so the minimal plans are dead) cost exactly ONE
+    batched kernel launch, not 32."""
+    S = 32
+    code, store, codec, payload, _ = _setup(S)
+    b1, b2 = _group_data(code, 0)[:2]
+    pairs = []
+    for sid in range(S):
+        store.drop_block(sid, b1)
+        store.drop_block(sid, b2)
+        pairs += [(sid, b1), (sid, b2)]
+    before = sum(kernel_counters.values())
+    out = codec.recover_blocks(pairs)
+    assert sum(kernel_counters.values()) - before == 1
+    assert len(out) == 2 * S
+    for sid in range(S):
+        for b in (b1, b2):
+            assert out[(sid, b)] == _expect(payload, code, sid, b), (sid, b)
+
+
+def test_mixed_patterns_cost_one_launch_per_pattern(kernel_counters):
+    """Stripes with different live-erasure patterns group separately: one
+    apply_decode_many launch per distinct pattern, plus one recover_many
+    launch per fast single-failure block group."""
+    S = 8
+    code, store, codec, payload, _ = _setup(S, seed=1)
+    d0 = _group_data(code, 0)
+    b1, b2, b3 = d0[0], d0[1], d0[2]
+    b_other = _group_data(code, 1)[0]         # different group: fast path
+    pairs = []
+    for sid in range(S):
+        store.drop_block(sid, b1)
+        store.drop_block(sid, b2 if sid % 2 == 0 else b3)
+        store.drop_block(sid, b_other)
+        pairs += [(sid, b1), (sid, b2 if sid % 2 == 0 else b3),
+                  (sid, b_other)]
+    before = sum(kernel_counters.values())
+    out = codec.recover_blocks(pairs)
+    # two patterns ({b1,b2,b_other-is-not-in-group-0...}): group-0 erasures
+    # give patterns {b1,b2,b_other} and {b1,b3,b_other} -> 2 decode
+    # launches; b_other's minimal plan avoids group 0 entirely -> 1 fast
+    # XOR launch.
+    assert sum(kernel_counters.values()) - before == 3
+    for sid, b in pairs:
+        assert out[(sid, b)] == _expect(payload, code, sid, b), (sid, b)
+
+
+def test_cluster_loss_read_all_is_one_decode_launch(kernel_counters):
+    """A whole-cluster loss erases the SAME block ids in every stripe
+    (placement is per block id; rotation only moves nodes within the
+    cluster), so read_all over S stripes costs one pattern launch."""
+    S = 6
+    code, store, codec, payload, metas = _setup(S, seed=2)
+    for slot in range(store.topo.nodes_per_cluster):
+        store.fail_node(store.topo.node_of(1, slot))
+    before = sum(kernel_counters.values())
+    assert codec.read_all(metas) == payload
+    assert sum(kernel_counters.values()) - before == 1
+
+
+def test_multi_erasure_oracle_is_byte_identical():
+    """use_kernels=False must produce byte-identical recoveries for the
+    same multi-erasure batch (ISSUE: numpy-oracle parity)."""
+    S = 8
+    results = {}
+    for use_kernels in (True, False):
+        code, store, codec, payload, _ = _setup(
+            S, use_kernels=use_kernels, seed=3)
+        d0 = _group_data(code, 0)
+        pairs = []
+        for sid in range(S):
+            for b in (d0[0], d0[1]):
+                store.drop_block(sid, b)
+                pairs.append((sid, b))
+        results[use_kernels] = codec.recover_blocks(pairs)
+        for sid, b in pairs:
+            assert results[use_kernels][(sid, b)] == _expect(
+                payload, code, sid, b), (use_kernels, sid, b)
+    assert results[True] == results[False]
+
+
+def test_rebuild_blocks_report_pattern_accounting(kernel_counters):
+    """RepairReport exposes the engine's grouping: one pattern group, all
+    pairs through the multi-erasure path, one launch — and the blocks are
+    re-placed so the stripes read back clean."""
+    S = 8
+    code, store, codec, payload, metas = _setup(S, seed=4)
+    b1, b2 = _group_data(code, 0)[:2]
+    pairs = []
+    for sid in range(S):
+        store.drop_block(sid, b1)
+        store.drop_block(sid, b2)
+        pairs += [(sid, b1), (sid, b2)]
+    report = codec.rebuild_blocks_report(pairs)
+    assert report.requested == 2 * S
+    assert report.placed == 2 * S
+    assert report.dropped == 0
+    assert report.patterns == 1
+    assert report.plan_groups == 1
+    assert report.multi_pairs == 2 * S
+    assert report.launches == 1
+    assert report.inner_bytes + report.cross_bytes > 0
+    assert codec.read_all(metas) == payload
+
+
+def test_degraded_read_multi_erasure_unchanged_semantics():
+    """Single-pair engine calls behave like the old degraded_read: minimal
+    plan when its sources are alive, full pattern decode otherwise, and a
+    ValueError when the stripe is beyond tolerance."""
+    code, store, codec, payload, metas = _setup(2, seed=5)
+    d0 = _group_data(code, 0)
+    store.drop_block(0, d0[0])
+    store.drop_block(0, d0[1])
+    assert codec.degraded_read(metas[0], d0[0]) == _expect(
+        payload, code, 0, d0[0])
+    # beyond tolerance: fewer than k survivors
+    for b in range(code.n - code.k + 1):
+        store.drop_block(1, b)
+    with pytest.raises(ValueError):
+        codec.degraded_read(metas[1], 0)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: partial-update corruption on parity failure
+# ---------------------------------------------------------------------------
+
+def test_update_block_parity_failure_leaves_stripe_consistent():
+    """Regression (pre-PR: update_block wrote the new data block before
+    reading parities, so a failed parity node left data updated and
+    parities stale — later decodes returned garbage with no error). Now
+    the NodeFailure surfaces BEFORE any write and the stripe still
+    round-trips the old contents."""
+    code, store, codec, payload, metas = _setup(1, seed=6)
+    meta = metas[0]
+    block = 0
+    nz = [int(pi) for pi in np.flatnonzero(code.A[:, block])]
+    assert len(nz) >= 2                      # mid-loop failure is possible
+    victim = store.node_of(meta.stripe_id, code.k + nz[-1])
+    store.fail_node(victim)
+    new = bytes(BS)                          # all-zero replacement block
+    with pytest.raises(NodeFailure):
+        codec.update_block(meta, block, new)
+    store.heal_node(victim)
+    # nothing was mutated: the direct read returns the OLD data...
+    assert codec.normal_read(meta) == payload
+    # ...and every parity is still consistent with it: decode block 0 from
+    # survivors and compare against the stored copy.
+    store.fail_node(store.node_of(meta.stripe_id, block))
+    assert codec.degraded_read(meta, block) == _expect(
+        payload, code, 0, block)
+
+
+def test_update_block_patches_parities_in_one_launch(kernel_counters):
+    """All parity delta terms of one update ride a single GF matmul."""
+    code, store, codec, payload, metas = _setup(1, seed=7)
+    new = np.random.default_rng(8).integers(
+        0, 256, BS, dtype=np.uint8).tobytes()
+    before = kernel_counters["gf_bitmatmul"]
+    touched = codec.update_block(metas[0], 2, new)
+    assert touched == int(np.count_nonzero(code.A[:, 2]))
+    assert touched >= 2
+    assert kernel_counters["gf_bitmatmul"] - before == 1
+    expect = bytearray(payload)
+    expect[2 * BS:3 * BS] = new
+    assert codec.normal_read(metas[0]) == bytes(expect)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: choose_code fallback must fit the topology
+# ---------------------------------------------------------------------------
+
+def test_choose_code_fallback_fits_tiny_topologies():
+    topo = ClusterTopology(2, 3)             # 6 nodes
+    code = choose_code(topo)
+    assert code.n <= topo.num_nodes
+    StripeCodec(code, BlockStore(topo), block_size=64)   # deployable
+
+    # pre-fix: fallback returned UniLRC(1, 3) with n=12 > 9 nodes
+    topo = ClusterTopology(3, 3)
+    code = choose_code(topo)
+    assert code.n <= topo.num_nodes
+    StripeCodec(code, BlockStore(topo), block_size=64)
+
+    # n <= num_nodes alone is not enough: 4x3 has 12 nodes but only
+    # 3-node clusters, so UniLRC(1, 3) (n=12, 4-block groups) would be
+    # rejected by the StripeCodec constructor — the fallback must clamp
+    # by nodes_per_cluster.
+    topo = ClusterTopology(4, 3)
+    code = choose_code(topo)
+    assert code.n <= topo.num_nodes
+    StripeCodec(code, BlockStore(topo), block_size=64)
+
+    with pytest.raises(ValueError):
+        choose_code(ClusterTopology(2, 2))   # nothing fits 2-node clusters
+
+
+# ---------------------------------------------------------------------------
+# Satellite: public store surface
+# ---------------------------------------------------------------------------
+
+def test_nodes_holding_public_view():
+    store = BlockStore(ClusterTopology(2, 3))
+    store.put(0, 0, 1, b"a")
+    store.put(0, 1, 4, b"b")
+    store.put(1, 0, 2, b"c")
+    assert store.nodes_holding(0) == {1, 4}
+    assert store.nodes_holding(1) == {2}
+    store.drop_block(0, 1)
+    assert store.nodes_holding(0) == {1}
+    assert store.nodes_holding(99) == set()
+    assert store.nodes_holding_many({0, 1, 99}) == {0: {1}, 1: {2},
+                                                    99: set()}
+
+
+def test_disk_store_failure_message_has_context(tmp_path):
+    store = DiskBlockStore(ClusterTopology(2, 3), tmp_path / "blocks")
+    store.put(3, 7, 1, b"payload")
+    store.fail_node(1)
+    with pytest.raises(NodeFailure, match=r"stripe 3 block 7"):
+        store.get(3, 7)
+    store.heal_node(1)
+    store.drop_block(3, 7)                   # file unlinked, index cleared
+    assert not store.nodes_holding(3)
+    assert not (tmp_path / "blocks" / "node_0001" / "s000003_b0007").exists()

@@ -324,7 +324,45 @@ def test_data_path_scheduler_repairs_real_bytes(kernel_counters):
     assert sched.ledger.kernel_launches == distinct_plans
     assert sum(kernel_counters.values()) - launches_before == distinct_plans
     assert sched.ledger.data_bytes_read > 0
+    # single-failure damage: every block healed on the fast path
+    assert sched.ledger.plan_groups == distinct_plans
+    assert sched.ledger.multi_erasure_blocks == 0
     # victim still failed, but every block was re-placed: reads are clean
+    assert codec.read_all(metas) == payload
+
+
+def test_data_path_correlated_pattern_grouping(kernel_counters):
+    """Correlated same-pattern damage across stripes in data-path mode:
+    the multi-failure job heals all S stripes with ONE pattern-decode
+    launch (O(#patterns), not O(S)), and the ledger separates
+    multi-erasure blocks from fast-path blocks."""
+    S = 6
+    code = make_unilrc(1, 4)
+    store = BlockStore(ClusterTopology(4, 8))
+    codec = StripeCodec(code, store, block_size=512)
+    rng = np.random.default_rng(7)
+    payload = rng.integers(0, 256, code.k * 512 * S, np.uint8).tobytes()
+    metas = codec.write(payload)
+    b1, b2 = [b for b in code.groups[0] if code.block_type[b] == 'd'][:2]
+    pairs = []
+    for sid in range(S):
+        store.drop_block(sid, b1)
+        store.drop_block(sid, b2)
+        pairs += [(sid, b1), (sid, b2)]
+
+    def missing(sid):
+        return frozenset(b for b in range(code.n)
+                         if not store.available(sid, b))
+
+    sim, sched, healed = _mk_scheduler(code, missing, codec=codec)
+    sched.damaged(pairs)
+    sim.run()
+    assert set(healed) == set(pairs)
+    # job 1: S b1-pairs, one shared {b1,b2} pattern decode; job 2: the b2
+    # pairs are single failures by then (b1 re-placed) -> one fast XOR.
+    assert sched.ledger.kernel_launches == 2
+    assert sched.ledger.plan_groups == 2
+    assert sched.ledger.multi_erasure_blocks == S
     assert codec.read_all(metas) == payload
 
 
