@@ -1,24 +1,33 @@
 """Bench-regression gate: fail CI when batched recovery stops paying off.
 
-Compares fresh `fig_batched_recovery` / `fig_correlated_recovery` results
-against the committed baseline JSONs and enforces an absolute floor on
-the batched speedups. The committed baselines show 3.7-4.5x (batched
-single-failure recovery) and 2.9-4.7x (pattern-grouped correlated
-recovery) across the paper schemes; a fresh run below `--min-speedup`
-(default 2x) means the stripe-batch grid dimension — or the
-pattern-grouped multi-erasure engine — regressed into per-stripe work
-and the PR should not merge.
+Compares fresh `fig_batched_recovery` / `fig_correlated_recovery` /
+`fig_mixed_workload` results against the committed baseline JSONs and
+enforces an absolute floor on the batched speedups. The committed
+baselines show 3.7-4.5x (batched single-failure recovery), 2.9-4.7x
+(pattern-grouped correlated recovery) and ~2.9-4.4x (coalescing
+front-end on the mixed serving workload) across the paper schemes; a
+fresh run below `--min-speedup` (default 2x) means the stripe-batch grid
+dimension, the pattern-grouped multi-erasure engine, or the
+cross-request coalescing front-end regressed into per-stripe /
+per-request work and the PR should not merge. The mixed-workload gate
+additionally pins two structural invariants timings cannot: N
+same-pattern degraded reads must execute in <= #patterns launches, and
+client reads must finish ahead of background rebuild/scrub in the
+per-class latency accounting.
 
 Usage (what .github/workflows/ci.yml runs):
     cp artifacts/bench/fig_batched_recovery.json /tmp/baseline.json
     cp artifacts/bench/fig_correlated_recovery.json /tmp/corr_baseline.json
+    cp artifacts/bench/fig_mixed_workload.json /tmp/mixed_baseline.json
     python -m benchmarks.run --tiny \
-        --only fig_batched_recovery,fig_correlated_recovery
+        --only fig_batched_recovery,fig_correlated_recovery,fig_mixed_workload
     python -m benchmarks.check_regression \
         --baseline /tmp/baseline.json \
         --fresh artifacts/bench/fig_batched_recovery.json \
         --corr-baseline /tmp/corr_baseline.json \
-        --corr-fresh artifacts/bench/fig_correlated_recovery.json
+        --corr-fresh artifacts/bench/fig_correlated_recovery.json \
+        --mixed-baseline /tmp/mixed_baseline.json \
+        --mixed-fresh artifacts/bench/fig_mixed_workload.json
 """
 from __future__ import annotations
 
@@ -92,6 +101,41 @@ def check_correlated(baseline: dict, fresh: dict, min_speedup: float,
     return failures
 
 
+def check_mixed(baseline: dict, fresh: dict, min_speedup: float,
+                rel_floor: float = 0.4) -> list[str]:
+    """fig_mixed_workload gate: the wall-clock floor, plus the two
+    front-end invariants — the coalesced-launch ceiling (degraded-read
+    launches <= distinct erasure patterns) and the priority ordering
+    (client reads ahead of the background storm)."""
+    failures = check(baseline, fresh, min_speedup, rel_floor,
+                     key="speedup", what="mixed workload")
+    for row in fresh.get("rows", []):
+        rid = _row_id(row)
+        if "read_launches" not in row or "patterns" not in row:
+            failures.append(
+                f"{rid}: row lacks read_launches/patterns — the "
+                f"coalescing invariant cannot be checked (schema drift?)")
+            continue
+        if row["read_launches"] > row["patterns"]:
+            failures.append(
+                f"{rid}: {row['read_launches']} degraded-read launches "
+                f"for {row['patterns']} erasure pattern(s) — "
+                f"cross-request coalescing regressed into per-request "
+                f"work")
+        cli = row.get("client_mean_latency_ms")
+        bg = row.get("background_mean_latency_ms")
+        if cli is None or bg is None:
+            failures.append(
+                f"{rid}: row lacks per-class latency fields — the "
+                f"priority invariant cannot be checked (schema drift?)")
+        elif cli > bg:
+            failures.append(
+                f"{rid}: client reads averaged {cli}ms behind the "
+                f"background class's {bg}ms — priority scheduling "
+                f"regressed")
+    return failures
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", required=True, type=pathlib.Path,
@@ -102,6 +146,10 @@ def main(argv: list[str] | None = None) -> int:
                     help="committed fig_correlated_recovery.json")
     ap.add_argument("--corr-fresh", type=pathlib.Path,
                     help="fig_correlated_recovery.json from this run")
+    ap.add_argument("--mixed-baseline", type=pathlib.Path,
+                    help="committed fig_mixed_workload.json")
+    ap.add_argument("--mixed-fresh", type=pathlib.Path,
+                    help="fig_mixed_workload.json from this run")
     ap.add_argument("--min-speedup", type=float, default=2.0,
                     help="absolute floor on batched speedup per row")
     ap.add_argument("--rel-floor", type=float, default=0.4,
@@ -118,6 +166,13 @@ def main(argv: list[str] | None = None) -> int:
         failures += check_correlated(
             json.loads(args.corr_baseline.read_text()),
             json.loads(args.corr_fresh.read_text()),
+            args.min_speedup, args.rel_floor)
+    if (args.mixed_baseline is None) != (args.mixed_fresh is None):
+        ap.error("--mixed-baseline and --mixed-fresh go together")
+    if args.mixed_fresh is not None:
+        failures += check_mixed(
+            json.loads(args.mixed_baseline.read_text()),
+            json.loads(args.mixed_fresh.read_text()),
             args.min_speedup, args.rel_floor)
     if failures:
         for f in failures:

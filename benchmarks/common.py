@@ -23,8 +23,8 @@ import time
 from repro.core.codes import ALL_SCHEMES, paper_schemes
 
 __all__ = ["ALL_SCHEMES", "BLOCK_SIZE", "NetModel", "all_codes",
-           "fmt_table", "gbps_to_Bps", "save_result", "timed",
-           "traffic_of_read"]
+           "fmt_table", "gbps_to_Bps", "make_codec", "save_result",
+           "timed", "traffic_of_read"]
 
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 
@@ -84,6 +84,20 @@ def all_codes(scheme: str):
     return paper_schemes(scheme)
 
 
+def make_codec(code, block_size: int):
+    """(StripeCodec, BlockStore) on the smallest topology the code's
+    default placement fits — the shared setup of the recovery/workload
+    benchmarks, so their measured configurations cannot drift apart."""
+    from repro.ckpt import BlockStore, ClusterTopology
+    from repro.ckpt.stripe import StripeCodec
+    from repro.core.placement import default_placement
+    placement = default_placement(code)
+    npc = max(len(placement.cluster_blocks(c))
+              for c in range(placement.num_clusters))
+    store = BlockStore(ClusterTopology(placement.num_clusters, npc))
+    return StripeCodec(code, store, block_size=block_size), store
+
+
 def save_result(name: str, payload) -> pathlib.Path:
     ART.mkdir(parents=True, exist_ok=True)
     path = ART / f"{name}.json"
@@ -106,7 +120,9 @@ def timed(fn, *args, repeat: int = 3, **kw):
 
 
 def fmt_table(rows: list[dict], cols: list[str], title: str = "") -> str:
-    widths = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows))
+    # [len(c)] seed keeps the max() well-defined for empty row lists
+    # (roofline with no dry-run artifacts used to crash here).
+    widths = {c: max([len(c)] + [len(str(r.get(c, ""))) for r in rows])
               for c in cols}
     lines = []
     if title:

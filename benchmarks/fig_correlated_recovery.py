@@ -34,12 +34,11 @@ import os
 
 import numpy as np
 
-from repro.ckpt import BlockStore, ClusterTopology
-from repro.ckpt.stripe import StripeCodec
 from repro.core.codec import decode_plan_cached
 from repro.kernels import ops
 
-from .common import ALL_SCHEMES, all_codes, fmt_table, save_result, timed
+from .common import (ALL_SCHEMES, all_codes, fmt_table, make_codec,
+                     save_result, timed)
 
 TINY = os.environ.get("REPRO_BENCH_TINY") == "1"
 # Damaged stripes: the speedup IS the S/#patterns ratio, so tiny mode
@@ -47,15 +46,6 @@ TINY = os.environ.get("REPRO_BENCH_TINY") == "1"
 # the byte volume instead.
 S = 6 if TINY else 8
 BLOCK = 1 << 9 if TINY else 1 << 10
-
-
-def _make_codec(code):
-    from repro.core.placement import default_placement
-    placement = default_placement(code)
-    npc = max(len(placement.cluster_blocks(c))
-              for c in range(placement.num_clusters))
-    store = BlockStore(ClusterTopology(placement.num_clusters, npc))
-    return StripeCodec(code, store, block_size=BLOCK), store
 
 
 def _damage(code, store, scenario: str) -> list[tuple[int, int]]:
@@ -75,7 +65,7 @@ def _damage(code, store, scenario: str) -> list[tuple[int, int]]:
 
 def bench_scenario(scheme: str, scenario: str) -> dict:
     code = all_codes(scheme)["UniLRC"]
-    codec, store = _make_codec(code)
+    codec, store = make_codec(code, BLOCK)
     rng = np.random.default_rng(0)
     payload = rng.integers(0, 256, size=code.k * BLOCK * S,
                            dtype=np.uint8).tobytes()

@@ -1,0 +1,164 @@
+"""Mixed serving workload — cross-request coalescing front-end vs
+per-request execution.
+
+The paper's availability regime (§2.2/§5) is many clients hitting
+degraded stripes at once while background rebuild and scrub compete for
+the same coding path. The pre-io-layer `StripeCodec` only batched work
+arriving inside a single call: N concurrent degraded reads cost N
+launches even when every stripe shares one live erasure pattern.
+
+Workload per scheme (all damage = one shared two-erasure pattern):
+
+  * N degraded reads (one block each, independent requests),
+  * 2 client full-stripe reads,
+  * 1 rebuild of every damaged pair (the background storm),
+  * 1 scrub pass over the healed stripes.
+
+The *sequential* baseline executes each request as its own synchronous
+codec call (degraded reads one decode launch each — generous: the
+pre-engine code sometimes paid more). The *coalesced* path submits all
+requests to a `RequestFrontend` and drains: same-pattern degraded reads
+ride O(#patterns) launches, scrub re-encodes every stripe in one batch,
+and the per-class accounting shows client reads finishing ahead of the
+background storm. CI gates the launch ceiling (`read_launches <=
+patterns`), the wall-clock speedup, and the priority ordering via
+benchmarks/check_regression.py.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.io import Priority, RequestFrontend
+from repro.kernels import ops
+
+from .common import (ALL_SCHEMES, all_codes, fmt_table, make_codec,
+                     save_result, timed)
+
+TINY = os.environ.get("REPRO_BENCH_TINY") == "1"
+S = 6 if TINY else 12                 # damaged stripes
+N_READS = 2 * S                       # concurrent degraded-read requests
+BLOCK = 1 << 9 if TINY else 1 << 10
+
+
+def _hot_blocks(code) -> tuple[int, int]:
+    grp = [b for b in code.groups[0] if code.block_type[b] == 'd']
+    return grp[0], grp[1]
+
+
+def _damage(code, store) -> list[tuple[int, int]]:
+    b1, b2 = _hot_blocks(code)
+    for sid in range(S):
+        store.drop_block(sid, b1)
+        store.drop_block(sid, b2)
+    return [(sid, b) for sid in range(S) for b in (b1, b2)]
+
+
+def _run_sequential(code, codec, store, metas):
+    """One synchronous codec call per request."""
+    pairs = _damage(code, store)
+    b1, _ = _hot_blocks(code)
+    out = []
+    for i in range(N_READS):
+        out.append(codec.degraded_read(metas[i % S], b1))
+    for sid in (0, 1):
+        out.append(codec.normal_read(metas[sid]))
+    codec.rebuild_blocks(pairs)
+    # per-stripe scrub: re-encode each healed stripe separately
+    for meta in metas:
+        sid = meta.stripe_id
+        blocks = np.stack([
+            np.frombuffer(store.get(sid, b), np.uint8)
+            for b in range(code.n)])
+        expect = codec.backend.encode_many(
+            code, blocks[None, :code.k])[0]
+        assert np.array_equal(expect[code.k:], blocks[code.k:])
+    return out
+
+
+def _run_coalesced(code, codec, store, metas):
+    """All requests through the front-end, maximum coalescing."""
+    pairs = _damage(code, store)
+    b1, _ = _hot_blocks(code)
+    fe = RequestFrontend(codec)
+    reads = [fe.submit_degraded_read(metas[i % S], b1)
+             for i in range(N_READS)]
+    clients = [fe.submit_client_read(metas[sid]) for sid in (0, 1)]
+    fe.submit_rebuild(pairs)
+    fe.drain()
+    scrub = fe.submit_scrub(metas)          # over the healed stripes
+    fe.drain()
+    assert not scrub.result().mismatched
+    return [h.result() for h in reads + clients], fe
+
+
+def bench_scheme(scheme: str) -> dict:
+    code = all_codes(scheme)["UniLRC"]
+    codec, store = make_codec(code, BLOCK)
+    rng = np.random.default_rng(0)
+    payload = rng.integers(0, 256, size=code.k * BLOCK * S,
+                           dtype=np.uint8).tobytes()
+    metas = codec.write(payload)
+
+    # Launch counts from one explicit run per path; the coalesced run
+    # also yields the per-class accounting for the priority gate.
+    snap = ops.kernel_launch_snapshot()
+    seq_out = _run_sequential(code, codec, store, metas)
+    launches_seq = ops.launches_since(snap)
+    snap = ops.kernel_launch_snapshot()
+    coal_out, _ = _run_coalesced(code, codec, store, metas)
+    launches_coal = ops.launches_since(snap)
+    assert seq_out[:N_READS + 2] == coal_out, f"{scheme}: engines disagree"
+
+    _, t_seq = timed(lambda: _run_sequential(code, codec, store, metas),
+                     repeat=2)
+    _, t_coal = timed(lambda: _run_coalesced(code, codec, store, metas),
+                      repeat=2)
+    # Per-class latency from a warm run (the first coalesced run pays
+    # one-off jit tracing inside whichever class flushes a new batch
+    # shape first, which would swamp the queueing order under test).
+    _, fe = _run_coalesced(code, codec, store, metas)
+    cli = fe.stats[Priority.CLIENT_READ]
+    deg = fe.stats[Priority.DEGRADED_READ]
+    bg = fe.stats[Priority.BACKGROUND]
+    # blocks served per run: degraded reads + 2 client stripes + the
+    # rebuilt pairs + the scrubbed stripes
+    mb = (N_READS + 2 * code.k + 2 * (2 * S)
+          + S * code.n) * BLOCK / 1e6
+    return {
+        "scheme": scheme,
+        "code": code.name,
+        "S": S,
+        "reads": N_READS,
+        "patterns": 1,
+        "read_launches": deg.launches,
+        "launches_sequential": launches_seq,
+        "launches_coalesced": launches_coal,
+        "client_mean_latency_ms": round(cli.mean_latency_s * 1e3, 2),
+        "degraded_mean_latency_ms": round(deg.mean_latency_s * 1e3, 2),
+        "background_mean_latency_ms": round(bg.mean_latency_s * 1e3, 2),
+        "sequential_MBps": round(mb / t_seq, 1),
+        "coalesced_MBps": round(mb / t_coal, 1),
+        "speedup": round(t_seq / t_coal, 2),
+    }
+
+
+def main():
+    rows = [bench_scheme(scheme) for scheme in ALL_SCHEMES]
+    print(fmt_table(
+        rows,
+        ["scheme", "code", "S", "reads", "patterns", "read_launches",
+         "launches_sequential", "launches_coalesced",
+         "client_mean_latency_ms", "background_mean_latency_ms",
+         "sequential_MBps", "coalesced_MBps", "speedup"],
+        f"Mixed workload: {N_READS} degraded reads + rebuild + scrub "
+        f"(S={S}, block={BLOCK}B)"))
+    save_result("fig_mixed_workload",
+                {"S": S, "reads": N_READS, "block_bytes": BLOCK,
+                 "rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

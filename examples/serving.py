@@ -17,6 +17,7 @@ import numpy as np
 from repro.ckpt import BlockStore, CheckpointManager, ClusterTopology
 from repro.configs import get_config
 from repro.core.codes import make_unilrc
+from repro.io import Priority, RequestFrontend
 from repro.models import init_params
 from repro.models.model import pad_cache_to
 from repro.train import make_serve_decode, make_serve_prefill
@@ -46,6 +47,40 @@ def main():
           f"{report.cross_cluster_bytes}")
     assert report.cross_cluster_bytes == 0
     params = jax.tree_util.tree_map(jnp.asarray, params_restored)
+
+    # --- mixed registry traffic through the request front-end ------------
+    # Many servers hit the degraded registry at once while background
+    # repair + scrub run: the front-end coalesces same-pattern degraded
+    # reads into one batched launch per pattern and keeps client reads
+    # ahead of the background storm (priority classes).
+    fe = RequestFrontend(mgr.codec, background_ops_per_flush=32)
+    metas = mgr.stripes_of(0)
+    meta_of = {m.stripe_id: m for m in metas}
+    lost = store.blocks_on_node(2)
+    client = [fe.submit_client_read(m) for m in metas[:4]]
+    lost_data = [(sid, b) for sid, b in lost if b < mgr.code.k][:8]
+    degraded = [fe.submit_degraded_read(meta_of[sid], b)
+                for sid, b in lost_data]
+    fe.submit_rebuild(lost, exclude_node=2)
+    fe.drain()
+    scrub = fe.submit_scrub(metas)      # integrity pass over healed stripes
+    fe.drain()
+    for h in client + degraded:
+        h.result()                      # byte-correct or raise
+    sc = scrub.result()
+    print(f"scrub: {sc.checked}/{sc.stripes} stripes verified, "
+          f"{len(sc.mismatched)} parity mismatches")
+    assert not sc.mismatched
+    for prio in Priority:
+        cls = fe.stats[prio]
+        if not cls.requests:
+            continue
+        print(f"  {prio.name:<13} requests={cls.requests:<3} "
+              f"blocks={cls.blocks:<4} launches={cls.launches:<3} "
+              f"mean_latency={cls.mean_latency_s * 1e3:.1f}ms "
+              f"cross_bytes={cls.cross_bytes}")
+    assert (fe.stats[Priority.CLIENT_READ].mean_latency_s
+            <= fe.stats[Priority.BACKGROUND].mean_latency_s)
 
     # --- batched prefill --------------------------------------------------
     B, P, G = args.batch, args.prompt_len, args.gen

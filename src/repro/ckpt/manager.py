@@ -74,6 +74,14 @@ class CheckpointManager:
     def saved_steps(self) -> list[int]:
         return sorted(self._saved)
 
+    def stripes_of(self, step: int) -> list:
+        """StripeMeta list of one checkpoint — the public view request
+        front-ends (examples/serving.py) need to target reads/scrubs at a
+        saved step's stripes."""
+        if step not in self._saved:
+            raise KeyError(f"no checkpoint for step {step}")
+        return list(self._saved[step].metas)
+
     def latest_step(self) -> Optional[int]:
         return max(self._saved) if self._saved else None
 

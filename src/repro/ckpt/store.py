@@ -61,6 +61,12 @@ class TrafficStats:
         else:
             self.inner_bytes += nbytes
 
+    def add_many(self, reads: int, inner_bytes: int, cross_bytes: int):
+        """One accounting pass for a whole `get_many` batch."""
+        self.reads += reads
+        self.inner_bytes += inner_bytes
+        self.cross_bytes += cross_bytes
+
 
 class BlockStore:
     """In-memory block store with failure + straggler simulation."""
@@ -122,6 +128,11 @@ class BlockStore:
         return self._latency.get(self._block_node[(stripe, block)], 0.0)
 
     # -- reads --------------------------------------------------------------
+    def _payload(self, key: tuple[int, int], node: int) -> bytes:
+        """Fetch the stored bytes for an index entry known to be live —
+        the only point where the in-memory and disk tiers differ."""
+        return self._blocks[key]
+
     def get(self, stripe: int, block: int, *,
             reader_cluster: Optional[int] = None) -> bytes:
         key = (stripe, block)
@@ -130,11 +141,45 @@ class BlockStore:
             raise KeyError(key)
         if node in self._failed:
             raise NodeFailure(f"node {node} (stripe {stripe} block {block})")
-        data = self._blocks[key]
+        data = self._payload(key, node)
         cross = (reader_cluster is not None
                  and self.topo.cluster_of(node) != reader_cluster)
         self.traffic.add(len(data), cross)
         return data
+
+    def get_many(self, pairs, *, reader_cluster: Optional[int] = None
+                 ) -> dict[tuple[int, int], bytes]:
+        """Batched read of many (stripe, block) pairs (deduplicated).
+
+        ONE failure-set check for the whole batch — every pair is
+        validated against the index and the failed-node set before any
+        payload is touched, so a doomed batch raises with zero traffic
+        recorded — and ONE TrafficStats pass at the end instead of a
+        per-block `add`. This is the read path under the batched engine:
+        a plan group's sources across S stripes are one call here."""
+        nodes: dict[tuple[int, int], int] = {}
+        for key in dict.fromkeys(pairs):
+            node = self._block_node.get(key)
+            if node is None:
+                raise KeyError(key)
+            nodes[key] = node
+        for (stripe, block), node in nodes.items():
+            if node in self._failed:
+                raise NodeFailure(
+                    f"node {node} (stripe {stripe} block {block})")
+        out: dict[tuple[int, int], bytes] = {}
+        inner = cross = 0
+        cluster_of = self.topo.cluster_of
+        for key, node in nodes.items():
+            data = self._payload(key, node)
+            out[key] = data
+            if reader_cluster is not None \
+                    and cluster_of(node) != reader_cluster:
+                cross += len(data)
+            else:
+                inner += len(data)
+        self.traffic.add_many(len(out), inner, cross)
+        return out
 
     def drop_block(self, stripe: int, block: int):
         """Simulate loss of a single block replica (latent sector error /
@@ -173,19 +218,8 @@ class DiskBlockStore(BlockStore):
         self._blocks[(stripe, block)] = b""           # payload on disk
         self._block_node[(stripe, block)] = node
 
-    def get(self, stripe: int, block: int, *,
-            reader_cluster: Optional[int] = None) -> bytes:
-        key = (stripe, block)
-        node = self._block_node.get(key)
-        if node is None:
-            raise KeyError(key)
-        if node in self._failed:
-            raise NodeFailure(f"node {node} (stripe {stripe} block {block})")
-        data = self._path(stripe, block, node).read_bytes()
-        cross = (reader_cluster is not None
-                 and self.topo.cluster_of(node) != reader_cluster)
-        self.traffic.add(len(data), cross)
-        return data
+    def _payload(self, key: tuple[int, int], node: int) -> bytes:
+        return self._path(key[0], key[1], node).read_bytes()
 
     def reopen(self):
         """Rebuild the index from the directory tree (restart path)."""

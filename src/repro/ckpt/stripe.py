@@ -1,4 +1,5 @@
-"""StripeCodec: byte buffers <-> erasure-coded stripes on a BlockStore.
+"""StripeCodec: the stripe *planner* — byte buffers <-> erasure-coded
+stripes on a BlockStore, executed by the io-layer CodingEngine.
 
 Implements the paper's basic operations (§4.1) over checkpoint bytes:
 
@@ -10,39 +11,41 @@ Implements the paper's basic operations (§4.1) over checkpoint bytes:
                      (zero cross-cluster traffic for UniLRC, Property 2).
   reconstruct      — rebuild every block of a failed node from group
                      survivors and re-place (background re-protect).
-  straggler_read   — group-local read that substitutes the slowest member
-                     with the group parity (first-r-of-(r+1) semantics).
+  straggler_read   — group-local read that substitutes the slowest *data*
+                     member with a parity-decode (first-r-of-(r+1)).
 
-The bulk byte path runs on the JAX kernels (kernels/ops.py): encode via the
-MXU bit-plane GF matmul, single-failure decode via the VPU XOR kernel.
-Multi-stripe operations (write, read_all, reconstruct_node) group work by
-recovery plan and drive the stripe-batched kernels: one encode launch per
-write() call, one XOR-fold launch per failed-node group — S stripes cost
-one launch, not S. Multi-erasure recovery is *pattern-grouped*: each
-damaged stripe's live erasure pattern is computed once, stripes sharing a
-cached DecodePlan (decode_plan_cached returns the identical plan object
-per (code, pattern)) ride ONE apply_decode_many launch, and the correlated
-worst case costs O(#distinct patterns) launches instead of O(S).
-`recover_blocks(pairs)` is the public engine; degraded_read, normal_read,
-read_all, rebuild_blocks, and the failure simulator's data-path repair
-mode all route through it. Plans come from the memoized layer in
-core.codec (plans_for / decode_plan_cached), so the GF Gaussian
-elimination runs once per (code, erasure pattern), not once per stripe.
+Since the io-layer refactor the codec no longer executes bytes itself:
+every method *plans* — decides which blocks to read, recover, encode or
+patch — and emits op descriptors to a `repro.io.CodingEngine`, which
+batches compatible ops (across independent requests, when driven through
+`repro.io.RequestFrontend`) into single backend calls. The backend is
+pluggable: `KernelBackend` (JAX/Pallas MXU/VPU kernels) or
+`NumpyBackend` (the byte-identical host oracle) — the old `use_kernels`
+if/else branches are gone; the flag now just selects a backend.
+
+The synchronous API is preserved and byte-identical: each public method
+submits its ops and flushes the engine immediately. The two-phase
+`plan_*` methods (submit ops, return a finish closure) are what the
+front-end coalesces across requests: N concurrent degraded reads sharing
+a live erasure pattern cost O(#patterns) launches, not N. Plans come
+from the memoized layer in core.codec (plans_for / decode_plan_cached),
+so the GF Gaussian elimination runs once per (code, erasure pattern).
 choose_code() picks (α, z) for a topology + target rate, MTTDL-checked.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core.codec import decode_plan_cached, plans_for
 from repro.core.codes import Code, make_unilrc
 from repro.core.metrics import locality_metrics
 from repro.core.mttdl import MTTDLParams, code_mttdl_years
 from repro.core.placement import Placement, default_placement
+from repro.io.backend import Backend, resolve_backend
+from repro.io.engine import CodingEngine, OpHandle
 from repro.kernels import ops
 
 from .store import BlockStore, ClusterTopology
@@ -89,11 +92,35 @@ class RecoveryStats:
         return self.fast_groups + self.pattern_groups
 
 
+def _stats_from_handles(handles: dict[tuple[int, int], OpHandle]
+                        ) -> RecoveryStats:
+    """Per-request RecoveryStats, exact even when the engine flush
+    coalesced other requests into the same batches: each resolved handle
+    carries the (tier, group key) it rode."""
+    fast_groups: set = set()
+    pattern_groups: set = set()
+    fast_pairs = multi_pairs = 0
+    for h in handles.values():
+        if not h.done or h._exc is not None:
+            continue
+        if h.tier == "fast":
+            fast_pairs += 1
+            fast_groups.add(h.group)
+        elif h.tier == "pattern":
+            multi_pairs += 1
+            pattern_groups.add(h.group)
+    return RecoveryStats(fast_groups=len(fast_groups),
+                         pattern_groups=len(pattern_groups),
+                         fast_pairs=fast_pairs, multi_pairs=multi_pairs)
+
+
 class StripeCodec:
     """Encode/decode byte buffers as stripes of a given Code on a store.
 
-    `max_batch_stripes` caps how many stripes ride one batched kernel
-    launch: peak memory for encode is ~max_batch_stripes * n * block_size
+    `backend` picks the execution tier (`use_kernels` is kept as the
+    legacy spelling: True -> KernelBackend, False -> NumpyBackend).
+    `max_batch_stripes` caps how many stripes ride one batched backend
+    call: peak memory for encode is ~max_batch_stripes * n * block_size
     bytes (host staging + codeword array), so an unbounded batch over a
     checkpoint-scale buffer would OOM where the launch count barely
     changes. 64 stripes of 1 MiB blocks ≈ 13 GiB codeword ceiling for the
@@ -103,14 +130,16 @@ class StripeCodec:
                  block_size: int = 1 << 20,
                  placement: Optional[Placement] = None,
                  use_kernels: bool = True,
+                 backend: Optional[Backend] = None,
                  max_batch_stripes: int = 64):
         self.code = code
         self.store = store
         self.block_size = block_size
         self.placement = placement or default_placement(code)
-        self.use_kernels = use_kernels
-        if max_batch_stripes < 1:
-            raise ValueError("max_batch_stripes must be >= 1")
+        self.backend = resolve_backend(backend, use_kernels=use_kernels)
+        self.use_kernels = self.backend.uses_kernels
+        self.engine = CodingEngine(code, store, self.backend,
+                                   max_batch_stripes=max_batch_stripes)
         self.max_batch_stripes = max_batch_stripes
         if self.placement.num_clusters > store.topo.num_clusters:
             raise ValueError(
@@ -138,21 +167,6 @@ class StripeCodec:
         self._stripes: dict[int, StripeMeta] = {}
 
     # -- encode / write ------------------------------------------------------
-    def _encode(self, data_blocks: np.ndarray) -> np.ndarray:
-        """(k, B) uint8 -> (n, B)."""
-        if self.use_kernels:
-            return np.asarray(ops.encode(self.code, data_blocks))
-        return self.code.encode(data_blocks)
-
-    def _encode_many(self, data: np.ndarray) -> np.ndarray:
-        """(S, k, B) uint8 -> (S, n, B): all stripes in ONE kernel launch."""
-        if self.use_kernels:
-            return np.asarray(ops.encode_many(self.code, data))
-        S, k, bs = data.shape
-        flat = np.ascontiguousarray(data.transpose(1, 0, 2)).reshape(k, -1)
-        cw = self.code.encode(flat)                         # (n, S*bs)
-        return cw.reshape(self.code.n, S, bs).transpose(1, 0, 2)
-
     def _node_for(self, stripe_id: int, block: int) -> int:
         # Rotate slots by stripe id so parity work spreads over nodes.
         cluster, idx = self._block_slot[block]
@@ -161,7 +175,7 @@ class StripeCodec:
     def write(self, buf: bytes, *, start_stripe: int = 0) -> list[StripeMeta]:
         """Stripe `buf` into ceil(len/k/bs) stripes starting at start_stripe.
 
-        Stripes are encoded in batched kernel launches of up to
+        Stripes are encoded in batched engine launches of up to
         `max_batch_stripes` each (stripe-batch grid dimension) — one launch
         for typical writes, ceil(S/max_batch_stripes) for huge buffers —
         then placed block by block. Per-batch staging bounds peak memory."""
@@ -175,7 +189,10 @@ class StripeCodec:
                         (batch_start + batch_n) * stripe_payload]
             padded = np.zeros(batch_n * stripe_payload, dtype=np.uint8)
             padded[:len(chunk)] = np.frombuffer(chunk, np.uint8)
-            codewords = self._encode_many(padded.reshape(batch_n, k, bs))
+            handle = self.engine.submit_encode(
+                padded.reshape(batch_n, k, bs))
+            self.engine.flush()
+            codewords = handle.result()
             for i in range(batch_n):
                 sid = start_stripe + batch_start + i
                 for b in range(self.code.n):
@@ -188,23 +205,67 @@ class StripeCodec:
                 metas.append(meta)
         return metas
 
+    # -- read planners -------------------------------------------------------
+    def _submit_stripe_read(self, sid: int, blocks: range | list[int],
+                            reader_cluster: Optional[int]
+                            ) -> dict[int, OpHandle]:
+        """Read ops for available blocks, recover ops for the rest."""
+        return {
+            b: (self.engine.submit_read(sid, b,
+                                        reader_cluster=reader_cluster)
+                if self.store.available(sid, b) else
+                self.engine.submit_recover(sid, b,
+                                           reader_cluster=reader_cluster))
+            for b in blocks}
+
+    def plan_normal_read(self, meta: StripeMeta, *,
+                         reader_cluster: Optional[int] = None
+                         ) -> Callable[[], bytes]:
+        """Two-phase normal_read: submit ops now, assemble at finish."""
+        handles = self._submit_stripe_read(
+            meta.stripe_id, range(self.code.k), reader_cluster)
+
+        def finish() -> bytes:
+            out = b"".join(handles[b].result()
+                           for b in range(self.code.k))
+            return out[:meta.nbytes]
+        return finish
+
+    def plan_degraded_read(self, meta: StripeMeta, block: int, *,
+                           reader_cluster: Optional[int] = None
+                           ) -> Callable[[], bytes]:
+        handle = self.engine.submit_recover(meta.stripe_id, block,
+                                            reader_cluster=reader_cluster)
+        return handle.result
+
+    def plan_recover_blocks(self, pairs: list[tuple[int, int]], *,
+                            reader_cluster: Optional[int] = None,
+                            strict: bool = True
+                            ) -> Callable[[], tuple[dict, RecoveryStats]]:
+        handles = {
+            p: self.engine.submit_recover(p[0], p[1],
+                                          reader_cluster=reader_cluster,
+                                          strict=strict)
+            for p in dict.fromkeys(pairs)}
+
+        def finish():
+            out = {}
+            for p, h in handles.items():
+                data = h.result()
+                if data is not None:      # None == dropped (strict=False)
+                    out[p] = data
+            return out, _stats_from_handles(handles)
+        return finish
+
     # -- reads ---------------------------------------------------------------
     def normal_read(self, meta: StripeMeta, *,
                     reader_cluster: Optional[int] = None) -> bytes:
-        """Read the k data blocks; unavailable ones are recovered in one
-        recover_blocks() call — one launch per erasure pattern / fast
-        group, not one decode per missing block."""
-        k = self.code.k
-        sid = meta.stripe_id
-        missing = [(sid, b) for b in range(k)
-                   if not self.store.available(sid, b)]
-        rec = (self.recover_blocks(missing, reader_cluster=reader_cluster)
-               if missing else {})
-        out = bytearray()
-        for b in range(k):
-            out += (rec[(sid, b)] if (sid, b) in rec else
-                    self.store.get(sid, b, reader_cluster=reader_cluster))
-        return bytes(out[:meta.nbytes])
+        """Read the k data blocks; unavailable ones are recovered in the
+        same engine flush — one launch per erasure pattern / fast group,
+        not one decode per missing block."""
+        finish = self.plan_normal_read(meta, reader_cluster=reader_cluster)
+        self.engine.flush()
+        return finish()
 
     def degraded_read(self, meta: StripeMeta, block: int, *,
                       reader_cluster: Optional[int] = None) -> bytes:
@@ -214,30 +275,47 @@ class StripeCodec:
         for UniLRC). If plan sources are also unavailable, the engine
         decodes the stripe's full live erasure pattern.
         """
-        sid = meta.stripe_id
-        return self.recover_blocks(
-            [(sid, block)], reader_cluster=reader_cluster)[(sid, block)]
+        finish = self.plan_degraded_read(meta, block,
+                                         reader_cluster=reader_cluster)
+        self.engine.flush()
+        return finish()
 
     def straggler_read(self, meta: StripeMeta, group_idx: int, *,
                        reader_cluster: Optional[int] = None
                        ) -> dict[int, bytes]:
-        """Read a local group's data blocks, substituting the single slowest
-        member (per simulated node latency) with a parity-decode — the
-        'first r of r+1' straggler mitigation UniLRC's uniform groups allow.
-        Returns {block_id: bytes} for the group's data blocks."""
+        """Read a local group's data blocks, substituting the slowest
+        *data* member (per simulated node latency) with a parity-decode —
+        the 'first r of r+1' straggler mitigation UniLRC's uniform groups
+        allow. Returns {block_id: bytes} for the group's data blocks.
+
+        The candidate set is the data members only: the direct read never
+        touches the group parity, so its latency cannot make it the
+        straggler. (Regression: the old code took the max over the WHOLE
+        group, and a slow parity node silently masked a slow data member
+        — no substitution happened at all.) Note the policy mitigates
+        *data-path* stragglers: the substitute decode does source the
+        parity, so when the parity node is itself the slowest in the
+        group the decode leg waits on it — in a real deployment that
+        read is issued speculatively alongside the direct ones
+        (first-r-of-(r+1)), so the simulated substitution is the
+        pessimistic bound, not an extra round trip."""
         sid = meta.stripe_id
-        grp = self.code.groups[group_idx]
-        lat = {b: self.store.latency_of(sid, b) for b in grp}
-        slowest = max(lat, key=lat.get)
+        data_members = [b for b in self.code.groups[group_idx]
+                        if self.code.block_type[b] == 'd']
+        lat = {b: self.store.latency_of(sid, b) for b in data_members}
+        slowest = max(data_members, key=lambda b: lat[b])
+        substitute = lat[slowest] > 0
+        direct = [b for b in data_members
+                  if b != slowest or not substitute]
+        got = self.store.get_many([(sid, b) for b in direct],
+                                  reader_cluster=reader_cluster)
         out = {}
-        for b in grp:
-            if self.code.block_type[b] != 'd':
-                continue
-            if b == slowest and lat[slowest] > 0:
+        for b in data_members:
+            if b == slowest and substitute:
                 out[b] = self.degraded_read(meta, b,
                                             reader_cluster=reader_cluster)
             else:
-                out[b] = self.store.get(sid, b, reader_cluster=reader_cluster)
+                out[b] = got[(sid, b)]
         return out
 
     # -- partial update (delta parity) ----------------------------------------
@@ -248,44 +326,16 @@ class StripeCodec:
         Δ = old ⊕ new — the partial-update property the paper's related
         work (CoRD [38]) builds on. Training-state deltas between
         checkpoints touch a fraction of blocks; this writes O(Δ·(n−k)/k)
-        bytes instead of re-encoding the stripe. All reads (old data +
-        every touched parity) complete before the first write, so a
-        NodeFailure anywhere aborts with the stripe untouched. Returns
-        parity blocks touched."""
+        bytes instead of re-encoding the stripe. The engine stages ALL
+        reads (old data + every touched parity) before the first write,
+        so a NodeFailure anywhere aborts with the stripe untouched; the
+        delta terms of every update in a flush ride ONE GF matmul.
+        Returns parity blocks touched."""
         assert self.code.block_type[block] == 'd', "update data blocks only"
-        sid = meta.stripe_id
-        old = np.frombuffer(self.store.get(sid, block,
-                                           reader_cluster=reader_cluster),
-                            np.uint8)
-        new = np.frombuffer(new_data, np.uint8)
-        assert new.shape == old.shape
-        coeffs = self.code.A[:, block]              # (n-k,) parity coeffs
-        touched = [int(pi) for pi in np.flatnonzero(coeffs)]
-        # Stage phase: EVERY read happens before ANY write. A NodeFailure
-        # on a touched parity must surface with the stripe fully intact —
-        # the old write-data-first ordering left data updated and parities
-        # stale, so later decodes returned garbage with no error.
-        polds = {pi: np.frombuffer(self.store.get(
-            sid, self.code.k + pi, reader_cluster=reader_cluster), np.uint8)
-            for pi in touched}
-        delta = old ^ new
-        if touched:
-            if self.use_kernels:        # all delta terms, ONE matmul launch
-                terms = np.asarray(ops.apply_matrix(
-                    coeffs[touched][:, None], delta[None, :]))
-            else:
-                from repro.core.gf import GF_MUL_TABLE
-                terms = np.stack(
-                    [GF_MUL_TABLE[coeffs[pi], delta] for pi in touched])
-        # Apply phase: every source value is staged, so no read can fail
-        # between the first and last put.
-        self.store.put(sid, block, self.store.node_of(sid, block),
-                       new.tobytes())
-        for i, pi in enumerate(touched):
-            pblock = self.code.k + pi
-            self.store.put(sid, pblock, self.store.node_of(sid, pblock),
-                           (polds[pi] ^ terms[i]).tobytes())
-        return len(touched)
+        handle = self.engine.submit_update(meta.stripe_id, block, new_data,
+                                           reader_cluster=reader_cluster)
+        self.engine.flush()
+        return handle.result()
 
     # -- batched recovery engine --------------------------------------------
     def recover_blocks(self, pairs: list[tuple[int, int]], *,
@@ -294,23 +344,19 @@ class StripeCodec:
                        ) -> dict[tuple[int, int], bytes]:
         """Recover many (stripe, block) pairs: the pattern-grouped engine.
 
-        Two tiers, both batched over stripes:
+        Two tiers, both batched over stripes (see repro.io.engine):
 
         * fast path — a requested block whose minimal single-failure plan
-          has no failed source (slot rotation moves blocks across nodes
-          per stripe, but the code structure — hence the minimal plan —
-          depends only on the block id). Grouped by block id; one
-          `recover_many` launch per group (XOR-fold for UniLRC's XOR-only
-          plans, group-local traffic — Property 2 is preserved even when
+          has no failed source. Grouped by block id; one `recover_many`
+          launch per group (XOR-fold for UniLRC's XOR-only plans,
+          group-local traffic — Property 2 is preserved even when
           unrelated blocks of the stripe are down).
         * pattern path — everything else. Each stripe's live erasure
-          pattern is computed ONCE (one availability scan), stripes are
-          grouped by pattern — `decode_plan_cached` returns the identical
-          DecodePlan per (code, pattern), so plan identity == pattern
-          identity — and each group rides ONE `apply_decode_many` launch
-          recovering every requested block of all its stripes. Correlated
-          failures over S stripes cost O(#distinct patterns) launches,
-          not O(S).
+          pattern is computed ONCE, stripes are grouped by pattern —
+          `decode_plan_cached` returns the identical DecodePlan per
+          (code, pattern) — and each group rides ONE `apply_decode_many`
+          launch. Correlated failures over S stripes cost O(#distinct
+          patterns) launches, not O(S).
 
         Groups larger than `max_batch_stripes` are chunked. With
         strict=False an unrecoverable pair (pattern beyond the code's
@@ -326,80 +372,11 @@ class StripeCodec:
                         ) -> tuple[dict[tuple[int, int], bytes],
                                    RecoveryStats]:
         """recover_blocks plus grouping stats (see RecoveryStats)."""
-        out: dict[tuple[int, int], bytes] = {}
-        by_stripe: dict[int, list[int]] = {}
-        for sid, b in dict.fromkeys(pairs):
-            by_stripe.setdefault(sid, []).append(b)
-        plans = plans_for(self.code)
-        n = self.code.n
-        fast: dict[int, list[int]] = {}      # block id -> [stripe ids]
-        # pattern -> [(stripe id, requested blocks under that pattern)]
-        slow: dict[tuple[int, ...], list[tuple[int, list[int]]]] = {}
-        for sid in sorted(by_stripe):
-            eset = {b for b in range(n)
-                    if not self.store.available(sid, b)}
-            slow_blocks = []
-            for b in by_stripe[sid]:
-                if eset.intersection(plans[b].sources):
-                    slow_blocks.append(b)
-                else:
-                    fast.setdefault(b, []).append(sid)
-            if slow_blocks:
-                pattern = tuple(sorted(eset.union(slow_blocks)))
-                slow.setdefault(pattern, []).append((sid, slow_blocks))
-
-        fast_pairs = 0
-        for b, sids in sorted(fast.items()):
-            plan = plans[b]
-            for i0 in range(0, len(sids), self.max_batch_stripes):
-                batch = sids[i0:i0 + self.max_batch_stripes]
-                stacked = {
-                    s: np.stack([np.frombuffer(
-                        self.store.get(sid, s,
-                                       reader_cluster=reader_cluster),
-                        np.uint8) for sid in batch])
-                    for s in plan.sources}
-                if self.use_kernels:
-                    rec = np.asarray(ops.recover_many(plan, stacked))
-                else:
-                    rec = plan.apply(stacked)   # broadcasts over (S, B)
-                for i, sid in enumerate(batch):
-                    out[(sid, b)] = rec[i].tobytes()
-            fast_pairs += len(sids)
-
-        multi_pairs = 0
-        pattern_groups = 0
-        for pattern, entries in sorted(slow.items()):
-            try:
-                dplan = decode_plan_cached(self.code, pattern)
-            except ValueError:          # beyond the code's tolerance now
-                if strict:
-                    raise
-                continue
-            pattern_groups += 1
-            # Every member stripe's erased set is a subset of `pattern`,
-            # so the plan's sources are alive for the whole group.
-            for i0 in range(0, len(entries), self.max_batch_stripes):
-                chunk = entries[i0:i0 + self.max_batch_stripes]
-                sids = [sid for sid, _ in chunk]
-                stacked = {
-                    s: np.stack([np.frombuffer(
-                        self.store.get(sid, s,
-                                       reader_cluster=reader_cluster),
-                        np.uint8) for sid in sids])
-                    for s in dplan.sources}
-                if self.use_kernels:
-                    rec = {e: np.asarray(v) for e, v in
-                           ops.apply_decode_many(dplan, stacked).items()}
-                else:
-                    rec = dplan.apply(stacked)      # {erased: (S, B)}
-                for i, (sid, blocks) in enumerate(chunk):
-                    for b in blocks:
-                        out[(sid, b)] = rec[b][i].tobytes()
-                        multi_pairs += 1
-        return out, RecoveryStats(
-            fast_groups=len(fast), pattern_groups=pattern_groups,
-            fast_pairs=fast_pairs, multi_pairs=multi_pairs)
+        finish = self.plan_recover_blocks(pairs,
+                                          reader_cluster=reader_cluster,
+                                          strict=strict)
+        self.engine.flush()
+        return finish()
 
     # -- reconstruction ------------------------------------------------------
     def _pick_rebuild_node(self, sid: int, block: int,
@@ -422,6 +399,37 @@ class StripeCodec:
             return cand
         return fallback
 
+    def plan_rebuild(self, pairs: list[tuple[int, int]], *,
+                     reader_cluster: Optional[int] = None,
+                     exclude_node: int = -1
+                     ) -> Callable[[], tuple[int, RecoveryStats]]:
+        """Two-phase rebuild: recovery ops now, placement at finish.
+        The finish closure returns (#blocks placed, RecoveryStats)."""
+        pairs = list(dict.fromkeys(pairs))   # duplicates would double-place
+        handles = {
+            p: self.engine.submit_recover(p[0], p[1],
+                                          reader_cluster=reader_cluster,
+                                          strict=False)
+            for p in pairs}
+
+        def finish() -> tuple[int, RecoveryStats]:
+            occupied = self.store.nodes_holding_many(
+                {sid for sid, _b in pairs})
+            placed = 0
+            for (sid, b) in pairs:
+                data = handles[(sid, b)].result()
+                if data is None:             # unrecoverable right now
+                    continue
+                occ = occupied[sid]
+                cand = self._pick_rebuild_node(sid, b, occ, exclude_node)
+                if cand is None:
+                    continue
+                self.store.put(sid, b, cand, data)
+                occ.add(cand)
+                placed += 1
+            return placed, _stats_from_handles(handles)
+        return finish
+
     def rebuild_blocks(self, pairs: list[tuple[int, int]], *,
                        reader_cluster: Optional[int] = None,
                        exclude_node: int = -1) -> int:
@@ -440,15 +448,18 @@ class StripeCodec:
         """rebuild_blocks plus launch/traffic accounting (RepairReport).
 
         The failure simulator's repair scheduler runs its data-path mode
-        through this hook: the launch delta tells it how many plan groups
-        actually hit the kernels, and the store's inner/cross byte deltas
-        feed the cross-cluster repair-traffic report."""
+        through this hook (via the request front-end): the launch delta
+        tells it how many plan groups actually hit the kernels, and the
+        store's inner/cross byte deltas feed the cross-cluster
+        repair-traffic report."""
         requested = len(dict.fromkeys(pairs))
         launches0 = ops.kernel_launch_snapshot()
         t = self.store.traffic
         inner0, cross0 = t.inner_bytes, t.cross_bytes
-        placed, stats = self._rebuild_blocks(
-            pairs, reader_cluster=reader_cluster, exclude_node=exclude_node)
+        finish = self.plan_rebuild(pairs, reader_cluster=reader_cluster,
+                                   exclude_node=exclude_node)
+        self.engine.flush()
+        placed, stats = finish()
         return RepairReport(
             requested=requested, placed=placed,
             launches=ops.launches_since(launches0),
@@ -456,27 +467,6 @@ class StripeCodec:
             cross_bytes=t.cross_bytes - cross0,
             plan_groups=stats.plan_groups, patterns=stats.pattern_groups,
             multi_pairs=stats.multi_pairs)
-
-    def _rebuild_blocks(self, pairs: list[tuple[int, int]], *,
-                        reader_cluster: Optional[int] = None,
-                        exclude_node: int = -1) -> tuple[int, RecoveryStats]:
-        pairs = list(dict.fromkeys(pairs))   # duplicates would double-place
-        recovered, stats = self._recover_blocks(
-            pairs, reader_cluster=reader_cluster, strict=False)
-        occupied = self.store.nodes_holding_many({sid for sid, _b in pairs})
-        placed = 0
-        for (sid, b) in pairs:
-            data = recovered.get((sid, b))
-            if data is None:                 # unrecoverable right now
-                continue
-            occ = occupied[sid]
-            cand = self._pick_rebuild_node(sid, b, occ, exclude_node)
-            if cand is None:
-                continue
-            self.store.put(sid, b, cand, data)
-            occ.add(cand)
-            placed += 1
-        return placed, stats
 
     def reconstruct_node(self, node: int) -> int:
         """Rebuild every block the failed node held, re-placing each on a
@@ -491,32 +481,32 @@ class StripeCodec:
         return self.rebuild_blocks(lost, reader_cluster=cluster,
                                    exclude_node=node)
 
+    def plan_read_all(self, metas: list[StripeMeta], *,
+                      reader_cluster: Optional[int] = None
+                      ) -> Callable[[], bytes]:
+        handles = {
+            meta.stripe_id: self._submit_stripe_read(
+                meta.stripe_id, range(self.code.k), reader_cluster)
+            for meta in metas}
+
+        def finish() -> bytes:
+            parts = []
+            for meta in metas:
+                hs = handles[meta.stripe_id]
+                buf = b"".join(hs[b].result()
+                               for b in range(self.code.k))
+                parts.append(buf[:meta.nbytes])
+            return b"".join(parts)
+        return finish
+
     def read_all(self, metas: list[StripeMeta], *,
                  reader_cluster: Optional[int] = None) -> bytes:
         """Read every stripe's data blocks; unavailable blocks across all
         stripes are recovered by the pattern-grouped engine rather than
         one kernel launch per stripe."""
-        k = self.code.k
-        direct: dict[tuple[int, int], bytes] = {}
-        missing: list[tuple[int, int]] = []
-        for meta in metas:
-            for b in range(k):
-                if self.store.available(meta.stripe_id, b):
-                    direct[(meta.stripe_id, b)] = self.store.get(
-                        meta.stripe_id, b, reader_cluster=reader_cluster)
-                else:
-                    missing.append((meta.stripe_id, b))
-        recovered = (self.recover_blocks(missing,
-                                         reader_cluster=reader_cluster)
-                     if missing else {})
-        parts = []
-        for meta in metas:
-            sid = meta.stripe_id
-            buf = b"".join(
-                direct[(sid, b)] if (sid, b) in direct
-                else recovered[(sid, b)] for b in range(k))
-            parts.append(buf[:meta.nbytes])
-        return b"".join(parts)
+        finish = self.plan_read_all(metas, reader_cluster=reader_cluster)
+        self.engine.flush()
+        return finish()
 
 
 def choose_code(topo: ClusterTopology, *, target_rate: float = 0.85,

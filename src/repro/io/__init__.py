@@ -1,0 +1,12 @@
+"""Request-level I/O layer: backend abstraction, coalescing op engine,
+priority-classed front-end. Sits between the kernels and the stripe
+planner: core → kernels → io → ckpt → launch."""
+from .backend import Backend, KernelBackend, NumpyBackend, resolve_backend
+from .engine import CodingEngine, FlushStats, OpHandle
+from .frontend import (ClassStats, Priority, RequestFrontend, RequestHandle,
+                       ScrubReport)
+
+__all__ = ["Backend", "KernelBackend", "NumpyBackend", "resolve_backend",
+           "CodingEngine", "FlushStats", "OpHandle",
+           "ClassStats", "Priority", "RequestFrontend", "RequestHandle",
+           "ScrubReport"]

@@ -1,0 +1,111 @@
+"""Execution backends for the coding byte path.
+
+One interface, two implementations:
+
+  * `KernelBackend` — the JAX/Pallas kernels (kernels/ops.py): MXU
+    bit-plane GF matmul for encode/decode, VPU XOR fold for XOR-only
+    recovery plans. Every call is ONE kernel launch (the stripe-batched
+    wrappers), counted in `ops.KERNEL_LAUNCHES`.
+  * `NumpyBackend` — the host-side GF oracle (core.gf / plan.apply).
+    Byte-identical outputs, zero kernel launches; what `use_kernels=False`
+    used to select via if/else scattered through `ckpt/stripe.py`.
+
+The `CodingEngine` (engine.py) is backend-agnostic: it groups op
+descriptors into batches and hands each batch to exactly one backend
+call, so "which device executes the bytes" is a constructor argument,
+not a branch on every code path. All inputs/outputs are host numpy
+uint8 arrays; the kernel backend owns the device round-trip.
+"""
+from __future__ import annotations
+
+import abc
+
+import numpy as np
+
+from repro.core.codec import DecodePlan, RecoveryPlan
+from repro.core.codes import Code
+from repro.core.gf import gf_matmul
+
+
+class Backend(abc.ABC):
+    """Executes batched coding math on (S, ...) uint8 stripe batches."""
+
+    name: str = "abstract"
+    uses_kernels: bool = False
+
+    @abc.abstractmethod
+    def encode_many(self, code: Code, data: np.ndarray) -> np.ndarray:
+        """(S, k, B) data -> (S, n, B) codewords."""
+
+    @abc.abstractmethod
+    def recover_many(self, plan: RecoveryPlan,
+                     stacked: dict[int, np.ndarray]) -> np.ndarray:
+        """One single-failure plan over S stripes: {src: (S, B)} -> (S, B)."""
+
+    @abc.abstractmethod
+    def apply_decode_many(self, plan: DecodePlan,
+                          stacked: dict[int, np.ndarray]
+                          ) -> dict[int, np.ndarray]:
+        """One multi-erasure plan over S stripes:
+        {src: (S, B)} -> {erased: (S, B)}."""
+
+    @abc.abstractmethod
+    def delta_terms(self, M: np.ndarray, deltas: np.ndarray) -> np.ndarray:
+        """GF(2^8) matmul M (m, u) @ deltas (u, B) -> (m, B): the parity
+        delta terms of a batch of partial updates (one column per update,
+        one row per touched parity term)."""
+
+
+class KernelBackend(Backend):
+    """JAX/Pallas execution: one kernel launch per batched call."""
+
+    name = "kernels"
+    uses_kernels = True
+
+    def encode_many(self, code, data):
+        from repro.kernels import ops
+        return np.asarray(ops.encode_many(code, data))
+
+    def recover_many(self, plan, stacked):
+        from repro.kernels import ops
+        return np.asarray(ops.recover_many(plan, stacked))
+
+    def apply_decode_many(self, plan, stacked):
+        from repro.kernels import ops
+        return {e: np.asarray(v)
+                for e, v in ops.apply_decode_many(plan, stacked).items()}
+
+    def delta_terms(self, M, deltas):
+        from repro.kernels import ops
+        return np.asarray(ops.apply_matrix(M, deltas))
+
+
+class NumpyBackend(Backend):
+    """Host GF oracle: byte-identical to the kernels, zero launches."""
+
+    name = "numpy"
+    uses_kernels = False
+
+    def encode_many(self, code, data):
+        S, k, bs = data.shape
+        flat = np.ascontiguousarray(data.transpose(1, 0, 2)).reshape(k, -1)
+        cw = code.encode(flat)                              # (n, S*bs)
+        return cw.reshape(code.n, S, bs).transpose(1, 0, 2)
+
+    def recover_many(self, plan, stacked):
+        return plan.apply(stacked)          # broadcasts over (S, B)
+
+    def apply_decode_many(self, plan, stacked):
+        return plan.apply(stacked)
+
+    def delta_terms(self, M, deltas):
+        return gf_matmul(np.ascontiguousarray(M, dtype=np.uint8),
+                         np.ascontiguousarray(deltas, dtype=np.uint8))
+
+
+def resolve_backend(backend: Backend | None = None, *,
+                    use_kernels: bool = True) -> Backend:
+    """The one place the legacy `use_kernels` flag becomes a backend."""
+    if backend is not None:
+        return backend
+    return KernelBackend() if use_kernels else NumpyBackend()

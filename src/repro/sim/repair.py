@@ -20,10 +20,12 @@ Stripes with ≥ 2 missing blocks jump the queue and finish in T_hours
 (detection-limited), mirroring the chain's prioritised multi-failure
 repair rate μ' = 1/T.
 
-In data-path mode the scheduler drives real bytes through
-`StripeCodec.rebuild_blocks_report` on job completion and folds the
-returned kernel-launch delta into its ledger — the launch counters act
-as a traffic oracle: launches == plan groups actually repaired.
+In data-path mode the scheduler drives real bytes through the request
+front-end (`repro.io.RequestFrontend.rebuild`, BACKGROUND priority — so
+repair traffic shares the coalescing engine with, and yields to, any
+concurrent client reads on the same codec) and folds the returned
+kernel-launch delta into its ledger — the launch counters act as a
+traffic oracle: launches == plan groups actually repaired.
 """
 from __future__ import annotations
 
@@ -93,6 +95,10 @@ class RepairScheduler:
         self.stripe_missing = stripe_missing
         self.on_repaired = on_repaired
         self.codec = codec                      # StripeCodec for data-path
+        self.frontend = None
+        if codec is not None:
+            from repro.io import RequestFrontend
+            self.frontend = RequestFrontend(codec)
         self.exclude_node_of = exclude_node_of
         self.ledger = RepairLedger()
         code = placement.code
@@ -177,8 +183,7 @@ class RepairScheduler:
         if self.codec is not None:
             exclude = (self.exclude_node_of(*group[0])
                        if self.exclude_node_of else -1)
-            report = self.codec.rebuild_blocks_report(
-                group, exclude_node=exclude)
+            report = self.frontend.rebuild(group, exclude_node=exclude)
             self.ledger.kernel_launches += report.launches
             self.ledger.data_bytes_read += (report.inner_bytes
                                             + report.cross_bytes)

@@ -1,0 +1,469 @@
+"""The io layer: backend abstraction, coalescing CodingEngine, and the
+priority-classed RequestFrontend — plus the straggler-read and
+DiskBlockStore satellite regressions.
+
+The acceptance invariant rides `kernel_counters`: N concurrent
+same-pattern degraded reads through the front-end must cost O(#patterns)
+kernel launches, not O(N), and client reads must demonstrably finish
+ahead of background rebuild/scrub in the per-class accounting.
+"""
+import numpy as np
+import pytest
+
+from repro.ckpt import BlockStore, ClusterTopology, DiskBlockStore
+from repro.ckpt.store import NodeFailure
+from repro.ckpt.stripe import StripeCodec
+from repro.core.codes import make_unilrc
+from repro.io import (KernelBackend, NumpyBackend, Priority,
+                      RequestFrontend, resolve_backend)
+
+BS = 256
+
+
+def _setup(stripes, *, use_kernels=True, seed=0, block_size=BS,
+           store_cls=BlockStore, **store_kw):
+    code = make_unilrc(1, 4)                  # n=20, k=12, group size 5
+    store = store_cls(ClusterTopology(4, 8), **store_kw)
+    codec = StripeCodec(code, store, block_size=block_size,
+                        use_kernels=use_kernels)
+    rng = np.random.default_rng(seed)
+    payload = rng.integers(0, 256, size=code.k * block_size * stripes,
+                           dtype=np.uint8).tobytes()
+    metas = codec.write(payload)
+    return code, store, codec, payload, metas
+
+
+def _expect(payload, code, sid, b, bs=BS):
+    off = (sid * code.k + b) * bs
+    return payload[off:off + bs]
+
+
+def _group_data(code, gi):
+    return [b for b in code.groups[gi] if code.block_type[b] == 'd']
+
+
+# ---------------------------------------------------------------------------
+# Backend abstraction
+# ---------------------------------------------------------------------------
+
+def test_resolve_backend_legacy_flag():
+    assert isinstance(resolve_backend(use_kernels=True), KernelBackend)
+    assert isinstance(resolve_backend(use_kernels=False), NumpyBackend)
+    nb = NumpyBackend()
+    assert resolve_backend(nb, use_kernels=True) is nb
+    codec = StripeCodec(make_unilrc(1, 4),
+                        BlockStore(ClusterTopology(4, 8)),
+                        block_size=64, backend=nb)
+    assert codec.backend is nb and codec.use_kernels is False
+
+
+def test_backends_byte_identical_encode_and_decode():
+    code = make_unilrc(1, 4)
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, 256, size=(3, code.k, 128), dtype=np.uint8)
+    kb, nb = KernelBackend(), NumpyBackend()
+    assert np.array_equal(kb.encode_many(code, data),
+                          nb.encode_many(code, data))
+    M = rng.integers(0, 256, size=(4, 3), dtype=np.uint8)
+    deltas = rng.integers(0, 256, size=(3, 128), dtype=np.uint8)
+    assert np.array_equal(kb.delta_terms(M, deltas),
+                          nb.delta_terms(M, deltas))
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: cross-request coalescing through the front-end
+# ---------------------------------------------------------------------------
+
+def test_frontend_coalesces_same_pattern_degraded_reads(kernel_counters):
+    """Acceptance: 16 independent degraded-read requests whose stripes
+    share ONE live erasure pattern execute in exactly one kernel launch —
+    O(#patterns), not O(N requests)."""
+    N = 16
+    code, store, codec, payload, metas = _setup(N)
+    b1, b2 = _group_data(code, 0)[:2]
+    for sid in range(N):
+        store.drop_block(sid, b1)
+        store.drop_block(sid, b2)
+    fe = RequestFrontend(codec)
+    handles = [fe.submit_degraded_read(metas[sid], b1 if sid % 2 else b2)
+               for sid in range(N)]
+    before = sum(kernel_counters.values())
+    fe.flush()
+    assert sum(kernel_counters.values()) - before == 1
+    assert fe.stats[Priority.DEGRADED_READ].launches == 1
+    assert fe.stats[Priority.DEGRADED_READ].requests == N
+    for sid, h in enumerate(handles):
+        assert h.result() == _expect(payload, code, sid,
+                                     b1 if sid % 2 else b2)
+
+
+def test_frontend_mixed_patterns_one_launch_each(kernel_counters):
+    """Two distinct patterns across requests -> two decode launches."""
+    S = 8
+    code, store, codec, payload, metas = _setup(S, seed=1)
+    d0 = _group_data(code, 0)
+    pairs = []
+    for sid in range(S):
+        b2 = d0[1] if sid % 2 == 0 else d0[2]
+        store.drop_block(sid, d0[0])
+        store.drop_block(sid, b2)
+        pairs.append((sid, b2))
+    fe = RequestFrontend(codec)
+    handles = [fe.submit_degraded_read(metas[sid], b) for sid, b in pairs]
+    before = sum(kernel_counters.values())
+    fe.flush()
+    assert sum(kernel_counters.values()) - before == 2
+    for (sid, b), h in zip(pairs, handles):
+        assert h.result() == _expect(payload, code, sid, b)
+
+
+def test_frontend_priority_classes_and_latency():
+    """Client reads are served before background rebuild in the same
+    cycle: per-class mean latency must be ordered CLIENT <= BACKGROUND,
+    and every class shows traffic in its own accounting."""
+    S = 6
+    code, store, codec, payload, metas = _setup(S, seed=2)
+    b1, b2 = _group_data(code, 1)[:2]
+    lost = []
+    for sid in range(S):
+        store.drop_block(sid, b1)
+        store.drop_block(sid, b2)
+        lost += [(sid, b1), (sid, b2)]
+    fe = RequestFrontend(codec)
+    rebuild = fe.submit_rebuild(lost)
+    reads = [fe.submit_client_read(m) for m in metas]
+    fe.drain()
+    placed, stats = rebuild.result()
+    assert placed == len(lost)
+    assert stats.pattern_groups == 1
+    for sid, h in enumerate(reads):
+        assert h.result() == payload[sid * code.k * BS:
+                                     (sid + 1) * code.k * BS]
+    cli, bg = fe.stats[Priority.CLIENT_READ], fe.stats[Priority.BACKGROUND]
+    assert cli.requests == S and bg.requests == 1
+    assert cli.mean_latency_s <= bg.mean_latency_s
+    assert cli.inner_bytes + cli.cross_bytes > 0
+    assert bg.inner_bytes + bg.cross_bytes > 0
+
+
+def test_frontend_background_budget_meters_storm():
+    """A rebuild storm is chunked by background_ops_per_flush; client
+    reads submitted mid-storm are never queued behind it."""
+    S = 6
+    code, store, codec, payload, metas = _setup(S, seed=3)
+    b = _group_data(code, 0)[0]
+    for sid in range(S):
+        store.drop_block(sid, b)
+    fe = RequestFrontend(codec, background_ops_per_flush=2)
+    storm = [fe.submit_rebuild([(sid, b)]) for sid in range(S)]
+    read = fe.submit_client_read(metas[0])
+    fe.flush()
+    assert read.done                     # client read served in cycle 1
+    assert sum(h.done for h in storm) == 2
+    assert fe.pending == S - 2
+    fe.drain()
+    assert all(h.done for h in storm)
+    assert fe.stats[Priority.BACKGROUND].flushes == 3
+
+
+def test_frontend_scrub_detects_parity_drift():
+    code, store, codec, payload, metas = _setup(3, seed=4)
+    sid = 1
+    pblock = code.k                       # corrupt one parity in place
+    store.put(sid, pblock, store.node_of(sid, pblock), bytes(BS))
+    fe = RequestFrontend(codec)
+    h = fe.submit_scrub(metas)
+    fe.drain()
+    report = h.result()
+    assert report.checked == 3 and report.skipped == 0
+    assert report.mismatched == ((sid, pblock),)
+
+
+def test_frontend_scrub_skips_degraded_stripes():
+    code, store, codec, payload, metas = _setup(3, seed=5)
+    store.drop_block(0, 0)
+    fe = RequestFrontend(codec)
+    h = fe.submit_scrub(metas)
+    fe.drain()
+    report = h.result()
+    assert report.stripes == 3
+    assert report.checked == 2 and report.skipped == 1
+
+
+def test_frontend_failed_request_does_not_poison_batch():
+    """A request on an unrecoverable stripe fails alone; coalesced
+    neighbours still complete."""
+    code, store, codec, payload, metas = _setup(2, seed=6)
+    d0 = _group_data(code, 0)
+    store.drop_block(0, d0[0])                  # recoverable
+    for b in range(code.n - code.k + 1):        # beyond tolerance
+        store.drop_block(1, b)
+    fe = RequestFrontend(codec)
+    ok = fe.submit_degraded_read(metas[0], d0[0])
+    doomed = fe.submit_degraded_read(metas[1], 0)
+    fe.flush()
+    assert ok.result() == _expect(payload, code, 0, d0[0])
+    with pytest.raises(ValueError):
+        doomed.result()
+    assert fe.stats[Priority.DEGRADED_READ].failed_requests == 1
+
+
+def test_frontend_rebuild_report_matches_codec_path(kernel_counters):
+    """RequestFrontend.rebuild (the sim scheduler's data-path hook) and
+    the synchronous codec path agree on grouping accounting."""
+    S = 5
+    results = []
+    for use_frontend in (False, True):
+        code, store, codec, payload, metas = _setup(S, seed=7)
+        b1, b2 = _group_data(code, 0)[:2]
+        pairs = []
+        for sid in range(S):
+            store.drop_block(sid, b1)
+            store.drop_block(sid, b2)
+            pairs += [(sid, b1), (sid, b2)]
+        if use_frontend:
+            report = RequestFrontend(codec).rebuild(pairs)
+        else:
+            report = codec.rebuild_blocks_report(pairs)
+        results.append(report)
+        assert codec.read_all(metas) == payload
+    assert results[0] == results[1]
+    assert results[0].patterns == 1 and results[0].launches == 1
+
+
+# ---------------------------------------------------------------------------
+# Engine-level coalescing: encodes and delta updates
+# ---------------------------------------------------------------------------
+
+def test_engine_coalesces_pending_encodes(kernel_counters):
+    code, store, codec, payload, metas = _setup(1)
+    rng = np.random.default_rng(8)
+    a = rng.integers(0, 256, size=(2, code.k, BS), dtype=np.uint8)
+    b = rng.integers(0, 256, size=(3, code.k, BS), dtype=np.uint8)
+    ha, hb = codec.engine.submit_encode(a), codec.engine.submit_encode(b)
+    before = sum(kernel_counters.values())
+    stats = codec.engine.flush()
+    assert sum(kernel_counters.values()) - before == 1
+    assert stats.encode_batches == 1
+    cwa, cwb = ha.result(), hb.result()
+    assert cwa.shape == (2, code.n, BS) and cwb.shape == (3, code.n, BS)
+    nb = NumpyBackend()
+    assert np.array_equal(cwa, nb.encode_many(code, a))
+    assert np.array_equal(cwb, nb.encode_many(code, b))
+
+
+def test_engine_coalesces_updates_one_matmul(kernel_counters):
+    """Two partial updates on DIFFERENT stripes ride one GF matmul wave;
+    both stripes then read back patched and parity-consistent."""
+    code, store, codec, payload, metas = _setup(2, seed=9)
+    rng = np.random.default_rng(10)
+    news = [rng.integers(0, 256, BS, dtype=np.uint8).tobytes()
+            for _ in range(2)]
+    h0 = codec.engine.submit_update(0, 1, news[0])
+    h1 = codec.engine.submit_update(1, 2, news[1])
+    before = kernel_counters["gf_bitmatmul"]
+    stats = codec.engine.flush()
+    assert kernel_counters["gf_bitmatmul"] - before == 1
+    assert stats.update_waves == 1
+    assert h0.result() == int(np.count_nonzero(code.A[:, 1]))
+    assert h1.result() == int(np.count_nonzero(code.A[:, 2]))
+    expect = bytearray(payload)
+    expect[1 * BS:2 * BS] = news[0]
+    expect[(code.k + 2) * BS:(code.k + 3) * BS] = news[1]
+    assert codec.read_all(metas) == bytes(expect)
+    # parities still decode: drop the updated blocks and recover them
+    store.drop_block(0, 1)
+    store.drop_block(1, 2)
+    rec = codec.recover_blocks([(0, 1), (1, 2)])
+    assert rec[(0, 1)] == news[0]
+    assert rec[(1, 2)] == news[1]
+
+
+def test_engine_updates_same_stripe_keep_submission_order():
+    code, store, codec, payload, metas = _setup(1, seed=11)
+    first, second = b"\x01" * BS, b"\x02" * BS
+    codec.engine.submit_update(0, 0, first)
+    codec.engine.submit_update(0, 0, second)
+    stats = codec.engine.flush()
+    assert stats.update_waves == 2      # conflicting stripe -> two waves
+    expect = bytearray(payload)
+    expect[0:BS] = second
+    assert codec.normal_read(metas[0]) == bytes(expect)
+    store.drop_block(0, 0)
+    assert codec.degraded_read(metas[0], 0) == second
+
+
+def test_engine_update_failure_aborts_wave_untouched():
+    code, store, codec, payload, metas = _setup(1, seed=12)
+    nz = [int(pi) for pi in np.flatnonzero(code.A[:, 0])]
+    victim = store.node_of(0, code.k + nz[-1])
+    store.fail_node(victim)
+    handle = codec.engine.submit_update(0, 0, bytes(BS))
+    codec.engine.flush()
+    with pytest.raises(NodeFailure):
+        handle.result()
+    store.heal_node(victim)
+    assert codec.normal_read(metas[0]) == payload
+
+
+def test_engine_bad_update_fails_cleanly_not_stranded():
+    """Regression: a size-mismatched update used to raise out of flush()
+    with _pending already cleared, stranding every co-flushed handle
+    pending forever. Now the bad wave's handles carry the error and the
+    rest of the flush proceeds."""
+    code, store, codec, payload, metas = _setup(2, seed=19)
+    bad = codec.engine.submit_update(0, 0, b"\x01" * (BS // 2))
+    read = codec.engine.submit_read(1, 0)
+    codec.engine.flush()
+    with pytest.raises(ValueError, match="bytes"):
+        bad.result()
+    assert read.result() == _expect(payload, code, 1, 0)
+    assert codec.engine.pending == 0
+    assert codec.normal_read(metas[0]) == payload[:code.k * BS]  # untouched
+
+
+def test_engine_rejects_zero_stripe_encode():
+    """A zero-stripe encode would strand co-flushed handles (no chunk
+    rows -> np.stack([]) after _pending is cleared) — rejected upfront."""
+    code, store, codec, payload, metas = _setup(1)
+    with pytest.raises(ValueError, match="at least one stripe"):
+        codec.engine.submit_encode(np.empty((0, code.k, BS), np.uint8))
+    assert codec.engine.pending == 0
+
+
+def test_engine_handle_before_flush_raises():
+    code, store, codec, payload, metas = _setup(1)
+    h = codec.engine.submit_read(0, 0)
+    with pytest.raises(RuntimeError, match="not flushed"):
+        h.result()
+    codec.engine.flush()
+    assert h.result() == _expect(payload, code, 0, 0)
+
+
+# ---------------------------------------------------------------------------
+# Oracle backend through the whole front-end stack
+# ---------------------------------------------------------------------------
+
+def test_oracle_frontend_zero_launches_byte_identical(kernel_counters):
+    N = 8
+    outs = {}
+    for use_kernels in (True, False):
+        code, store, codec, payload, metas = _setup(
+            N, use_kernels=use_kernels, seed=13)
+        b1, b2 = _group_data(code, 0)[:2]
+        for sid in range(N):
+            store.drop_block(sid, b1)
+            store.drop_block(sid, b2)
+        fe = RequestFrontend(codec)
+        handles = [fe.submit_degraded_read(metas[sid], b1)
+                   for sid in range(N)]
+        before = sum(kernel_counters.values())
+        fe.drain()
+        launches = sum(kernel_counters.values()) - before
+        assert launches == (1 if use_kernels else 0)
+        outs[use_kernels] = [h.result() for h in handles]
+    assert outs[True] == outs[False]
+
+
+# ---------------------------------------------------------------------------
+# Satellite: straggler_read parity-slowest regression
+# ---------------------------------------------------------------------------
+
+def test_straggler_read_parity_slowest_still_substitutes(kernel_counters):
+    """Regression: with the group PARITY on the slowest node, the old
+    code's group-wide max matched the parity and silently skipped
+    substitution, leaving the read stuck behind the slow DATA member.
+    The straggler candidate set is the data members only."""
+    code, store, codec, payload, metas = _setup(1, seed=14)
+    grp = code.groups[0]
+    parity = next(b for b in grp if code.block_type[b] != 'd')
+    slow_data = _group_data(code, 0)[0]
+    store.set_latency(store.node_of(0, parity), 2.0)      # slowest overall
+    store.set_latency(store.node_of(0, slow_data), 1.0)
+    before = sum(kernel_counters.values())
+    out = codec.straggler_read(metas[0], 0)
+    # substitution happened: the slow data member was parity-decoded
+    # (>= 1 recovery launch), and every byte is still correct.
+    assert sum(kernel_counters.values()) - before >= 1
+    assert set(out) == set(_group_data(code, 0))
+    for b, data in out.items():
+        assert data == _expect(payload, code, 0, b), b
+
+
+def test_straggler_read_no_latency_no_substitution(kernel_counters):
+    code, store, codec, payload, metas = _setup(1, seed=15)
+    before = sum(kernel_counters.values())
+    out = codec.straggler_read(metas[0], 0)
+    assert sum(kernel_counters.values()) - before == 0
+    for b, data in out.items():
+        assert data == _expect(payload, code, 0, b), b
+
+
+# ---------------------------------------------------------------------------
+# Satellite: BlockStore.get_many semantics
+# ---------------------------------------------------------------------------
+
+def test_get_many_matches_sequential_gets_and_traffic():
+    code, store, codec, payload, metas = _setup(2, seed=16)
+    pairs = [(sid, b) for sid in range(2) for b in range(code.k)]
+    t0 = (store.traffic.reads, store.traffic.inner_bytes,
+          store.traffic.cross_bytes)
+    batched = store.get_many(pairs, reader_cluster=1)
+    t1 = (store.traffic.reads, store.traffic.inner_bytes,
+          store.traffic.cross_bytes)
+    sequential = {p: store.get(*p, reader_cluster=1) for p in pairs}
+    t2 = (store.traffic.reads, store.traffic.inner_bytes,
+          store.traffic.cross_bytes)
+    assert batched == sequential
+    assert tuple(b - a for a, b in zip(t0, t1)) == \
+           tuple(c - b for b, c in zip(t1, t2))
+
+
+def test_get_many_fails_before_any_accounting():
+    code, store, codec, payload, metas = _setup(1, seed=17)
+    store.fail_node(store.node_of(0, 3))
+    reads0 = store.traffic.reads
+    with pytest.raises(NodeFailure):
+        store.get_many([(0, 0), (0, 3)])
+    assert store.traffic.reads == reads0     # one failure-set check, no I/O
+    with pytest.raises(KeyError):
+        store.get_many([(0, 0), (99, 0)])
+    assert store.traffic.reads == reads0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: DiskBlockStore restart under the batched engine
+# ---------------------------------------------------------------------------
+
+def test_disk_store_restart_multi_erasure_identity(tmp_path):
+    """Process-restart drill: write to disk, reopen a FRESH store from the
+    directory tree, then multi-erasure recover_blocks — byte-identical to
+    the in-memory store on the same payload and erasure pattern."""
+    S = 4
+    code, dstore, dcodec, payload, _ = _setup(
+        S, seed=18, store_cls=DiskBlockStore, root=tmp_path / "blocks")
+    # restart: a new process opens the tree with a cold index
+    dstore2 = DiskBlockStore(ClusterTopology(4, 8), tmp_path / "blocks")
+    dstore2.reopen()
+    codec2 = StripeCodec(code, dstore2, block_size=BS)
+    mem_code, mem_store, mem_codec, mem_payload, _ = _setup(S, seed=18)
+    assert mem_payload == payload
+    b1, b2 = _group_data(code, 0)[:2]
+    pairs = []
+    for sid in range(S):
+        for st_ in (dstore2, mem_store):
+            st_.drop_block(sid, b1)
+            st_.drop_block(sid, b2)
+        pairs += [(sid, b1), (sid, b2)]
+    rec_disk = codec2.recover_blocks(pairs)
+    rec_mem = mem_codec.recover_blocks(pairs)
+    assert rec_disk == rec_mem
+    for sid, b in pairs:
+        assert rec_disk[(sid, b)] == _expect(payload, code, sid, b)
+    # rebuild re-persists to disk: a SECOND restart reads clean stripes
+    assert codec2.rebuild_blocks(pairs) == len(pairs)
+    dstore3 = DiskBlockStore(ClusterTopology(4, 8), tmp_path / "blocks")
+    dstore3.reopen()
+    for sid in range(S):
+        for b in range(code.k):
+            assert dstore3.get(sid, b) == _expect(payload, code, sid, b)
