@@ -15,19 +15,29 @@ same-pattern degraded reads must execute in <= #patterns launches, and
 client reads must finish ahead of background rebuild/scrub in the
 per-class latency accounting.
 
+The topology gate (`--topo-*`, fed by fig_topology_repair) is structural
+rather than timing-based: UniLRC native placement must read zero
+cross-cluster blocks for single failures while every baseline stays
+above a cross-traffic floor, correlated cluster-loss repair must slow
+down under 10x core oversubscription, and gateway-aggregated degraded
+reads must stay byte-identical and under the pre-fold launch ceiling.
+
 Usage (what .github/workflows/ci.yml runs):
     cp artifacts/bench/fig_batched_recovery.json /tmp/baseline.json
     cp artifacts/bench/fig_correlated_recovery.json /tmp/corr_baseline.json
     cp artifacts/bench/fig_mixed_workload.json /tmp/mixed_baseline.json
-    python -m benchmarks.run --tiny \
-        --only fig_batched_recovery,fig_correlated_recovery,fig_mixed_workload
+    cp artifacts/bench/fig_topology_repair.json /tmp/topo_baseline.json
+    python -m benchmarks.run --tiny --only \
+        fig_batched_recovery,fig_correlated_recovery,fig_mixed_workload,fig_topology_repair
     python -m benchmarks.check_regression \
         --baseline /tmp/baseline.json \
         --fresh artifacts/bench/fig_batched_recovery.json \
         --corr-baseline /tmp/corr_baseline.json \
         --corr-fresh artifacts/bench/fig_correlated_recovery.json \
         --mixed-baseline /tmp/mixed_baseline.json \
-        --mixed-fresh artifacts/bench/fig_mixed_workload.json
+        --mixed-fresh artifacts/bench/fig_mixed_workload.json \
+        --topo-baseline /tmp/topo_baseline.json \
+        --topo-fresh artifacts/bench/fig_topology_repair.json
 """
 from __future__ import annotations
 
@@ -136,6 +146,88 @@ def check_mixed(baseline: dict, fresh: dict, min_speedup: float,
     return failures
 
 
+def check_topology(baseline: dict, fresh: dict, *,
+                   min_cross_ratio: float = 0.05,
+                   min_oversub_slowdown: float = 1.1) -> list[str]:
+    """fig_topology_repair gate — four structural invariants the
+    topology subsystem exists to provide:
+
+      * UniLRC's native placement reads ZERO cross-cluster blocks for
+        single failures (and its single-failure repair time is
+        oversubscription-blind), while every baseline placement's
+        cross fraction stays above `min_cross_ratio` — the
+        UniLRC-vs-baseline cross-traffic split;
+      * correlated cluster-loss repair slows by at least
+        `min_oversub_slowdown` between 1x and 10x core
+        oversubscription (the single-pipe scheduler could not
+        express this at all);
+      * gateway-aggregated degraded reads are byte-identical to the
+        unaggregated path and actually cut cross bytes;
+      * aggregation stays under its launch ceiling
+        (1 combine + 1 fold per remote cluster per plan group).
+    """
+    failures: list[str] = []
+    base_ids = {_row_id(r) for r in baseline.get("rows", [])}
+    rows = fresh.get("rows", [])
+    if not rows:
+        return ["fresh topology result has no rows — benchmark did not run"]
+    for row in rows:
+        rid = _row_id(row)
+        if rid not in base_ids:
+            failures.append(f"{rid}: no committed baseline row "
+                            f"(schema drift?)")
+        if row["scenario"] == "single-failures":
+            if row["scheme"] == "UniLRC":
+                if row["cross_blocks"] != 0:
+                    failures.append(
+                        f"{rid}: UniLRC native placement read "
+                        f"{row['cross_blocks']} cross-cluster blocks for "
+                        f"single failures — topology locality regressed")
+                if abs(row["oversub_slowdown"] - 1.0) > 1e-6:
+                    failures.append(
+                        f"{rid}: UniLRC single-failure repair slowed "
+                        f"{row['oversub_slowdown']}x under oversubscription "
+                        f"despite zero cross traffic")
+            elif row["cross_fraction"] < min_cross_ratio:
+                failures.append(
+                    f"{rid}: baseline cross fraction "
+                    f"{row['cross_fraction']} below {min_cross_ratio} — "
+                    f"the UniLRC-vs-baseline cross-traffic split vanished")
+        elif row["scenario"] == "cluster-loss":
+            if row["oversub_slowdown"] < min_oversub_slowdown:
+                failures.append(
+                    f"{rid}: cluster-loss repair slowdown "
+                    f"{row['oversub_slowdown']}x at 10x oversubscription "
+                    f"is below the {min_oversub_slowdown}x floor — the "
+                    f"per-link scheduler degenerated into a single pipe")
+        print(f"{rid}: slowdown {row['oversub_slowdown']}x, "
+              f"cross {row['cross_blocks']}")
+    agg = fresh.get("agg_rows", [])
+    if not agg:
+        failures.append("fresh topology result has no agg_rows — the "
+                        "gateway-aggregation benchmark did not run")
+    for row in agg:
+        rid = row.get("scheme", "?")
+        if not row.get("byte_identical"):
+            failures.append(
+                f"{rid}: aggregated degraded reads are NOT byte-identical "
+                f"to the unaggregated decode")
+        if row["agg_launches"] > row["launch_ceiling"]:
+            failures.append(
+                f"{rid}: {row['agg_launches']} launches for an "
+                f"aggregation ceiling of {row['launch_ceiling']} — "
+                f"gateway pre-folds regressed into per-source work")
+        if row["agg_cross_bytes"] >= row["raw_cross_bytes"]:
+            failures.append(
+                f"{rid}: aggregation shipped {row['agg_cross_bytes']} "
+                f"cross bytes vs {row['raw_cross_bytes']} raw — pre-folds "
+                f"saved nothing")
+        print(f"{rid}: agg cross {row['agg_cross_bytes']} vs raw "
+              f"{row['raw_cross_bytes']}, launches {row['agg_launches']}"
+              f"<={row['launch_ceiling']}")
+    return failures
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", required=True, type=pathlib.Path,
@@ -150,6 +242,17 @@ def main(argv: list[str] | None = None) -> int:
                     help="committed fig_mixed_workload.json")
     ap.add_argument("--mixed-fresh", type=pathlib.Path,
                     help="fig_mixed_workload.json from this run")
+    ap.add_argument("--topo-baseline", type=pathlib.Path,
+                    help="committed fig_topology_repair.json")
+    ap.add_argument("--topo-fresh", type=pathlib.Path,
+                    help="fig_topology_repair.json from this run")
+    ap.add_argument("--topo-min-cross-ratio", type=float, default=0.05,
+                    help="floor on every baseline placement's single-"
+                         "failure cross-traffic fraction (UniLRC is "
+                         "pinned to exactly zero)")
+    ap.add_argument("--topo-min-oversub-slowdown", type=float, default=1.1,
+                    help="cluster-loss repair at 10x core oversubscription "
+                         "must be at least this much slower than at 1x")
     ap.add_argument("--min-speedup", type=float, default=2.0,
                     help="absolute floor on batched speedup per row")
     ap.add_argument("--rel-floor", type=float, default=0.4,
@@ -174,6 +277,14 @@ def main(argv: list[str] | None = None) -> int:
             json.loads(args.mixed_baseline.read_text()),
             json.loads(args.mixed_fresh.read_text()),
             args.min_speedup, args.rel_floor)
+    if (args.topo_baseline is None) != (args.topo_fresh is None):
+        ap.error("--topo-baseline and --topo-fresh go together")
+    if args.topo_fresh is not None:
+        failures += check_topology(
+            json.loads(args.topo_baseline.read_text()),
+            json.loads(args.topo_fresh.read_text()),
+            min_cross_ratio=args.topo_min_cross_ratio,
+            min_oversub_slowdown=args.topo_min_oversub_slowdown)
     if failures:
         for f in failures:
             print(f"REGRESSION: {f}", file=sys.stderr)

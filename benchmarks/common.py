@@ -21,26 +21,43 @@ import pathlib
 import time
 
 from repro.core.codes import ALL_SCHEMES, paper_schemes
+from repro.topo import Topology
 
 __all__ = ["ALL_SCHEMES", "BLOCK_SIZE", "NetModel", "all_codes",
-           "fmt_table", "gbps_to_Bps", "make_codec", "save_result",
-           "timed", "traffic_of_read"]
+           "deploy_topology", "fmt_table", "gbps_to_Bps", "make_codec",
+           "save_result", "timed", "traffic_of_read"]
 
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 
 BLOCK_SIZE = 1 << 20          # 1 MB, as the paper (QFS default)
-INNER_GBPS = 10.0             # intra-cluster
-CROSS_GBPS = 1.0              # cross-cluster (1:10, paper setup)
+INNER_GBPS = Topology.inner_gbps    # link constants live in repro.topo
+CROSS_GBPS = Topology.cross_gbps    # (10:1, paper setup)
 
 
 def gbps_to_Bps(gbps: float) -> float:
     return gbps * 1e9 / 8
 
 
+def deploy_topology(placement, *, oversubscription: float = 1.0,
+                    spare_nodes: int = 0) -> Topology:
+    """Smallest Topology the placement fits (one node per block of the
+    fullest cluster, plus spares for rebuild headroom), with the shared
+    default link tiers."""
+    npc = max(len(placement.cluster_blocks(c))
+              for c in range(placement.num_clusters)) + spare_nodes
+    return Topology(placement.num_clusters, npc,
+                    oversubscription=oversubscription)
+
+
 @dataclasses.dataclass
 class NetModel:
     inner_Bps: float = gbps_to_Bps(INNER_GBPS)
     cross_Bps: float = gbps_to_Bps(CROSS_GBPS)
+
+    @classmethod
+    def from_topology(cls, topo: Topology) -> "NetModel":
+        return cls(inner_Bps=gbps_to_Bps(topo.inner_gbps),
+                   cross_Bps=gbps_to_Bps(topo.cross_gbps))
 
     def transfer_seconds(self, per_cluster: dict[int, tuple[int, int]]
                          ) -> float:
@@ -88,13 +105,11 @@ def make_codec(code, block_size: int):
     """(StripeCodec, BlockStore) on the smallest topology the code's
     default placement fits — the shared setup of the recovery/workload
     benchmarks, so their measured configurations cannot drift apart."""
-    from repro.ckpt import BlockStore, ClusterTopology
+    from repro.ckpt import BlockStore
     from repro.ckpt.stripe import StripeCodec
     from repro.core.placement import default_placement
     placement = default_placement(code)
-    npc = max(len(placement.cluster_blocks(c))
-              for c in range(placement.num_clusters))
-    store = BlockStore(ClusterTopology(placement.num_clusters, npc))
+    store = BlockStore(deploy_topology(placement))
     return StripeCodec(code, store, block_size=block_size), store
 
 

@@ -1,0 +1,232 @@
+"""Topology-aware repair: cross-cluster traffic + repair time under
+core-link oversubscription (the paper's limitation-2 experiment).
+
+Two parts:
+
+  * Link-tier repair sweep (metadata mode, `sim.RepairScheduler` with an
+    explicit `Topology`): for each 30-of-42 scheme under its paper
+    placement (UniLRC "one group, one cluster"; ALRC/OLRC/ULRC under
+    ECWide), repair (a) every block as an isolated single failure and
+    (b) a correlated whole-cluster loss, with the core link at 1x / 3x /
+    10x oversubscription. UniLRC's single-failure repairs read zero
+    cross-cluster blocks, so its repair time is oversubscription-blind;
+    the baselines' cross reads slow down as the core saturates — and
+    every scheme's correlated-loss repair time depends on the
+    oversubscription factor, which the old single-pipe scheduler could
+    not express.
+
+  * Gateway aggregation (data path, `RequestFrontend` degraded reads):
+    XOR-linear plans under split-group placements (UniLRC §3.3 relaxed
+    "one group, t clusters"; ULRC/ECWide) ship ONE pre-folded block per
+    remote cluster instead of every remote source. Byte-identity of the
+    aggregated reads is checked against the unaggregated path on BOTH
+    backends, cross bytes drop to (t−1)·block per read, and the kernel
+    launch count stays under the aggregation ceiling
+    (1 + #folding clusters per plan group).
+
+The committed JSON baseline feeds `benchmarks/check_regression.py
+--topo-*`, which gates the UniLRC-vs-baseline cross-traffic split, the
+1x-vs-10x oversubscription slowdown, byte identity, and the
+aggregated-launches ceiling in CI.
+"""
+from __future__ import annotations
+
+import collections
+import os
+
+import numpy as np
+
+from repro.ckpt import BlockStore
+from repro.ckpt.stripe import StripeCodec
+from repro.core.codec import plans_for
+from repro.core.codes import make_unilrc, paper_schemes
+from repro.core.mttdl import MTTDLParams
+from repro.core.placement import (default_placement, place_unilrc_relaxed)
+from repro.io import Priority, RequestFrontend
+from repro.kernels import ops as kernel_ops
+from repro.sim import RepairScheduler, Simulator
+from repro.topo import Topology
+
+from .common import deploy_topology, fmt_table, save_result
+
+OVERSUBS = (1.0, 3.0, 10.0)
+
+
+# ---------------------------------------------------------------------------
+# Part 1: link-tier repair sweep (metadata mode)
+# ---------------------------------------------------------------------------
+
+def _run_repair(placement, topo: Topology, pairs, params: MTTDLParams,
+                block_TB: float):
+    """Drive the per-link scheduler over `pairs` and return
+    (hours, ledger)."""
+    sim = Simulator()
+    missing: dict[int, set[int]] = {}
+    for sid, b in pairs:
+        missing.setdefault(sid, set()).add(b)
+
+    def on_repaired(done):
+        for sid, b in done:
+            missing.get(sid, set()).discard(b)
+
+    sched = RepairScheduler(
+        sim, placement, params, block_TB=block_TB,
+        stripe_missing=lambda sid: missing.get(sid, frozenset()),
+        on_repaired=on_repaired, topology=topo)
+    sched.damaged(list(pairs))
+    sim.run()
+    assert not missing or not any(missing.values()), "repair did not drain"
+    return sim.now, sched.ledger
+
+
+def _cluster_pairs(placement, n_stripes: int, cluster: int):
+    """All (stripe, block) pairs a loss of `cluster` damages."""
+    members = placement.cluster_blocks(cluster)
+    return [(sid, b) for sid in range(n_stripes) for b in members]
+
+
+def sweep_rows(n_stripes: int) -> list[dict]:
+    params = MTTDLParams()
+    block_TB = 0.5
+    rows = []
+    for name, code in paper_schemes("30-of-42").items():
+        placement = default_placement(code)
+        topo0 = deploy_topology(placement, spare_nodes=1)
+        scenarios = {
+            # every block once, each in its own stripe: all single
+            # failures, so ledger cross/total == CARC/ARC exactly
+            "single-failures": [(b, b) for b in range(code.n)],
+            "cluster-loss": _cluster_pairs(placement, n_stripes, 0),
+        }
+        for scen, pairs in scenarios.items():
+            row = {"scheme": name, "placement": placement.name,
+                   "scenario": scen, "pairs": len(pairs)}
+            for o in OVERSUBS:
+                hours, led = _run_repair(
+                    placement, topo0.with_oversubscription(o), pairs,
+                    params, block_TB)
+                row[f"hours_{o:g}x"] = round(hours, 4)
+                if o == OVERSUBS[-1]:
+                    row["bottleneck"] = (led.bottlenecks.most_common(1)[0][0]
+                                         if led.bottlenecks else "idle")
+            row["cross_blocks"] = led.cross_blocks_read
+            row["inner_blocks"] = led.inner_blocks_read
+            total = led.cross_blocks_read + led.inner_blocks_read
+            row["cross_fraction"] = round(led.cross_blocks_read / total, 4)
+            row["oversub_slowdown"] = round(
+                row["hours_10x"] / row["hours_1x"], 3)
+            rows.append(row)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Part 2: gateway aggregation on the degraded-read data path
+# ---------------------------------------------------------------------------
+
+def _degraded_reads(code, placement, block: int, *, use_kernels: bool,
+                    aggregation: bool, n_stripes: int, block_size: int):
+    """S same-block degraded reads through the front-end; returns
+    (payloads, class stats, launches, plan remote-cluster count)."""
+    topo = deploy_topology(placement, spare_nodes=1)
+    store = BlockStore(topo)
+    codec = StripeCodec(code, store, block_size=block_size,
+                        placement=placement, use_kernels=use_kernels,
+                        gateway_aggregation=aggregation)
+    rng = np.random.default_rng(42)
+    payload = rng.integers(0, 256, code.k * block_size * n_stripes,
+                           dtype=np.uint8).tobytes()
+    metas = codec.write(payload)
+    for meta in metas:
+        store.drop_block(meta.stripe_id, block)
+    fe = RequestFrontend(codec)
+    rc = placement.assignment[block]
+    handles = [fe.submit_degraded_read(meta, block, reader_cluster=rc)
+               for meta in metas]
+    snap = kernel_ops.kernel_launch_snapshot()
+    fe.drain()
+    launches = kernel_ops.launches_since(snap)
+    outs = [h.result() for h in handles]
+    # remote clusters of the minimal plan (for the launch ceiling)
+    srcs = plans_for(code)[block].sources
+    remote = collections.Counter(placement.assignment[s] for s in srcs
+                                 if placement.assignment[s] != rc)
+    folding = sum(1 for c, cnt in remote.items() if cnt > 1)
+    return outs, fe.stats[Priority.DEGRADED_READ], launches, folding
+
+
+def aggregation_rows(n_stripes: int, block_size: int) -> list[dict]:
+    relaxed_code = make_unilrc(2, 4)
+    cases = [
+        ("UniLRC-relaxed-t2", relaxed_code,
+         place_unilrc_relaxed(relaxed_code, t=2)),
+        ("ULRC/ecwide", paper_schemes("30-of-42")["ULRC"], None),
+    ]
+    rows = []
+    for name, code, placement in cases:
+        placement = placement or default_placement(code)
+        # the block with the most foldable remote traffic: raw cross
+        # reads minus the one-per-remote-cluster aggregated ships (for
+        # ECWide split groups that is the split-off chunk's member,
+        # whose XOR plan reads the whole majority chunk cross-cluster)
+        plans = plans_for(code)
+        block = max(
+            range(code.n),
+            key=lambda b: (placement.cross_cluster_cost(b, plans[b].sources)
+                           - placement.cross_cluster_cost(
+                               b, plans[b].sources, aggregate=True)))
+        runs = {}
+        for use_kernels in (True, False):
+            for agg in (True, False):
+                runs[(use_kernels, agg)] = _degraded_reads(
+                    code, placement, block, use_kernels=use_kernels,
+                    aggregation=agg, n_stripes=n_stripes,
+                    block_size=block_size)
+        byte_identical = len({tuple(bytes(x) for x in outs)
+                              for outs, _, _, _ in runs.values()}) == 1
+        _, raw_stats, raw_launches, _ = runs[(True, False)]
+        _, agg_stats, agg_launches, folding = runs[(True, True)]
+        ceiling = 1 + folding          # one combine + one fold per cluster
+        rows.append({
+            "scheme": name, "reads": n_stripes, "block": block,
+            "byte_identical": byte_identical,
+            "raw_cross_bytes": raw_stats.cross_bytes,
+            "agg_cross_bytes": agg_stats.cross_bytes,
+            "aggregated_bytes": agg_stats.aggregated_bytes,
+            "cross_saving": round(raw_stats.cross_bytes
+                                  / max(agg_stats.cross_bytes, 1), 2),
+            "raw_launches": raw_launches,
+            "agg_launches": agg_launches,
+            "launch_ceiling": ceiling,
+        })
+    return rows
+
+
+def main():
+    tiny = os.environ.get("REPRO_BENCH_TINY") == "1"
+    n_stripes = 4 if tiny else 12
+    agg_stripes = 6 if tiny else 16
+    block_size = 512 if tiny else 4096
+
+    rows = sweep_rows(n_stripes)
+    print(fmt_table(
+        rows, ["scheme", "placement", "scenario", "pairs", "hours_1x",
+               "hours_3x", "hours_10x", "oversub_slowdown", "cross_blocks",
+               "inner_blocks", "cross_fraction", "bottleneck"],
+        title="repair under core-link oversubscription (30-of-42)"))
+
+    agg_rows = aggregation_rows(agg_stripes, block_size)
+    print()
+    print(fmt_table(
+        agg_rows, ["scheme", "reads", "block", "byte_identical",
+                   "raw_cross_bytes", "agg_cross_bytes", "cross_saving",
+                   "raw_launches", "agg_launches", "launch_ceiling"],
+        title="gateway XOR aggregation (degraded reads, both backends)"))
+
+    path = save_result("fig_topology_repair",
+                       {"rows": rows, "agg_rows": agg_rows,
+                        "tiny": tiny})
+    print(f"\nsaved {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,8 +21,8 @@ def main():
                          "benchmarks that support it shrink "
                          "(fig_sim_reliability trials, "
                          "fig_batched_recovery block bytes, "
-                         "fig_correlated_recovery and fig_mixed_workload "
-                         "stripes+block bytes); "
+                         "fig_correlated_recovery, fig_mixed_workload and "
+                         "fig_topology_repair stripes+block bytes); "
                          "artifacts are still written")
     ap.add_argument("--only", default="",
                     help="comma-separated benchmark names")
@@ -33,8 +33,8 @@ def main():
     from . import (fig3_xor_vs_mul, fig5_tradeoff, fig8_locality,
                    fig10_operations, fig11_bandwidth, fig12_workload,
                    fig_batched_recovery, fig_correlated_recovery,
-                   fig_mixed_workload, fig_sim_reliability, roofline,
-                   table4_mttdl)
+                   fig_mixed_workload, fig_sim_reliability,
+                   fig_topology_repair, roofline, table4_mttdl)
     suites = [
         ("fig5_tradeoff", fig5_tradeoff.main),
         ("fig8_locality", fig8_locality.main),
@@ -50,6 +50,7 @@ def main():
             ("fig_batched_recovery", fig_batched_recovery.main),
             ("fig_correlated_recovery", fig_correlated_recovery.main),
             ("fig_mixed_workload", fig_mixed_workload.main),
+            ("fig_topology_repair", fig_topology_repair.main),
         ]
     suites.append(("roofline", roofline.main))
 

@@ -1,4 +1,4 @@
-"""Cluster topology + block stores for the EC checkpoint layer.
+"""Block stores for the EC checkpoint layer.
 
 Mirrors the paper's prototype (§4.2): a coordinator holds metadata; proxies
 (one per cluster) hold blocks on nodes. Here a *cluster* is a TPU pod / ICI
@@ -11,7 +11,12 @@ island and a *node* is a host. Two stores:
 Both track per-node failure and per-node latency (straggler simulation) so
 degraded reads, reconstruction, and straggler-avoiding reads are exercised
 for real. Traffic accounting distinguishes inner- vs cross-cluster bytes —
-the quantity the paper's topology locality minimises.
+the quantity the paper's topology locality minimises — plus the
+aggregated tier: cross bytes that shipped as gateway-pre-folded blocks.
+
+The cluster/node model itself lives in `repro.topo.Topology` (this
+module's former private `ClusterTopology`, folded into the shared
+topology subsystem; the old name is kept as an alias).
 """
 from __future__ import annotations
 
@@ -20,38 +25,20 @@ import os
 import pathlib
 from typing import Optional
 
+from repro.topo import Topology
+
+ClusterTopology = Topology      # historical name, used by every call site
+
 
 class NodeFailure(Exception):
     """Raised when reading a block from a failed node."""
-
-
-@dataclasses.dataclass(frozen=True)
-class ClusterTopology:
-    """z clusters × nodes_per_cluster hosts.
-
-    node id = cluster * nodes_per_cluster + slot. A stripe's blocks are
-    mapped via a Placement (block -> cluster) plus round-robin slot
-    assignment within the cluster, offset by stripe id so parity load
-    spreads across nodes (the paper distributes block types uniformly).
-    """
-    num_clusters: int
-    nodes_per_cluster: int
-
-    @property
-    def num_nodes(self) -> int:
-        return self.num_clusters * self.nodes_per_cluster
-
-    def node_of(self, cluster: int, slot: int) -> int:
-        return cluster * self.nodes_per_cluster + slot % self.nodes_per_cluster
-
-    def cluster_of(self, node: int) -> int:
-        return node // self.nodes_per_cluster
 
 
 @dataclasses.dataclass
 class TrafficStats:
     inner_bytes: int = 0
     cross_bytes: int = 0
+    aggregated_bytes: int = 0   # subset of cross_bytes: pre-folded blocks
     reads: int = 0
 
     def add(self, nbytes: int, cross: bool):
@@ -66,6 +53,13 @@ class TrafficStats:
         self.reads += reads
         self.inner_bytes += inner_bytes
         self.cross_bytes += cross_bytes
+
+    def add_shipped(self, nbytes: int):
+        """A gateway-pre-folded block crossing into the reader's cluster:
+        cross-tier bytes that never touched the store's read path (the
+        fold output ships, not its inputs)."""
+        self.cross_bytes += nbytes
+        self.aggregated_bytes += nbytes
 
 
 class BlockStore:

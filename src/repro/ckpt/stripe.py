@@ -72,6 +72,7 @@ class RepairReport:
     plan_groups: int = 0  # batched groups executed (fast + pattern groups)
     patterns: int = 0     # distinct multi-erasure patterns decoded
     multi_pairs: int = 0  # pairs recovered via the pattern-decode path
+    aggregated_bytes: int = 0  # cross bytes shipped as gateway pre-folds
 
     @property
     def dropped(self) -> int:
@@ -131,7 +132,8 @@ class StripeCodec:
                  placement: Optional[Placement] = None,
                  use_kernels: bool = True,
                  backend: Optional[Backend] = None,
-                 max_batch_stripes: int = 64):
+                 max_batch_stripes: int = 64,
+                 gateway_aggregation: bool = False):
         self.code = code
         self.store = store
         self.block_size = block_size
@@ -139,7 +141,8 @@ class StripeCodec:
         self.backend = resolve_backend(backend, use_kernels=use_kernels)
         self.use_kernels = self.backend.uses_kernels
         self.engine = CodingEngine(code, store, self.backend,
-                                   max_batch_stripes=max_batch_stripes)
+                                   max_batch_stripes=max_batch_stripes,
+                                   gateway_aggregation=gateway_aggregation)
         self.max_batch_stripes = max_batch_stripes
         if self.placement.num_clusters > store.topo.num_clusters:
             raise ValueError(
@@ -456,6 +459,7 @@ class StripeCodec:
         launches0 = ops.kernel_launch_snapshot()
         t = self.store.traffic
         inner0, cross0 = t.inner_bytes, t.cross_bytes
+        agg0 = t.aggregated_bytes
         finish = self.plan_rebuild(pairs, reader_cluster=reader_cluster,
                                    exclude_node=exclude_node)
         self.engine.flush()
@@ -466,7 +470,8 @@ class StripeCodec:
             inner_bytes=t.inner_bytes - inner0,
             cross_bytes=t.cross_bytes - cross0,
             plan_groups=stats.plan_groups, patterns=stats.pattern_groups,
-            multi_pairs=stats.multi_pairs)
+            multi_pairs=stats.multi_pairs,
+            aggregated_bytes=t.aggregated_bytes - agg0)
 
     def reconstruct_node(self, node: int) -> int:
         """Rebuild every block the failed node held, re-placing each on a

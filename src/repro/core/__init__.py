@@ -8,9 +8,11 @@ from .metrics import (LocalityMetrics, effective_block_traffic,
                       locality_metrics, per_block_repair_traffic,
                       recovery_locality)
 from .mttdl import (MTTDLParams, code_mttdl_years, effective_recovery_traffic,
-                    failure_rate_per_hour, markov_rates, mttdl_years_stripe,
-                    repair_bandwidth_TB_per_hour, repair_rates,
-                    tolerable_failures)
+                    failure_rate_per_hour, markov_rates,
+                    mttdl_years_from_rates, mttdl_years_stripe,
+                    mttdl_years_topology, repair_bandwidth_TB_per_hour,
+                    repair_rates, tolerable_failures, topology_repair_hours,
+                    topology_repair_rates)
 from .placement import (Placement, default_placement, place_ecwide,
                         place_unilrc, place_unilrc_relaxed)
 
@@ -23,8 +25,9 @@ __all__ = [
     "effective_block_traffic", "locality_metrics",
     "per_block_repair_traffic", "recovery_locality", "MTTDLParams",
     "code_mttdl_years", "effective_recovery_traffic", "failure_rate_per_hour",
-    "markov_rates", "mttdl_years_stripe", "repair_bandwidth_TB_per_hour",
-    "repair_rates",
+    "markov_rates", "mttdl_years_from_rates", "mttdl_years_stripe",
+    "mttdl_years_topology", "repair_bandwidth_TB_per_hour",
+    "repair_rates", "topology_repair_hours", "topology_repair_rates",
     "tolerable_failures", "Placement", "default_placement", "place_ecwide",
     "place_unilrc", "place_unilrc_relaxed",
 ]

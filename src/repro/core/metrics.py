@@ -1,19 +1,41 @@
 """Locality metrics (paper Table 3): ADRC, CDRC, ARC, CARC, LBNR.
 
 cost(b_i)   = number of blocks read to reconstruct block i
-cost^c(b_i) = number of those blocks living in other clusters
+cost^c(b_i) = number of those blocks crossing a cluster gateway
 LBNR        = max_c(blocks of a normal read served by cluster c)
               / avg_c(blocks served)           (optimal = 1.0)
+
+Cross-cluster costs route through `repro.topo.NetworkModel`, which
+applies gateway XOR aggregation exactly when the plan admits it
+(`plan_is_xor_linear`): an XOR-only plan whose remote sources share a
+cluster ships ONE pre-folded block per remote cluster — the §3.3
+reading under which the relaxed "one group, t clusters" placement
+costs t−1 cross-cluster blocks per recovery. Cauchy-coefficient plans
+(e.g. global-parity repair) and multi-target decodes are charged per
+remote block, because a plain-XOR gateway cannot fold them.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
+
+from repro.topo import NetworkModel, Topology
 
 from .codec import plans_for
 from .codes import Code
 from .placement import Placement
+
+
+def _network_for(placement: Placement,
+                 network: Optional[NetworkModel]) -> NetworkModel:
+    """Counting-only NetworkModel on the placement's cluster count (link
+    speeds are irrelevant to block counts)."""
+    if network is not None:
+        return network
+    return NetworkModel.from_topology(
+        Topology(placement.num_clusters, 1))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -21,9 +43,9 @@ class LocalityMetrics:
     code: str
     placement: str
     ADRC: float   # avg degraded read cost (data blocks only)
-    CDRC: float   # cross-cluster ADRC
+    CDRC: float   # cross-cluster ADRC (gateway-aggregated where valid)
     ARC: float    # avg recovery cost (all blocks) == recovery locality r̄
-    CARC: float   # cross-cluster ARC
+    CARC: float   # cross-cluster ARC (gateway-aggregated where valid)
     LBNR: float   # load balance ratio of normal read
     xor_fraction: float  # fraction of single-block recoveries that are XOR-only
 
@@ -31,14 +53,14 @@ class LocalityMetrics:
         return dataclasses.asdict(self)
 
 
-def locality_metrics(code: Code, placement: Placement) -> LocalityMetrics:
+def locality_metrics(code: Code, placement: Placement, *,
+                     network: Optional[NetworkModel] = None
+                     ) -> LocalityMetrics:
     plans = plans_for(code)
-    k, n = code.k, code.n
-
-    costs = np.array([p.cost for p in plans], dtype=float)
-    cross = np.array(
-        [placement.cross_cluster_cost(p.target, p.sources) for p in plans],
-        dtype=float)
+    k = code.k
+    traffic = per_block_repair_traffic(code, placement, network=network)
+    costs = traffic[:, 0].astype(float)
+    cross = traffic[:, 1].astype(float)
 
     adrc = float(costs[:k].mean())
     cdrc = float(cross[:k].mean())
@@ -63,18 +85,24 @@ def recovery_locality(code: Code) -> float:
     return float(np.mean([p.cost for p in plans]))
 
 
-def per_block_repair_traffic(code: Code, placement: Placement) -> np.ndarray:
-    """(n, 2) int array: [total blocks read, cross-cluster blocks read] for
-    the minimal single-failure repair of each block under `placement`.
+def per_block_repair_traffic(code: Code, placement: Placement, *,
+                             network: Optional[NetworkModel] = None
+                             ) -> np.ndarray:
+    """(n, 2) int array: [total blocks read, cross-cluster block
+    transfers] for the minimal single-failure repair of each block under
+    `placement`, through the network model's aggregation-validity check.
 
     This is the per-block decomposition of ARC/CARC that the failure
     simulator's repair scheduler charges against its bandwidth budget;
     row-averaging column 0 gives ARC and column 1 gives CARC exactly."""
+    net = _network_for(placement, network)
     plans = plans_for(code)
     out = np.zeros((code.n, 2), dtype=np.int64)
     for i, p in enumerate(plans):
-        out[i, 0] = p.cost
-        out[i, 1] = placement.cross_cluster_cost(p.target, p.sources)
+        total, cross = net.recovery_blocks(placement.assignment, p.target,
+                                           p.sources, plan=p)
+        out[i, 0] = total
+        out[i, 1] = cross
     return out
 
 
@@ -82,7 +110,9 @@ def effective_block_traffic(code: Code, placement: Placement,
                             delta: float) -> np.ndarray:
     """(n,) float array: δ-weighted recovery traffic C_i = cross_i +
     δ·inner_i per block — the per-block analogue of
-    `mttdl.effective_recovery_traffic`, in block volumes."""
+    `mttdl.effective_recovery_traffic`, in block volumes. Inner here is
+    every read that stays behind a gateway, including the remote-side
+    reads behind a pre-fold."""
     t = per_block_repair_traffic(code, placement)
     cross = t[:, 1].astype(float)
     inner = (t[:, 0] - t[:, 1]).astype(float)

@@ -80,7 +80,15 @@ def mttdl_years_stripe(code_n: int, f: int, C_blocks: float,
     f=0 (an MDS code with d=1, or any code whose single surviving-state
     chain is degenerate) collapses to E = 1/(n·λ): the first failure is
     data loss and repairs never enter."""
-    lam_f, mu_f, mu_pf = markov_rates(C_blocks, p)
+    return mttdl_years_from_rates(code_n, f, *markov_rates(C_blocks, p))
+
+
+def mttdl_years_from_rates(code_n: int, f: int, lam_f: float, mu_f: float,
+                           mu_pf: float) -> float:
+    """The exact-absorption solve on explicit (λ, μ, μ') rates — the
+    shared back end of the aggregate-pipe chain (`mttdl_years_stripe`)
+    and the topology-aware chain (`mttdl_years_topology`), which differ
+    only in where μ comes from."""
     lam = Fraction(lam_f).limit_denominator(10**15)
     mu = Fraction(mu_f).limit_denominator(10**15)
     mu_p = Fraction(mu_pf).limit_denominator(10**15)
@@ -110,6 +118,55 @@ def mttdl_years_stripe(code_n: int, f: int, C_blocks: float,
     for j in range(f, -1, -1):
         E = a[j] + b[j] * E
     return float(E / HOURS_PER_YEAR)
+
+
+def topology_repair_hours(code: Code, placement, topo, p: MTTDLParams,
+                          *, block: int | None = None) -> float:
+    """Hours to repair one node's worth of data (S TB) through the
+    topology's per-link bottlenecks — the generalisation of 1/μ = C·S /
+    ε(N−1)B that the aggregate pipe cannot express.
+
+    The per-block link schedule (gateway aggregation included, via the
+    network model's validity check) is scaled to S TB and timed by the
+    slowest link: survivor-cluster uplinks, the oversubscribed core,
+    the home cluster's downlink, or node-NIC ingest. `block=None`
+    averages over all n blocks (a failed node holds a uniform mix under
+    the slot rotation); pass a block id for that block's repair alone."""
+    from repro.topo import NetworkModel
+
+    from .codec import plans_for
+    net = NetworkModel.from_repair_pipe(topo, repair_bandwidth_TB_per_hour(p),
+                                        p.delta)
+    plans = plans_for(code)
+    targets = range(code.n) if block is None else [block]
+    hours = []
+    for b in targets:
+        sched = net.recovery_schedule(placement.assignment, b,
+                                      plans[b].sources, plan=plans[b],
+                                      block_bytes=p.S_TB)
+        hours.append(net.transfer_time(sched))
+    return float(sum(hours) / len(hours))
+
+
+def topology_repair_rates(code: Code, placement, topo,
+                          p: MTTDLParams) -> tuple[float, float]:
+    """(μ, μ') with μ from the topology-aware bottleneck transfer time.
+    μ' stays detection-limited (1/T), as in the chain."""
+    return 1.0 / topology_repair_hours(code, placement, topo, p), \
+        1.0 / p.T_hours
+
+
+def mttdl_years_topology(code: Code, placement, topo,
+                         p: MTTDLParams = MTTDLParams()) -> float:
+    """End-to-end MTTDL with the repair rate derived from the topology's
+    link model instead of the aggregate ε(N−1)B pipe. With a
+    non-blocking core (oversubscription 1) and the default δ link
+    ratio this is at least as fast as the pipe (links run in
+    parallel); oversubscribing the core slows μ and drops MTTDL."""
+    f = tolerable_failures(code)
+    mu, mu_p = topology_repair_rates(code, placement, topo, p)
+    return mttdl_years_from_rates(code.n, f, failure_rate_per_hour(p),
+                                  mu, mu_p)
 
 
 def effective_recovery_traffic(m: LocalityMetrics, delta: float) -> float:

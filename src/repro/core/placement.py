@@ -14,6 +14,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.topo import cross_cluster_blocks
+
 from .codes import Code
 
 
@@ -49,15 +51,16 @@ class Placement:
                            aggregate: bool = False) -> int:
         """# source blocks living outside the failed block's cluster.
 
-        aggregate=True models intra-cluster XOR aggregation (each remote
-        cluster pre-folds its members at the gateway and ships ONE block)
-        — the reading under which the paper's §3.3 claim "only t−1 blocks
-        of cross-cluster traffic" holds for the relaxed placement. Only
-        valid for XOR-linear recovery plans."""
-        home = self.assignment[target]
-        remote = [self.assignment[s] for s in sources
-                  if self.assignment[s] != home]
-        return len(set(remote)) if aggregate else len(remote)
+        Thin shim over `repro.topo.cross_cluster_blocks` — the topology
+        subsystem owns cluster arithmetic now. aggregate=True models
+        gateway XOR aggregation (each remote cluster pre-folds its
+        members and ships ONE block) — the reading under which the
+        paper's §3.3 claim "only t−1 blocks of cross-cluster traffic"
+        holds for the relaxed placement. Only valid for XOR-linear
+        recovery plans; callers with a plan in hand should use
+        `NetworkModel.recovery_blocks`, which checks that validity."""
+        return cross_cluster_blocks(self.assignment, target, sources,
+                                    aggregate=aggregate)
 
     def tolerates_one_cluster_failure(self) -> bool:
         """Check every single-cluster wipe-out is decodable (used in tests)."""

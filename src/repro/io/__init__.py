@@ -1,6 +1,7 @@
-"""Request-level I/O layer: backend abstraction, coalescing op engine,
-priority-classed front-end. Sits between the kernels and the stripe
-planner: core → kernels → io → ckpt → launch."""
+"""Request-level I/O layer: backend abstraction, coalescing op engine
+(with gateway XOR pre-folds), priority-classed front-end with per-link-
+tier byte accounting. Sits between the kernels and the stripe planner:
+topo → core → kernels → io → ckpt → launch."""
 from .backend import Backend, KernelBackend, NumpyBackend, resolve_backend
 from .engine import CodingEngine, FlushStats, OpHandle
 from .frontend import (ClassStats, Priority, RequestFrontend, RequestHandle,

@@ -55,6 +55,13 @@ class Backend(abc.ABC):
         delta terms of a batch of partial updates (one column per update,
         one row per touched parity term)."""
 
+    @abc.abstractmethod
+    def xor_fold_many(self, stacked: np.ndarray) -> np.ndarray:
+        """(S, s, B) uint8 -> (S, B) XOR fold along axis 1 — the gateway
+        pre-fold primitive (each remote cluster folds its XOR-linear
+        contribution before it ships) and the final combine of folded
+        partials at the reader."""
+
 
 class KernelBackend(Backend):
     """JAX/Pallas execution: one kernel launch per batched call."""
@@ -79,6 +86,10 @@ class KernelBackend(Backend):
         from repro.kernels import ops
         return np.asarray(ops.apply_matrix(M, deltas))
 
+    def xor_fold_many(self, stacked):
+        from repro.kernels import ops
+        return np.asarray(ops.xor_fold_many(stacked))
+
 
 class NumpyBackend(Backend):
     """Host GF oracle: byte-identical to the kernels, zero launches."""
@@ -101,6 +112,12 @@ class NumpyBackend(Backend):
     def delta_terms(self, M, deltas):
         return gf_matmul(np.ascontiguousarray(M, dtype=np.uint8),
                          np.ascontiguousarray(deltas, dtype=np.uint8))
+
+    def xor_fold_many(self, stacked):
+        out = np.zeros((stacked.shape[0], stacked.shape[2]), dtype=np.uint8)
+        for i in range(stacked.shape[1]):
+            out ^= stacked[:, i]
+        return out
 
 
 def resolve_backend(backend: Backend | None = None, *,

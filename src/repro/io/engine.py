@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.core.codec import decode_plan_cached, plans_for
 from repro.core.codes import Code
+from repro.topo import plan_is_xor_linear
 
 from .backend import Backend
 
@@ -107,6 +108,8 @@ class FlushStats:
     multi_pairs: int = 0
     dropped_pairs: int = 0     # non-strict recovers beyond tolerance
     update_waves: int = 0
+    gateway_folds: int = 0     # remote-cluster pre-fold launches issued
+    aggregated_pairs: int = 0  # pairs served via >= one gateway pre-fold
 
     @property
     def plan_groups(self) -> int:
@@ -121,13 +124,21 @@ class CodingEngine:
     max_batch_stripes * n * block_size bytes)."""
 
     def __init__(self, code: Code, store, backend: Backend, *,
-                 max_batch_stripes: int = 64):
+                 max_batch_stripes: int = 64,
+                 gateway_aggregation: bool = False):
         if max_batch_stripes < 1:
             raise ValueError("max_batch_stripes must be >= 1")
         self.code = code
         self.store = store
         self.backend = backend
         self.max_batch_stripes = max_batch_stripes
+        # Gateway XOR aggregation (paper §3.3): when a recovery plan is
+        # XOR-linear and the reader cluster is known, each remote cluster
+        # pre-folds its source blocks at its gateway and ships ONE block.
+        # Off by default — it changes launch counts and cross-byte
+        # accounting, so callers opt in (the topology benchmark, the
+        # degraded-read serving path).
+        self.gateway_aggregation = gateway_aggregation
         self._pending: list[_Op] = []
 
     # -- submission ----------------------------------------------------------
@@ -224,6 +235,61 @@ class CodingEngine:
         return {s: np.stack([np.frombuffer(got[(sid, s)], np.uint8)
                              for sid in sids]) for s in sources}
 
+    def _should_aggregate(self, rc: Optional[int], plan) -> bool:
+        return (self.gateway_aggregation and rc is not None
+                and plan_is_xor_linear(plan))
+
+    def _source_clusters(self, sid: int, sources) -> tuple[int, ...]:
+        """Where each source block of `sid` physically lives right now —
+        rebuilt blocks may sit on fallback nodes, so ask the store, not
+        the placement."""
+        topo = self.store.topo
+        return tuple(topo.cluster_of(self.store.node_of(sid, s))
+                     for s in sources)
+
+    def _recover_xor_batch(self, sids: list[int], sources: tuple[int, ...],
+                           rc: Optional[int], stats: FlushStats
+                           ) -> np.ndarray:
+        """Gateway-aggregated execution of one XOR-linear plan over a
+        stripe batch: remote clusters holding >= 2 sources read them
+        locally (inner-tier bytes at THEIR gateway), fold them with one
+        `xor_fold_many` launch, and ship one pre-folded block per
+        stripe (cross-tier `aggregated_bytes`); the reader folds the
+        partials with its own local + singleton-remote sources. XOR
+        associativity makes the result byte-identical to the direct
+        fold of all sources, on either backend."""
+        groups: dict[tuple[int, ...], list[int]] = {}
+        for i, sid in enumerate(sids):
+            sig = self._source_clusters(sid, sources)
+            groups.setdefault(sig, []).append(i)
+        results: list[Optional[np.ndarray]] = [None] * len(sids)
+        for sig, poss in sorted(groups.items()):
+            gsids = [sids[i] for i in poss]
+            by_c: dict[int, list[int]] = {}
+            for s, c in zip(sources, sig):
+                by_c.setdefault(c, []).append(s)
+            direct = [s for c, ss in sorted(by_c.items())
+                      if c == rc or len(ss) == 1 for s in ss]
+            folds = {c: ss for c, ss in by_c.items()
+                     if c != rc and len(ss) > 1}
+            parts: list[np.ndarray] = []
+            if direct:
+                got = self._gather_sources(gsids, tuple(direct), rc)
+                parts += [got[s] for s in direct]
+            for c, ss in sorted(folds.items()):
+                got = self._gather_sources(gsids, tuple(ss), c)
+                partial = self.backend.xor_fold_many(
+                    np.stack([got[s] for s in ss], axis=1))
+                stats.gateway_folds += 1
+                self.store.traffic.add_shipped(int(partial.nbytes))
+                parts.append(partial)
+            rec = self.backend.xor_fold_many(np.stack(parts, axis=1))
+            if folds:
+                stats.aggregated_pairs += len(gsids)
+            for i, row in zip(poss, rec):
+                results[i] = row
+        return np.stack(results)
+
     def _run_recovers(self, ops_list: list[_Op], stats: FlushStats) -> None:
         by_rc: dict[Optional[int], list[_Op]] = {}
         for op in ops_list:
@@ -275,11 +341,17 @@ class CodingEngine:
         for b, sids in sorted(fast.items()):
             plan = plans[b]
             stats.fast_groups += 1
+            aggregate = self._should_aggregate(rc, plan)
             for i0 in range(0, len(sids), self.max_batch_stripes):
                 batch = sids[i0:i0 + self.max_batch_stripes]
                 try:
-                    stacked = self._gather_sources(batch, plan.sources, rc)
-                    rec = self.backend.recover_many(plan, stacked)
+                    if aggregate:
+                        rec = self._recover_xor_batch(batch, plan.sources,
+                                                      rc, stats)
+                    else:
+                        stacked = self._gather_sources(batch, plan.sources,
+                                                       rc)
+                        rec = self.backend.recover_many(plan, stacked)
                 except Exception as exc:
                     fail_pairs([(sid, b) for sid in batch], exc)
                     continue
@@ -302,7 +374,10 @@ class CodingEngine:
                 continue
             stats.pattern_groups += 1
             # Every member stripe's erased set is a subset of `pattern`,
-            # so the plan's sources are alive for the whole group.
+            # so the plan's sources are alive for the whole group. (No
+            # gateway pre-fold here: a pattern group always decodes >= 2
+            # erased blocks, which fails the single-target XOR-linearity
+            # check a plain-XOR gateway needs.)
             for i0 in range(0, len(entries), self.max_batch_stripes):
                 chunk = entries[i0:i0 + self.max_batch_stripes]
                 sids = [sid for sid, _ in chunk]

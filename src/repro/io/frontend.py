@@ -53,8 +53,9 @@ class ClassStats:
     failed_requests: int = 0
     blocks: int = 0              # blocks read/recovered/placed by the class
     launches: int = 0            # kernel launches attributed to the class
-    inner_bytes: int = 0
-    cross_bytes: int = 0
+    inner_bytes: int = 0         # link tier: bytes that stayed behind a gateway
+    cross_bytes: int = 0         # link tier: bytes that crossed a gateway
+    aggregated_bytes: int = 0    # of cross_bytes: shipped as pre-folded blocks
     flushes: int = 0
     total_latency_s: float = 0.0
     max_latency_s: float = 0.0
@@ -250,6 +251,7 @@ class RequestFrontend:
             snap = kernel_ops.kernel_launch_snapshot()
             traffic = self.codec.store.traffic
             inner0, cross0 = traffic.inner_bytes, traffic.cross_bytes
+            agg0 = traffic.aggregated_bytes
             finishes: list[tuple[_Request, Optional[Callable]]] = []
             for req in batch:
                 try:
@@ -276,6 +278,7 @@ class RequestFrontend:
             cls.launches += kernel_ops.launches_since(snap)
             cls.inner_bytes += traffic.inner_bytes - inner0
             cls.cross_bytes += traffic.cross_bytes - cross0
+            cls.aggregated_bytes += traffic.aggregated_bytes - agg0
         return served
 
     def drain(self) -> int:
@@ -301,6 +304,7 @@ class RequestFrontend:
         snap = kernel_ops.kernel_launch_snapshot()
         traffic = self.codec.store.traffic
         inner0, cross0 = traffic.inner_bytes, traffic.cross_bytes
+        agg0 = traffic.aggregated_bytes
         handle = self.submit_rebuild(pairs, reader_cluster=reader_cluster,
                                      exclude_node=exclude_node)
         self.drain()
@@ -311,4 +315,5 @@ class RequestFrontend:
             inner_bytes=traffic.inner_bytes - inner0,
             cross_bytes=traffic.cross_bytes - cross0,
             plan_groups=stats.plan_groups, patterns=stats.pattern_groups,
-            multi_pairs=stats.multi_pairs)
+            multi_pairs=stats.multi_pairs,
+            aggregated_bytes=traffic.aggregated_bytes - agg0)

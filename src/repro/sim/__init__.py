@@ -17,14 +17,19 @@ failures.py
     `sample_lifetimes`), and `FailureModel` bundling the node hazard
     with correlated cluster-loss arrivals.
 repair.py
-    `RepairScheduler`: a single ε(N-1)B repair pipe (same units as the
-    Markov μ — see `node_repair_hours`), damaged pairs grouped by
-    recovery plan (a single-failure job == one batched kernel launch;
-    multi-erasure jobs are pattern-grouped by the codec engine — one
-    launch per distinct live erasure pattern), multi-failure stripes
-    prioritised at μ' = 1/T. Data-path mode drives real bytes through
-    `StripeCodec.rebuild_blocks_report` and folds its kernel-launch,
-    plan-group, and multi-erasure deltas into the `RepairLedger`.
+    `RepairScheduler`: repair charged through `repro.topo.NetworkModel`
+    in the Markov chain's ε(N-1)B units. By default the chain's
+    serialized pipe (same numbers as μ — see `node_repair_hours`);
+    with an explicit `Topology` it schedules per link — survivor
+    uplinks, the oversubscribed core, downlink and NIC ingest — so
+    correlated cluster loss contends on surviving gateways. Damaged
+    pairs are grouped by recovery plan (a single-failure job == one
+    batched kernel launch; multi-erasure jobs are pattern-grouped by
+    the codec engine — one launch per distinct live erasure pattern),
+    multi-failure stripes prioritised at μ' = 1/T (topology mode:
+    max(T, transfer)). Data-path mode drives real bytes through the
+    request front-end and folds its kernel-launch, plan-group, and
+    multi-erasure deltas into the `RepairLedger`.
 montecarlo.py
     Drivers: `simulate_stripe_mttdl` (the §5 chain event-by-event, for
     cross-validation against `mttdl_years_stripe`) and `run_campaign`

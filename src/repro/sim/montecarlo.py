@@ -34,6 +34,7 @@ from repro.core.metrics import locality_metrics
 from repro.core.mttdl import (MTTDLParams, effective_recovery_traffic,
                               markov_rates, tolerable_failures)
 from repro.core.placement import Placement, default_placement
+from repro.topo import Topology
 
 from .events import Event, Simulator
 from .failures import (FailureModel, exponential_from_mttf_years,
@@ -151,6 +152,12 @@ class SimConfig:
     data_path: bool = False                    # drive real bytes via codec
     block_size: int = 1 << 12                  # data-path block bytes
     max_events_per_trial: int = 500_000
+    # Explicit link-tier topology: switches the repair scheduler from the
+    # Markov-calibrated aggregate pipe to per-link bottleneck charging
+    # (survivor uplinks + oversubscribed core). None keeps the chain's
+    # pipe semantics; num_clusters/nodes_per_cluster must match the
+    # placement's deployment when given.
+    topology: Optional[Topology] = None
 
     def resolved_placement(self) -> Placement:
         return self.placement or default_placement(self.code)
@@ -160,9 +167,20 @@ class SimConfig:
             node=exponential_from_mttf_years(self.params.node_mttf_years))
 
     def resolved_npc(self) -> int:
+        if self.topology is not None:
+            return self.topology.nodes_per_cluster
         if self.nodes_per_cluster:
             return self.nodes_per_cluster
         return max(self.resolved_placement().cluster_sizes()) + 1
+
+    def resolved_topology(self) -> Topology:
+        """The store/node topology of the trial (ALWAYS defined — link
+        fields default to the paper's testbed when no explicit topology
+        is configured)."""
+        if self.topology is not None:
+            return self.topology
+        return Topology(self.resolved_placement().num_clusters,
+                        self.resolved_npc())
 
 
 @dataclasses.dataclass
@@ -241,13 +259,27 @@ class DssTrial:
         self._degraded_acc = 0.0
         self._last_t = 0.0
 
+        # An undersized explicit topology would silently wrap stripe
+        # blocks onto shared nodes (a single node failure becomes a
+        # multi-erasure) — the same invariant StripeCodec's constructor
+        # enforces for the data path.
+        need_npc = max(self.placement.cluster_sizes())
+        if cfg.topology is not None and (
+                cfg.topology.num_clusters < self.num_clusters
+                or cfg.topology.nodes_per_cluster < need_npc):
+            raise ValueError(
+                f"SimConfig.topology is {cfg.topology.num_clusters}x"
+                f"{cfg.topology.nodes_per_cluster} but the placement "
+                f"needs {self.num_clusters} clusters of >= {need_npc} "
+                f"nodes")
+        self.topology = cfg.resolved_topology()
+
         self.codec = None
         self.payload = b""
         if cfg.data_path:
-            from repro.ckpt.store import BlockStore, ClusterTopology
+            from repro.ckpt.store import BlockStore
             from repro.ckpt.stripe import StripeCodec
-            topo = ClusterTopology(self.num_clusters, self.npc)
-            self.store = BlockStore(topo)
+            self.store = BlockStore(self.topology)
             self.codec = StripeCodec(self.code, self.store,
                                      block_size=cfg.block_size,
                                      placement=self.placement)
@@ -271,7 +303,8 @@ class DssTrial:
             block_TB=block_TB,
             stripe_missing=lambda sid: self.missing.get(sid, frozenset()),
             on_repaired=self._on_repaired,
-            codec=self.codec)
+            codec=self.codec,
+            topology=cfg.topology)
 
         self._node_ev: dict[int, Event] = {}
         for node in range(self.num_nodes):

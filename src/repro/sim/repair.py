@@ -1,24 +1,35 @@
-"""Bandwidth-constrained repair scheduling, plan-grouped like the batched
-recovery engine.
+"""Bandwidth-constrained repair scheduling over the topology's links,
+plan-grouped like the batched recovery engine.
 
-The scheduler owns one aggregate repair "pipe" of ε(N-1)B bandwidth —
-`core.mttdl.repair_bandwidth_TB_per_hour`, the exact number behind the
-Markov chain's μ — and serializes damaged (stripe, block) pairs through
-it. Pairs are grouped by recovery plan (same block id => same minimal
+The scheduler charges each repair job against a `repro.topo.NetworkModel`
+built in the Markov chain's units (ε(N-1)B — the exact number behind
+μ — as the gateway tier, inner links 1/δ faster, the core carrying
+z·pipe/oversubscription). Two charging modes:
+
+  * default (no explicit `topology`): the §5 chain's serialized-pipe
+    reading (`NetworkModel.pipe_time`), so a whole-node repair takes
+    C·S/bw = 1/μ and multi-failure stripes finish in T (μ' = 1/T) —
+    the scheduler and the Markov model agree on units by construction
+    (tests/test_mttdl.py pins this).
+  * explicit `topology`: per-link bottleneck scheduling
+    (`NetworkModel.bottleneck`): survivor-cluster uplinks, the
+    oversubscribed core, the home cluster's downlink and node-NIC
+    ingest each gate the transfer, so a correlated cluster loss
+    contends on the surviving uplinks and repair time depends on the
+    core oversubscription factor — the regime the closed form cannot
+    express (benchmarks/fig_topology_repair.py). Multi-failure jobs
+    are charged max(T, transfer): detection-limited only until the
+    bytes themselves dominate.
+
+Pairs are grouped by recovery plan (same block id => same minimal
 plan, the fast-path invariant `StripeCodec.recover_blocks` batches on),
 so a single-failure job is exactly one batched kernel launch in
 data-path mode; a multi-failure job's pairs are further pattern-grouped
 by the codec engine — one launch per distinct live erasure pattern.
 
-Repair duration of a job is its δ-weighted traffic over the pipe:
-    hours = Σ_b C_b · block_TB / bw,   C_b = cross_b + δ·inner_b
-which makes a whole-node repair (blocks summing to S TB, common traffic
-C) take C·S/bw = 1/μ — the scheduler and the Markov model agree on
-units by construction (tests/test_mttdl.py pins this).
-
-Stripes with ≥ 2 missing blocks jump the queue and finish in T_hours
-(detection-limited), mirroring the chain's prioritised multi-failure
-repair rate μ' = 1/T.
+Cross-cluster byte accounting routes through the network model's
+aggregation-validity check: XOR-linear plans ship one pre-folded block
+per remote cluster, Cauchy/multi-target plans ship per block.
 
 In data-path mode the scheduler drives real bytes through the request
 front-end (`repro.io.RequestFrontend.rebuild`, BACKGROUND priority — so
@@ -29,6 +40,7 @@ traffic oracle: launches == plan groups actually repaired.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import AbstractSet, Callable, Optional
 
@@ -37,6 +49,7 @@ from repro.core.metrics import (effective_block_traffic,
                                 per_block_repair_traffic)
 from repro.core.mttdl import MTTDLParams, repair_bandwidth_TB_per_hour
 from repro.core.placement import Placement
+from repro.topo import LinkSchedule, NetworkModel, Topology
 
 from .events import Event, Simulator
 
@@ -62,6 +75,8 @@ class RepairLedger:
     data_bytes_read: int = 0       # data-path mode only
     plan_groups: int = 0           # batched groups (fast + pattern) executed
     multi_erasure_blocks: int = 0  # blocks healed via pattern decodes
+    bottlenecks: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)  # jobs by binding link kind
 
     @property
     def cross_traffic_fraction(self) -> float:
@@ -70,12 +85,14 @@ class RepairLedger:
 
 
 class RepairScheduler:
-    """Single-pipe, plan-grouped, multi-failure-prioritised repair.
+    """Per-link, plan-grouped, multi-failure-prioritised repair.
 
     Wiring: the owner (montecarlo.DssTrial) constructs the scheduler with
     callbacks, calls `damaged(pairs)` as failures land, and receives
     `on_repaired(pairs)` when a job completes. The scheduler registers
-    its own REPAIR_DONE handler on the simulator.
+    its own REPAIR_DONE handler on the simulator. Passing an explicit
+    `topology` switches from the Markov-calibrated pipe to per-link
+    bottleneck charging (see module docstring).
     """
 
     def __init__(self, sim: Simulator, placement: Placement,
@@ -84,6 +101,7 @@ class RepairScheduler:
                  stripe_missing: Callable[[int], AbstractSet[int]],
                  on_repaired: Callable[[list[tuple[int, int]]], None],
                  codec=None,
+                 topology: Optional[Topology] = None,
                  exclude_node_of: Optional[Callable[[int, int], int]] = None):
         self.sim = sim
         self.placement = placement
@@ -102,9 +120,22 @@ class RepairScheduler:
         self.exclude_node_of = exclude_node_of
         self.ledger = RepairLedger()
         code = placement.code
+        self._bw = repair_bandwidth_TB_per_hour(params)
+        self._use_links = topology is not None
+        if topology is None:
+            topology = Topology(placement.num_clusters,
+                                max(placement.cluster_sizes()))
+        self.topology = topology
+        self.net = NetworkModel.from_repair_pipe(topology, self._bw,
+                                                 params.delta)
         self._traffic = per_block_repair_traffic(code, placement)
         self._eff = effective_block_traffic(code, placement, params.delta)
-        self._bw = repair_bandwidth_TB_per_hour(params)
+        plans = plans_for(code)
+        # Per-block unit link schedule for the minimal plan (scaled by
+        # block_TB · #pairs at job time).
+        self._sched = [self.net.recovery_schedule(
+            placement.assignment, b, plans[b].sources, plan=plans[b])
+            for b in range(code.n)]
         self._pending: dict[tuple[int, int], None] = {}   # ordered set
         self._in_flight: Optional[Event] = None
         sim.on(REPAIR_DONE, self._handle_done)
@@ -136,13 +167,47 @@ class RepairScheduler:
         return [(sid, b) for (sid, b) in self._pending
                 if b == block and (0 if self._multi(sid) else 1) == prio]
 
-    def _job_hours(self, group: list[tuple[int, int]]) -> float:
-        if any(self._multi(sid) for sid, _ in group):
-            return self.params.T_hours          # prioritised, μ' = 1/T
-        traffic_TB = sum(self._eff[b] for _, b in group) * self.block_TB
-        # δ=0 with zero cross traffic would yield zero-duration jobs and a
-        # livelocked event loop when a job re-enqueues its dropped pairs.
-        return max(traffic_TB / self._bw, 1e-9)
+    def _pair_schedule(self, sid: int, b: int) -> LinkSchedule:
+        """Unit-volume link schedule for repairing (sid, b) under the
+        stripe's CURRENT erasure pattern (minimal plan when its sources
+        are intact, the real multi-erasure decode plan otherwise)."""
+        plan = plans_for(self.placement.code)[b]
+        others = set(self.stripe_missing(sid)) - {b}
+        if others.intersection(plan.sources):
+            try:
+                dplan = decode_plan_cached(self.placement.code,
+                                           tuple(others | {b}))
+                return self.net.recovery_schedule(
+                    self.placement.assignment, b, dplan.sources, plan=dplan)
+            except ValueError:          # beyond tolerance right now
+                pass
+        return self._sched[b]
+
+    def _job_cost(self, group: list[tuple[int, int]]) -> tuple[float, str]:
+        """(hours, binding link) for one job through the network model."""
+        multi = any(self._multi(sid) for sid, _ in group)
+        if not self._use_links:
+            if multi:
+                return self.params.T_hours, "detection"   # μ' = 1/T exactly
+            # The chain's units, bit for bit: C_b = cross_b + δ·inner_b
+            # from the SAME metrics the Markov μ is computed from (the
+            # link schedule's inner differs from the chain's C2 under
+            # aggregation — gateway-local fold reads vs ARC−CARC — so
+            # pipe mode must charge the metrics, not the schedule).
+            # δ=0 with zero cross traffic would yield zero-duration jobs
+            # and a livelocked event loop when a job re-enqueues its
+            # dropped pairs.
+            traffic_TB = sum(self._eff[b] for _, b in group) * self.block_TB
+            return max(traffic_TB / self._bw, 1e-9), "pipe"
+        merged = LinkSchedule()
+        for sid, b in group:
+            merged.add(self._pair_schedule(sid, b) if multi
+                       else self._sched[b], self.block_TB)
+        hours, label = self.net.bottleneck(merged)
+        label = label.split("[")[0]        # uplink[3] -> uplink
+        if multi and self.params.T_hours >= hours:
+            return self.params.T_hours, "detection"
+        return max(hours, 1e-9), label
 
     def _pair_traffic(self, sid: int, b: int) -> tuple[int, int]:
         """(total, cross) blocks read to repair (sid, b) given the stripe's
@@ -150,7 +215,8 @@ class RepairScheduler:
         the minimal plan. Otherwise the real multi-erasure decode plan —
         whose sources differ, e.g. a UniLRC double-failure inside one
         local group reads global parities from other clusters even under
-        the native placement."""
+        the native placement. Cross counts go through the network
+        model's aggregation-validity check either way."""
         plan = plans_for(self.placement.code)[b]
         others = set(self.stripe_missing(sid)) - {b}
         if not others.intersection(plan.sources):
@@ -160,8 +226,8 @@ class RepairScheduler:
                                        tuple(others | {b}))
         except ValueError:                       # beyond tolerance right now
             return (int(self._traffic[b, 0]), int(self._traffic[b, 1]))
-        cross = self.placement.cross_cluster_cost(b, dplan.sources)
-        return (len(dplan.sources), cross)
+        return self.net.recovery_blocks(self.placement.assignment, b,
+                                        dplan.sources, plan=dplan)
 
     def _kick(self) -> None:
         if self._in_flight is not None or not self._pending:
@@ -169,9 +235,10 @@ class RepairScheduler:
         group = self._next_group()
         for p in group:
             del self._pending[p]
-        hours = self._job_hours(group)
+        hours, bottleneck = self._job_cost(group)
         self._in_flight = self.sim.schedule(hours, REPAIR_DONE,
-                                            pairs=group, hours=hours)
+                                            pairs=group, hours=hours,
+                                            bottleneck=bottleneck)
 
     # -- completion ----------------------------------------------------------
     def _handle_done(self, sim: Simulator, ev: Event) -> None:
@@ -179,6 +246,7 @@ class RepairScheduler:
         self._in_flight = None
         self.ledger.jobs += 1
         self.ledger.busy_hours += ev.payload["hours"]
+        self.ledger.bottlenecks[ev.payload["bottleneck"]] += 1
         placed = group
         if self.codec is not None:
             exclude = (self.exclude_node_of(*group[0])

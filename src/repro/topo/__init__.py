@@ -1,0 +1,31 @@
+"""First-class cluster topology + network model.
+
+The paper's limitation-2 claim is that existing wide LRCs ignore cluster
+topology, and UniLRC's "one group, one cluster" placement wins exactly
+because cross-cluster links are the scarce resource. This package makes
+that resource explicit:
+
+  * `Topology` — z clusters × nodes-per-cluster hosts plus the link
+    tiers: intra-cluster node NICs, per-cluster gateway links, and a
+    shared core whose capacity is the aggregate gateway bandwidth
+    divided by an oversubscription factor. Subsumes the former private
+    `ckpt.store.ClusterTopology` (same round-robin slot mapping), so
+    store, sim, metrics, and benchmarks agree on one cluster/node model.
+  * `NetworkModel` — maps a recovery/decode plan + placement to a
+    per-link `LinkSchedule` and a bottleneck transfer time, including
+    gateway XOR aggregation: each remote cluster pre-folds its
+    XOR-linear contribution and ships ONE block. Aggregation validity is
+    checked (`plan_is_xor_linear`) — a Cauchy-coefficient plan or a
+    multi-target decode cannot be folded by a plain-XOR gateway.
+
+Layering: `topo` sits below `core` (it depends only on numpy and
+duck-types plan objects), so `core.placement`/`core.metrics`, the io
+engine, the ckpt store, and the failure simulator can all route their
+cluster arithmetic through it without cycles.
+"""
+from .network import (LinkSchedule, NetworkModel, cross_cluster_blocks,
+                      plan_is_xor_linear)
+from .topology import Topology
+
+__all__ = ["Topology", "NetworkModel", "LinkSchedule",
+           "cross_cluster_blocks", "plan_is_xor_linear"]

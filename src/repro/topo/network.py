@@ -1,0 +1,213 @@
+"""NetworkModel: plans + placements -> per-link transfer schedules.
+
+Two questions every consumer keeps re-answering, now answered once:
+
+  1. *How many blocks cross a gateway* for a recovery — including the
+     paper's §3.3 gateway-aggregation reading, where each remote
+     cluster pre-folds its XOR-linear contribution and ships ONE block
+     (so the relaxed "one group, t clusters" placement costs t−1 cross
+     blocks, not |remote sources|). Aggregation is validity-checked:
+     a plain-XOR gateway cannot fold Cauchy-coefficient plans or
+     multi-target decodes (`plan_is_xor_linear`).
+  2. *How long the transfer takes* given the link tiers — per-cluster
+     gateway uplinks/downlinks, the oversubscribed core, and intra-
+     cluster NICs — as a bottleneck (max-over-links) time, or as the
+     Markov-calibrated serialized pipe the §5 chain assumes
+     (`pipe_time` reproduces ε(N−1)B accounting exactly, so the
+     closed-form MTTDL and the simulator keep agreeing on units).
+
+Plans are duck-typed (`.sources` + `.coeffs`/`.xor_only` for a
+RecoveryPlan, `.erased` + `.M` for a DecodePlan) so this module sits
+*below* `repro.core` with no import cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from .topology import Topology
+
+
+def plan_is_xor_linear(plan) -> bool:
+    """True when a plain-XOR gateway can pre-fold the plan's remote
+    contribution: every GF coefficient is 1 and the plan produces a
+    single output block. RecoveryPlans expose `.xor_only`; DecodePlans
+    qualify only with one erased target and a 0/1 coefficient row
+    (a multi-target decode needs per-target GF rows at the gateway,
+    which the aggregation story does not assume)."""
+    coeffs = getattr(plan, "coeffs", None)
+    if coeffs is not None:                          # RecoveryPlan
+        return all(c == 1 for c in coeffs)
+    M = getattr(plan, "M", None)
+    if M is not None:                               # DecodePlan
+        return (len(plan.erased) == 1
+                and bool(np.all((np.asarray(M) == 0) | (np.asarray(M) == 1))))
+    return False
+
+
+def cross_cluster_blocks(assignment, target: int, sources, *,
+                         aggregate: bool = False) -> int:
+    """# block transfers crossing a gateway to repair `target`.
+
+    aggregate=False: every remote source block ships individually.
+    aggregate=True: each remote cluster ships ONE pre-folded block —
+    the caller is responsible for having checked `plan_is_xor_linear`.
+    """
+    home = assignment[target]
+    remote = [assignment[s] for s in sources if assignment[s] != home]
+    return len(set(remote)) if aggregate else len(remote)
+
+
+@dataclasses.dataclass
+class LinkSchedule:
+    """Per-link byte totals for one (or many merged) transfers.
+
+    All cross-cluster bytes appear exactly once in `uplink` (leaving
+    the source cluster's gateway), once on the core, and once in
+    `down` (entering the consumer's cluster); `inner` holds bytes that
+    never leave their cluster — both target-local reads and the
+    gateway-local reads behind a pre-fold."""
+    inner: dict[int, float] = dataclasses.field(default_factory=dict)
+    uplink: dict[int, float] = dataclasses.field(default_factory=dict)
+    down: dict[int, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def inner_bytes(self) -> float:
+        return sum(self.inner.values())
+
+    @property
+    def cross_bytes(self) -> float:
+        return sum(self.uplink.values())
+
+    def add(self, other: "LinkSchedule", scale: float = 1.0) -> None:
+        for mine, theirs in ((self.inner, other.inner),
+                             (self.uplink, other.uplink),
+                             (self.down, other.down)):
+            for c, b in theirs.items():
+                mine[c] = mine.get(c, 0.0) + b * scale
+
+    def scaled(self, factor: float) -> "LinkSchedule":
+        out = LinkSchedule()
+        out.add(self, factor)
+        return out
+
+
+class NetworkModel:
+    """Bandwidth-annotated view of a `Topology`.
+
+    Bandwidths are in *bytes (or TB, or blocks) per time unit* — any
+    consistent unit: the benchmarks build one in bytes/second from the
+    topology's Gb/s links, the failure simulator in TB/hour from the
+    Markov chain's ε(N−1)B pipe (`from_repair_pipe`)."""
+
+    def __init__(self, topo: Topology, *, cross_bw: float,
+                 inner_bw: float, core_bw: Optional[float] = None):
+        if cross_bw <= 0 or inner_bw <= 0:
+            raise ValueError("link bandwidths must be positive")
+        self.topo = topo
+        self.cross_bw = float(cross_bw)
+        self.inner_bw = float(inner_bw)
+        self.core_bw = float(core_bw) if core_bw is not None else (
+            topo.num_clusters * self.cross_bw / topo.oversubscription)
+
+    @classmethod
+    def from_topology(cls, topo: Topology) -> "NetworkModel":
+        """Bytes/second from the topology's per-tier Gb/s links."""
+        to_Bps = 1e9 / 8
+        return cls(topo, cross_bw=topo.cross_gbps * to_Bps,
+                   inner_bw=topo.inner_gbps * to_Bps,
+                   core_bw=topo.core_gbps * to_Bps)
+
+    @classmethod
+    def from_repair_pipe(cls, topo: Topology, pipe_bw: float,
+                         delta: float) -> "NetworkModel":
+        """Markov-chain units: the §5 aggregate repair pipe ε(N−1)B
+        becomes the gateway tier, inner links run 1/δ faster (δ is the
+        chain's cross/inner bandwidth ratio; δ=0 means inner reads are
+        free, matching C = C1 + δ·C2), and the core carries
+        z·pipe/oversubscription."""
+        inner = pipe_bw / delta if delta > 0 else math.inf
+        return cls(topo, cross_bw=pipe_bw, inner_bw=inner,
+                   core_bw=(topo.num_clusters * pipe_bw
+                            / topo.oversubscription))
+
+    # -- plan -> schedule ----------------------------------------------------
+    def recovery_schedule(self, assignment, target: int, sources, *,
+                          plan=None, block_bytes: float = 1.0
+                          ) -> LinkSchedule:
+        """Per-link bytes to rebuild `target` (consumed in its home
+        cluster) from `sources`. When `plan` is XOR-linear, each remote
+        cluster pre-folds its members at the gateway (their reads stay
+        intra-cluster) and ships ONE block."""
+        aggregate = plan is not None and plan_is_xor_linear(plan)
+        home = assignment[target]
+        sched = LinkSchedule()
+        by_cluster: dict[int, int] = {}
+        for s in sources:
+            c = assignment[s]
+            by_cluster[c] = by_cluster.get(c, 0) + 1
+        for c, count in by_cluster.items():
+            if c == home:
+                sched.inner[c] = sched.inner.get(c, 0.0) + count * block_bytes
+            elif aggregate and count > 1:
+                sched.inner[c] = sched.inner.get(c, 0.0) + count * block_bytes
+                sched.uplink[c] = sched.uplink.get(c, 0.0) + block_bytes
+                sched.down[home] = sched.down.get(home, 0.0) + block_bytes
+            else:
+                sched.uplink[c] = (sched.uplink.get(c, 0.0)
+                                   + count * block_bytes)
+                sched.down[home] = (sched.down.get(home, 0.0)
+                                    + count * block_bytes)
+        return sched
+
+    def recovery_blocks(self, assignment, target: int, sources, *,
+                        plan=None) -> tuple[int, int]:
+        """(total blocks read, cross-cluster block transfers) with the
+        aggregation-validity check applied — the per-block numbers
+        behind ARC/CARC and the repair ledger."""
+        aggregate = plan is not None and plan_is_xor_linear(plan)
+        sources = list(sources)
+        return (len(sources),
+                cross_cluster_blocks(assignment, target, sources,
+                                     aggregate=aggregate))
+
+    # -- schedule -> time ----------------------------------------------------
+    def pipe_time(self, sched: LinkSchedule) -> float:
+        """The §5 chain's serialized-pipe reading of a schedule: cross
+        bytes through the ε(N−1)B gateway tier plus inner bytes at 1/δ.
+        Note the chain's own C2 is ARC−CARC, which under gateway
+        aggregation differs from a schedule's inner bytes (fold inputs
+        read at a remote gateway count as inner here) — charging the
+        exact Markov units is the caller's job via the metrics
+        (`sim.RepairScheduler` does exactly that in pipe mode)."""
+        return (sched.cross_bytes / self.cross_bw
+                + sched.inner_bytes / self.inner_bw)
+
+    def bottleneck(self, sched: LinkSchedule) -> tuple[float, str]:
+        """(transfer time, binding link) under the per-link model: every
+        tier moves in parallel and the slowest link gates the transfer.
+        Terms: per-cluster intra reads + shipped-block ingest on node
+        NICs, per-cluster gateway uplinks/downlinks, and the shared
+        (oversubscribed) core."""
+        best, label = 0.0, "idle"
+        for c in set(sched.inner) | set(sched.down):
+            t = (sched.inner.get(c, 0.0)
+                 + sched.down.get(c, 0.0)) / self.inner_bw
+            if t > best:
+                best, label = t, f"ingest[{c}]"
+        for c, b in sched.uplink.items():
+            if b / self.cross_bw > best:
+                best, label = b / self.cross_bw, f"uplink[{c}]"
+        for c, b in sched.down.items():
+            if b / self.cross_bw > best:
+                best, label = b / self.cross_bw, f"downlink[{c}]"
+        core = sched.cross_bytes / self.core_bw
+        if core > best:
+            best, label = core, "core"
+        return best, label
+
+    def transfer_time(self, sched: LinkSchedule) -> float:
+        return self.bottleneck(sched)[0]

@@ -1,0 +1,97 @@
+"""Placement invariants across the paper's scheme grid (ISSUE 5
+satellite): every placement strategy must keep one whole-cluster loss
+decodable, and UniLRC's native placement must keep every single-failure
+recovery cluster-local.
+
+The deterministic grid below runs everywhere; the hypothesis section
+(skipped when hypothesis is absent, like the other property modules)
+fuzzes the (α, z, t) construction space beyond the paper's Table 2
+points.
+"""
+import pytest
+
+from repro.core.codec import plans_for
+from repro.core.codes import ALL_SCHEMES, make_unilrc, paper_schemes
+from repro.core.placement import (place_ecwide, place_unilrc,
+                                  place_unilrc_relaxed)
+
+# Parts of a relaxed group must be non-empty and fit a real deployment:
+# t at most the group size (α(z−1)+α+1 wide, so 2 and 3 always fit).
+RELAXED_T = (2, 3)
+
+
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+def test_ecwide_placement_tolerates_one_cluster_failure(scheme):
+    """ECWide's defining rule (combined locality): each cluster of every
+    baseline placement holds a decodable erasure pattern."""
+    for name, code in paper_schemes(scheme).items():
+        if code.meta.get("family") == "unilrc":
+            continue
+        pl = place_ecwide(code)
+        assert pl.tolerates_one_cluster_failure(), (scheme, name)
+
+
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+@pytest.mark.parametrize("t", RELAXED_T)
+def test_relaxed_unilrc_tolerates_one_cluster_failure(scheme, t):
+    """§3.3: splitting each group over t clusters keeps any one cluster
+    loss within the code's tolerance (a part is at most ⌈(r+1)/t⌉ ≤ f
+    blocks)."""
+    code = next(c for c in paper_schemes(scheme).values()
+                if c.meta.get("family") == "unilrc")
+    pl = place_unilrc_relaxed(code, t=t)
+    assert pl.num_clusters == t * code.meta["z"]
+    assert pl.tolerates_one_cluster_failure()
+
+
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+def test_unilrc_native_zero_cross_for_every_single_failure(scheme):
+    """Property 2 over the whole grid: under "one group, one cluster"
+    no single-failure plan reads outside the failed block's cluster."""
+    code = next(c for c in paper_schemes(scheme).values()
+                if c.meta.get("family") == "unilrc")
+    pl = place_unilrc(code)
+    assert pl.tolerates_one_cluster_failure()
+    for b, plan in enumerate(plans_for(code)):
+        assert pl.cross_cluster_cost(b, plan.sources) == 0, b
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fuzzing beyond the Table 2 grid
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                        # deterministic grid still runs
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(alpha=st.integers(1, 3), z=st.integers(2, 6))
+    def test_unilrc_native_invariants_fuzz(alpha, z):
+        code = make_unilrc(alpha, z)
+        pl = place_unilrc(code)
+        assert pl.tolerates_one_cluster_failure()
+        for b, plan in enumerate(plans_for(code)):
+            assert pl.cross_cluster_cost(b, plan.sources) == 0
+
+    @settings(max_examples=12, deadline=None)
+    @given(alpha=st.integers(1, 3), z=st.integers(2, 6),
+           t=st.integers(2, 4))
+    def test_unilrc_relaxed_invariants_fuzz(alpha, z, t):
+        code = make_unilrc(alpha, z)
+        group = len(code.groups[0])
+        hypothesis.assume(t <= group)      # every part non-empty
+        pl = place_unilrc_relaxed(code, t=t)
+        assert pl.tolerates_one_cluster_failure()
+        # aggregated cross traffic is exactly t-1 for every XOR plan
+        for b, plan in enumerate(plans_for(code)):
+            assert plan.xor_only
+            assert pl.cross_cluster_cost(b, plan.sources,
+                                         aggregate=True) == t - 1
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_unilrc_placement_invariants_fuzz():
+        pass

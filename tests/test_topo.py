@@ -1,0 +1,381 @@
+"""The topology/network subsystem (src/repro/topo/) and its consumers.
+
+Headline assertions (ISSUE 5):
+  * gateway aggregation gives the §3.3 reading — the relaxed
+    "one group, t clusters" placement costs exactly t−1 cross-cluster
+    blocks per recovery (regression: metrics used to charge every
+    remote block even for XOR-linear plans);
+  * aggregation validity — Cauchy-coefficient plans and multi-target
+    decodes are never aggregated;
+  * the repair scheduler, given an explicit Topology, charges per-link
+    bottlenecks: correlated cluster loss repairs slower at 10x core
+    oversubscription than at 1x, while UniLRC's zero-cross single
+    failures are oversubscription-blind;
+  * degraded reads through the engine's gateway pre-fold ship one
+    block per remote cluster, byte-identical to the unaggregated
+    decode on both backends.
+"""
+import numpy as np
+import pytest
+
+from repro.ckpt import BlockStore, ClusterTopology
+from repro.ckpt.stripe import StripeCodec
+from repro.core import MTTDLParams, make_alrc, make_unilrc
+from repro.core.codec import decode_plan_cached, plans_for
+from repro.core.metrics import locality_metrics, per_block_repair_traffic
+from repro.core.mttdl import (mttdl_years_topology,
+                              repair_bandwidth_TB_per_hour,
+                              topology_repair_hours)
+from repro.core.placement import (default_placement, place_unilrc,
+                                  place_unilrc_relaxed)
+from repro.io import Priority, RequestFrontend
+from repro.sim import RepairScheduler, Simulator
+from repro.topo import (LinkSchedule, NetworkModel, Topology,
+                        cross_cluster_blocks, plan_is_xor_linear)
+
+P = MTTDLParams()
+
+
+# ---------------------------------------------------------------------------
+# Topology: the one cluster/node model
+# ---------------------------------------------------------------------------
+
+def test_topology_subsumes_cluster_topology():
+    """The ckpt store's ClusterTopology is the shared Topology now —
+    same constructor, same round-robin slot arithmetic."""
+    assert ClusterTopology is Topology
+    t = Topology(4, 8)
+    assert t.num_nodes == 32
+    assert t.node_of(2, 3) == 19
+    assert t.node_of(2, 11) == 19          # slot wraparound preserved
+    assert t.cluster_of(19) == 2
+    assert t.core_gbps == pytest.approx(4 * t.cross_gbps)
+
+
+def test_topology_validation_and_oversubscription():
+    with pytest.raises(ValueError):
+        Topology(0, 4)
+    with pytest.raises(ValueError):
+        Topology(4, 4, oversubscription=0.5)
+    t = Topology(6, 8).with_oversubscription(10.0)
+    assert t.core_gbps == pytest.approx(6 * t.cross_gbps / 10.0)
+    assert t.num_nodes == 48               # everything else unchanged
+
+
+# ---------------------------------------------------------------------------
+# Aggregation validity
+# ---------------------------------------------------------------------------
+
+def test_xor_linear_plan_detection():
+    uni = make_unilrc(1, 4)
+    assert all(plan_is_xor_linear(p) for p in plans_for(uni))
+    alrc = make_alrc(k=4, l=2, g=2)
+    # global parity plan has Cauchy coefficients -> not foldable
+    glob = plans_for(alrc)[alrc.k]
+    assert not glob.xor_only and not plan_is_xor_linear(glob)
+    # multi-target decode plans are never foldable, even 0/1 ones
+    g0 = uni.groups[0]
+    dplan = decode_plan_cached(uni, (g0[0], g0[1]))
+    assert len(dplan.erased) == 2 and not plan_is_xor_linear(dplan)
+
+
+def test_cross_cluster_blocks_counts():
+    assignment = [0, 0, 1, 1, 2]
+    assert cross_cluster_blocks(assignment, 0, [1, 2, 3, 4]) == 3
+    assert cross_cluster_blocks(assignment, 0, [1, 2, 3, 4],
+                                aggregate=True) == 2
+
+
+def test_relaxed_placement_costs_t_minus_1_cross_blocks():
+    """Regression (§3.3): metrics used to charge every remote block for
+    the relaxed placement; through the network model's aggregation an
+    XOR-linear recovery ships exactly t−1 pre-folded blocks."""
+    code = make_unilrc(2, 4)
+    for t in (2, 3):
+        pl = place_unilrc_relaxed(code, t=t)
+        traffic = per_block_repair_traffic(code, pl)
+        assert (traffic[:, 1] == t - 1).all(), t
+        m = locality_metrics(code, pl)
+        assert m.CARC == pytest.approx(t - 1)
+        assert m.CDRC == pytest.approx(t - 1)
+        # recovery volume itself is unchanged by aggregation
+        assert m.ARC == locality_metrics(code, place_unilrc(code)).ARC
+
+
+def test_gf_plans_are_never_aggregated():
+    """ALRC global parities repair via Cauchy coefficients — the network
+    model must charge every remote block, not one per cluster."""
+    code = make_alrc(k=30, l=6, g=6)
+    pl = default_placement(code)
+    traffic = per_block_repair_traffic(code, pl)
+    for b in range(code.k, code.k + code.meta["g"]):
+        plan = plans_for(code)[b]
+        raw = pl.cross_cluster_cost(b, plan.sources)
+        agg = pl.cross_cluster_cost(b, plan.sources, aggregate=True)
+        assert raw > agg          # aggregation WOULD save...
+        assert traffic[b, 1] == raw   # ...but is invalid for GF plans
+
+
+# ---------------------------------------------------------------------------
+# NetworkModel: schedules and times
+# ---------------------------------------------------------------------------
+
+def test_pipe_time_matches_markov_units():
+    """pipe_time reproduces (C1 + δ·C2)·vol / ε(N-1)B exactly."""
+    topo = Topology(4, 8)
+    bw = repair_bandwidth_TB_per_hour(P)
+    net = NetworkModel.from_repair_pipe(topo, bw, P.delta)
+    sched = LinkSchedule(inner={0: 3.0}, uplink={1: 2.0}, down={0: 2.0})
+    assert net.pipe_time(sched) == pytest.approx((2.0 + P.delta * 3.0) / bw)
+
+
+def test_pipe_time_delta_zero_inner_is_free():
+    net = NetworkModel.from_repair_pipe(Topology(4, 8), 1.0, 0.0)
+    sched = LinkSchedule(inner={0: 5.0})
+    assert net.pipe_time(sched) == 0.0
+
+
+def test_recovery_schedule_aggregates_remote_clusters():
+    code = make_unilrc(2, 4)
+    pl = place_unilrc_relaxed(code, t=2)
+    plan = plans_for(code)[0]
+    net = NetworkModel.from_topology(Topology(pl.num_clusters, 8))
+    sched = net.recovery_schedule(pl.assignment, 0, plan.sources,
+                                  plan=plan, block_bytes=1.0)
+    home = pl.assignment[0]
+    assert set(sched.uplink) != set() and home not in sched.uplink
+    assert all(b == 1.0 for b in sched.uplink.values())   # ONE block each
+    assert sched.down == {home: float(len(sched.uplink))}
+    # without the plan (validity unknown) every remote block ships
+    raw = net.recovery_schedule(pl.assignment, 0, plan.sources)
+    assert raw.cross_bytes > sched.cross_bytes
+
+
+def test_bottleneck_core_binds_only_when_oversubscribed():
+    topo = Topology(4, 8)
+    sched = LinkSchedule(inner={0: 1.0}, uplink={1: 4.0, 2: 1.0},
+                         down={0: 5.0})
+    net1 = NetworkModel.from_repair_pipe(topo, 1.0, 0.1)
+    t1, l1 = net1.bottleneck(sched)
+    assert l1 == "downlink[0]" and t1 == pytest.approx(5.0)
+    net10 = NetworkModel.from_repair_pipe(
+        topo.with_oversubscription(10.0), 1.0, 0.1)
+    t10, l10 = net10.bottleneck(sched)
+    assert l10 == "core" and t10 == pytest.approx(5.0 * 10 / 4)
+    # zero-cross transfers are oversubscription-blind
+    local = LinkSchedule(inner={0: 3.0})
+    assert net1.transfer_time(local) == net10.transfer_time(local)
+
+
+def test_topology_mttdl_degrades_with_oversubscription():
+    code = make_alrc(k=8, l=2, g=2)
+    pl = default_placement(code)
+    topo = Topology(pl.num_clusters, 8)
+    h1 = topology_repair_hours(code, pl, topo, P)
+    h10 = topology_repair_hours(
+        code, pl, topo.with_oversubscription(10 * pl.num_clusters), P)
+    assert h10 > h1
+    assert mttdl_years_topology(code, pl, topo, P) > mttdl_years_topology(
+        code, pl, topo.with_oversubscription(10 * pl.num_clusters), P)
+    # UniLRC native: zero cross -> MTTDL blind to the core entirely
+    uni = make_unilrc(1, 4)
+    upl = default_placement(uni)
+    ut = Topology(4, 8)
+    assert mttdl_years_topology(uni, upl, ut, P) == pytest.approx(
+        mttdl_years_topology(uni, upl, ut.with_oversubscription(40.0), P))
+
+
+# ---------------------------------------------------------------------------
+# Repair scheduler: per-link charging with an explicit Topology
+# ---------------------------------------------------------------------------
+
+def _repair_hours(code, placement, topo, pairs, block_TB=0.5):
+    sim = Simulator()
+    missing = {}
+    for sid, b in pairs:
+        missing.setdefault(sid, set()).add(b)
+
+    def on_repaired(done):
+        for sid, b in done:
+            missing.get(sid, set()).discard(b)
+
+    sched = RepairScheduler(
+        sim, placement, P, block_TB=block_TB,
+        stripe_missing=lambda sid: missing.get(sid, frozenset()),
+        on_repaired=on_repaired, topology=topo)
+    sched.damaged(list(pairs))
+    sim.run()
+    assert not any(missing.values())
+    return sim.now, sched.ledger
+
+
+def test_scheduler_cluster_loss_contends_on_links():
+    """Correlated loss of a whole cluster: repair time depends on the
+    core oversubscription factor — the per-link model the old aggregate
+    pipe could not express."""
+    code = make_unilrc(1, 4)
+    pl = default_placement(code)
+    topo = Topology(pl.num_clusters, 8)
+    pairs = [(sid, b) for sid in range(3) for b in pl.cluster_blocks(0)]
+    h1, led1 = _repair_hours(code, pl, topo, pairs)
+    h10, led10 = _repair_hours(
+        code, pl, topo.with_oversubscription(10.0), pairs)
+    assert h10 > h1
+    assert led10.bottlenecks["core"] > 0
+    assert led1.cross_blocks_read == led10.cross_blocks_read > 0
+
+
+def test_scheduler_unilrc_single_failures_oversubscription_blind():
+    code = make_unilrc(1, 4)
+    pl = default_placement(code)
+    topo = Topology(pl.num_clusters, 8)
+    pairs = [(b, b) for b in range(code.n)]     # one failure per stripe
+    h1, led1 = _repair_hours(code, pl, topo, pairs)
+    h10, led10 = _repair_hours(
+        code, pl, topo.with_oversubscription(10.0), pairs)
+    assert h1 == pytest.approx(h10)
+    assert led1.cross_blocks_read == led10.cross_blocks_read == 0
+
+
+def test_scheduler_pipe_mode_charges_markov_units_under_aggregation():
+    """Regression: pipe-mode job hours must equal C·vol/bw with the
+    chain's C = CARC + δ·(ARC−CARC) even for placements with foldable
+    plans (the link schedule's inner bytes — gateway-local fold reads —
+    differ from the chain's C2)."""
+    from repro.core.metrics import effective_block_traffic
+    code = make_unilrc(2, 4)
+    pl = place_unilrc_relaxed(code, t=2)
+    sim = Simulator()
+    sched = RepairScheduler(
+        sim, pl, P, block_TB=0.25,
+        stripe_missing=lambda sid: frozenset({-1}),
+        on_repaired=lambda pairs: None)
+    sched.damaged([(0, 0)])
+    sim.run()
+    eff = effective_block_traffic(code, pl, P.delta)[0]
+    assert sim.now == pytest.approx(
+        eff * 0.25 / repair_bandwidth_TB_per_hour(P))
+
+
+def test_simconfig_rejects_undersized_topology():
+    """An explicit topology with fewer nodes per cluster than the
+    fullest cluster's block count would co-locate stripe blocks on one
+    node — reject instead of silently simulating a more fragile model."""
+    import jax
+
+    from repro.sim import SimConfig, sample_lifetimes
+    from repro.sim.failures import exponential_from_mttf_years
+    from repro.sim.montecarlo import DssTrial
+    code = make_unilrc(2, 4)
+    cfg = SimConfig(code=code, topology=Topology(4, 2))
+    init = sample_lifetimes(exponential_from_mttf_years(4.0),
+                            jax.random.PRNGKey(0), (1, 8))
+    with pytest.raises(ValueError, match="needs 4 clusters"):
+        DssTrial(cfg, 0, init[0])
+
+
+def test_scheduler_default_stays_markov_calibrated():
+    """Without an explicit topology the scheduler still charges the
+    chain's serialized pipe (unit agreement pinned in test_sim /
+    test_mttdl) — bottleneck accounting says 'pipe'."""
+    code = make_unilrc(1, 4)
+    pl = default_placement(code)
+    sim = Simulator()
+    sched = RepairScheduler(
+        sim, pl, P, block_TB=0.25,
+        stripe_missing=lambda sid: frozenset({-1}),
+        on_repaired=lambda pairs: None)
+    sched.damaged([(0, 3)])
+    sim.run()
+    assert sched.ledger.bottlenecks == {"pipe": 1}
+
+
+# ---------------------------------------------------------------------------
+# Gateway pre-fold on the degraded-read data path
+# ---------------------------------------------------------------------------
+
+def _degraded_setup(use_kernels, aggregation, *, t=2, S=4, bs=256):
+    code = make_unilrc(2, 4)
+    pl = place_unilrc_relaxed(code, t=t)
+    npc = max(len(pl.cluster_blocks(c)) for c in range(pl.num_clusters)) + 1
+    store = BlockStore(Topology(pl.num_clusters, npc))
+    codec = StripeCodec(code, store, block_size=bs, placement=pl,
+                        use_kernels=use_kernels,
+                        gateway_aggregation=aggregation)
+    rng = np.random.default_rng(11)
+    payload = rng.integers(0, 256, code.k * bs * S, np.uint8).tobytes()
+    metas = codec.write(payload)
+    block = 0
+    for meta in metas:
+        store.drop_block(meta.stripe_id, block)
+    return code, pl, store, codec, metas, block
+
+
+@pytest.mark.parametrize("use_kernels", [True, False],
+                         ids=["kernels", "numpy"])
+def test_gateway_prefold_byte_identical(use_kernels):
+    outs = {}
+    for agg in (False, True):
+        _, pl, store, codec, metas, block = _degraded_setup(
+            use_kernels, agg)
+        rc = pl.assignment[block]
+        outs[agg] = [codec.degraded_read(m, block, reader_cluster=rc)
+                     for m in metas]
+    assert outs[False] == outs[True]
+
+
+def test_gateway_prefold_ships_t_minus_1_blocks(kernel_counters):
+    """S coalesced degraded reads with aggregation: cross bytes drop to
+    (t−1)·block per read (each shipped as TrafficStats.aggregated_bytes),
+    gateway-local reads count as inner, and the launch count is one
+    pre-fold per remote cluster plus one combine."""
+    t, S, bs = 2, 4, 256
+    code, pl, store, codec, metas, block = _degraded_setup(
+        True, True, t=t, S=S, bs=bs)
+    fe = RequestFrontend(codec)
+    rc = pl.assignment[block]
+    handles = [fe.submit_degraded_read(m, block, reader_cluster=rc)
+               for m in metas]
+    before = sum(kernel_counters.values())
+    fe.drain()
+    launches = sum(kernel_counters.values()) - before
+    plan = plans_for(code)[block]
+    remote = {pl.assignment[s] for s in plan.sources
+              if pl.assignment[s] != rc}
+    assert launches == 1 + len(remote) == 1 + (t - 1)
+    cls = fe.stats[Priority.DEGRADED_READ]
+    assert cls.cross_bytes == (t - 1) * bs * S
+    assert cls.aggregated_bytes == cls.cross_bytes
+    assert store.traffic.aggregated_bytes == cls.cross_bytes
+    # gateway-local reads stayed behind their gateway: inner covers the
+    # full plan volume minus nothing (every source block was read once)
+    assert cls.inner_bytes == len(plan.sources) * bs * S
+    for h in handles:
+        assert len(h.result()) == bs
+
+
+def test_gateway_prefold_off_ships_every_remote_block():
+    t, S, bs = 2, 4, 256
+    code, pl, store, codec, metas, block = _degraded_setup(
+        True, False, t=t, S=S, bs=bs)
+    rc = pl.assignment[block]
+    for m in metas:
+        codec.degraded_read(m, block, reader_cluster=rc)
+    plan = plans_for(code)[block]
+    raw_remote = sum(1 for s in plan.sources if pl.assignment[s] != rc)
+    assert store.traffic.cross_bytes == raw_remote * bs * S
+    assert store.traffic.aggregated_bytes == 0
+
+
+def test_rebuild_report_counts_aggregated_bytes():
+    code, pl, store, codec, metas, block = _degraded_setup(True, True)
+    fe = RequestFrontend(codec)
+    pairs = [(m.stripe_id, block) for m in metas]
+    rc = pl.assignment[block]
+    report = fe.rebuild(pairs, reader_cluster=rc)
+    assert report.placed == len(pairs)
+    assert report.aggregated_bytes > 0
+    assert report.aggregated_bytes <= report.cross_bytes
+    # and the stripes read back clean
+    payload = codec.read_all(metas)
+    assert len(payload) == sum(m.nbytes for m in metas)
