@@ -228,6 +228,62 @@ def check_topology(baseline: dict, fresh: dict, *,
     return failures
 
 
+def check_analysis_cert(batch: dict, *, min_certs: int = 6) -> list[str]:
+    """Static-analysis gate over the symbolic verifier's certificate
+    batch (`python -m repro.analysis.verify --grid --out ...`): every
+    paper-grid (alpha, z, t) certificate must hold every claim, the
+    certification itself must have launched ZERO kernels, and the grid
+    must not silently shrink below `min_certs` entries (3 schemes x
+    2 placement widths)."""
+    failures: list[str] = []
+    certs = batch.get("certificates", [])
+    if len(certs) < min_certs:
+        failures.append(
+            f"certificate batch has {len(certs)} certificates, expected "
+            f">= {min_certs} — the paper grid shrank")
+    for cert in certs:
+        cid = f"{cert.get('code', '?')}[{cert.get('placement', '?')}]"
+        bad = [c for c in cert.get("claims", []) if not c.get("ok")]
+        for c in bad:
+            failures.append(
+                f"{cid}: claim {c.get('name')} failed "
+                f"[{c.get('method')}]: {c.get('detail')}")
+        if cert.get("kernel_launches", 0) != 0:
+            failures.append(
+                f"{cid}: certification launched "
+                f"{cert['kernel_launches']} kernels — the symbolic "
+                f"verifier must be launch-free")
+        print(f"{cid}: {len(cert.get('claims', []))} claims, "
+              f"{len(bad)} failed, "
+              f"{cert.get('kernel_launches', 0)} launches")
+    return failures
+
+
+def check_analysis_hazards(report: dict) -> list[str]:
+    """Static-analysis gate over the hazard analyzer's workload replay
+    (`python -m repro.analysis.hazards --out ...`): every representative
+    engine workload must analyze hazard-free, and at least one workload
+    must actually exercise update waves (else the coalescer's mutating
+    path went uncovered)."""
+    failures: list[str] = []
+    workloads = report.get("workloads", {})
+    if not workloads:
+        return ["hazard report has no workloads — the analyzer did not run"]
+    total_waves = 0
+    for name, rep in workloads.items():
+        total_waves += rep.get("waves", 0)
+        for v in rep.get("violations", []):
+            failures.append(
+                f"{name}: {v.get('kind')} hazard at {v.get('loc')} — "
+                f"{v.get('first')} vs {v.get('second')}")
+        print(f"{name}: {rep.get('ops', 0)} ops, {rep.get('waves', 0)} "
+              f"waves, {len(rep.get('violations', []))} violations")
+    if total_waves == 0:
+        failures.append("no workload produced an update wave — the "
+                        "mutating path went unanalyzed")
+    return failures
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", required=True, type=pathlib.Path,
@@ -253,6 +309,15 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--topo-min-oversub-slowdown", type=float, default=1.1,
                     help="cluster-loss repair at 10x core oversubscription "
                          "must be at least this much slower than at 1x")
+    ap.add_argument("--analysis-cert", type=pathlib.Path,
+                    help="certificate batch from "
+                         "`python -m repro.analysis.verify --grid`")
+    ap.add_argument("--analysis-hazards", type=pathlib.Path,
+                    help="workload hazard report from "
+                         "`python -m repro.analysis.hazards`")
+    ap.add_argument("--analysis-min-certs", type=int, default=6,
+                    help="minimum certificates expected in the batch "
+                         "(3 paper schemes x 2 placement widths)")
     ap.add_argument("--min-speedup", type=float, default=2.0,
                     help="absolute floor on batched speedup per row")
     ap.add_argument("--rel-floor", type=float, default=0.4,
@@ -285,6 +350,13 @@ def main(argv: list[str] | None = None) -> int:
             json.loads(args.topo_fresh.read_text()),
             min_cross_ratio=args.topo_min_cross_ratio,
             min_oversub_slowdown=args.topo_min_oversub_slowdown)
+    if args.analysis_cert is not None:
+        failures += check_analysis_cert(
+            json.loads(args.analysis_cert.read_text()),
+            min_certs=args.analysis_min_certs)
+    if args.analysis_hazards is not None:
+        failures += check_analysis_hazards(
+            json.loads(args.analysis_hazards.read_text()))
     if failures:
         for f in failures:
             print(f"REGRESSION: {f}", file=sys.stderr)

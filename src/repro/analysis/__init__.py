@@ -1,0 +1,32 @@
+"""Static analysis subsystem: prove the paper's invariants before bytes move.
+
+Three pillars, each a CI gate:
+
+  * `verify`  — symbolic verifier: certify a (Code, placement) pair over
+    GF(2^8) algebra alone (local MDS, optimal-LRC distance, XOR-linear
+    local parities, decode-plan inversion, topology invariant), emitting
+    machine-readable `certificate` objects. Zero kernel launches.
+  * `hazards` — static RAW/WAW/WAR analysis of a queued `CodingEngine`
+    flush: proves every coalesced update wave conflict-free and staged
+    (the PR-3 stale-parity ordering is rejected before execution).
+  * `lint`    — repo-invariant AST lint (`python -m repro.analysis.lint
+    src tests`): kernel calls bypassing `KERNEL_LAUNCHES` accounting,
+    float arithmetic on GF arrays, plan-payload mutation, host loops in
+    batched hot paths.
+
+This `__init__` stays import-light on purpose: the lint pillar is
+stdlib-only and must run (in CI and pre-commit) without jax installed,
+so submodules load lazily on attribute access.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+__all__ = ["certificate", "hazards", "lint", "verify"]
+
+
+def __getattr__(name: str) -> Any:
+    if name in __all__:
+        import importlib
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

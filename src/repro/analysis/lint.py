@@ -1,0 +1,280 @@
+"""Repo-invariant AST lint — the rules generic linters can't know.
+
+Four rules, each guarding an invariant this codebase's correctness
+story leans on:
+
+  RA001  raw kernel invocation outside `src/repro/kernels/` — calling
+         `pl.pallas_call` / `gf_bitmatmul(_batched)` /
+         `xor_reduce(_batched)` directly bypasses the KERNEL_LAUNCHES
+         accounting in `kernels/ops.py`, silently breaking every
+         launch-count acceptance test and the repair ledger's traffic
+         oracle.
+  RA002  float-dtype arithmetic on GF arrays in GF-critical modules —
+         GF(2^8) symbols are uint8 table indices; an `astype(float)` or
+         `dtype=float` produces numbers that LOOK plausible and decode
+         garbage. (The MXU bit-plane f32 trick lives inside `kernels/`
+         and is exempt by scope.)
+  RA003  mutation of frozen-plan numpy payloads — `plan.M[...] = v` or
+         `.setflags(write=True)` defeats the sealed read-only matrices
+         shared through the plan cache (a write would corrupt every
+         cached consumer at once).
+  RA004  single-item kernel ops inside host loops in the batched hot
+         paths (`io/engine.py`, `io/frontend.py`, `ckpt/stripe.py`) —
+         per-item `ops.encode`/`apply_matrix`/`xor_fold`/
+         `recover_single`/`apply_decode` in a `for` re-creates the
+         launch-per-stripe regime the batched engine exists to kill;
+         use the `*_many` variants.
+
+Waive a finding with a same-line comment: `# repro-lint: allow=RA001`
+(comma-separated rule ids) — used by the kernel oracle tests that call
+raw kernels *on purpose* to compare against ops-layer wrappers.
+
+Stdlib-only (ast + pathlib): runs without jax, numpy, or the repo on
+sys.path — CI's lint job invokes it before any heavyweight install:
+
+    python -m repro.analysis.lint src tests benchmarks
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import pathlib
+import re
+import sys
+from collections.abc import Iterable, Sequence
+
+RAW_KERNEL_NAMES = frozenset({
+    "pallas_call", "gf_bitmatmul", "gf_bitmatmul_batched",
+    "xor_reduce", "xor_reduce_batched",
+})
+SINGLE_ITEM_OPS = frozenset({
+    "encode", "apply_matrix", "xor_fold", "recover_single", "apply_decode",
+})
+KERNEL_PKG = "repro/kernels"
+GF_CRITICAL = (
+    "core/gf.py", "core/codec.py", "core/codes.py",
+    "io/backend.py", "io/engine.py", "ckpt/stripe.py",
+)
+HOT_PATHS = ("io/engine.py", "io/frontend.py", "ckpt/stripe.py")
+FLOAT_DTYPES = frozenset({"float", "float16", "float32", "float64",
+                          "double", "half"})
+_WAIVER_RE = re.compile(r"#\s*repro-lint:\s*allow=([A-Z0-9,\s]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} " \
+               f"{self.message}"
+
+
+def _norm(path: pathlib.Path) -> str:
+    return str(path).replace("\\", "/")
+
+
+def _is_float_dtype(node: ast.expr) -> bool:
+    """True for `float`, `np.float32`, `jnp.float64`, `"float32"`, ..."""
+    if isinstance(node, ast.Name):
+        return node.id in FLOAT_DTYPES
+    if isinstance(node, ast.Attribute):
+        return node.attr in FLOAT_DTYPES
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value in FLOAT_DTYPES
+    return False
+
+
+class _FileLinter(ast.NodeVisitor):
+    def __init__(self, path: str, *, gf_critical: bool, hot_path: bool,
+                 in_kernels: bool):
+        self.path = path
+        self.gf_critical = gf_critical
+        self.hot_path = hot_path
+        self.in_kernels = in_kernels
+        self.findings: list[Finding] = []
+        self.loop_depth = 0
+        # names imported from repro.kernels.* that alias a raw kernel or
+        # a single-item op — `from repro.kernels.ops import encode as e`
+        self.kernel_aliases: dict[str, str] = {}
+        self.ops_modules: set[str] = set()   # `from repro.kernels import ops`
+
+    # -- bookkeeping --------------------------------------------------------
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        mod = node.module or ""
+        if mod.startswith("repro.kernels"):
+            for alias in node.names:
+                if alias.name in RAW_KERNEL_NAMES | SINGLE_ITEM_OPS:
+                    self.kernel_aliases[alias.asname or alias.name] = \
+                        alias.name
+                if alias.name == "ops":
+                    self.ops_modules.add(alias.asname or "ops")
+        self.generic_visit(node)
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            if alias.name == "repro.kernels.ops":
+                self.ops_modules.add(alias.asname or "repro.kernels.ops")
+        self.generic_visit(node)
+
+    def _emit(self, node: ast.AST, rule: str, message: str) -> None:
+        self.findings.append(Finding(self.path, node.lineno,
+                                     node.col_offset, rule, message))
+
+    # -- loops (RA004 context) ----------------------------------------------
+    def visit_For(self, node: ast.For) -> None:
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    def visit_While(self, node: ast.While) -> None:
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    # -- calls (RA001, RA002, RA003, RA004) ----------------------------------
+    def _called_kernel(self, func: ast.expr) -> str | None:
+        """Resolve a call target to a raw-kernel/op name when it is one
+        we track: a bare imported alias, or `ops.encode`-style attribute
+        on an imported kernels.ops module. Method calls on arbitrary
+        objects (`self.backend.encode_many`, `code.encode`) resolve to
+        None — only statically-known kernel entry points count."""
+        if isinstance(func, ast.Name):
+            return self.kernel_aliases.get(func.id)
+        if isinstance(func, ast.Attribute):
+            base = func.value
+            if isinstance(base, ast.Name) and base.id in self.ops_modules:
+                return func.attr
+            if func.attr == "pallas_call":     # pl.pallas_call
+                return "pallas_call"
+        return None
+
+    def visit_Call(self, node: ast.Call) -> None:
+        target = self._called_kernel(node.func)
+        if target in RAW_KERNEL_NAMES and not self.in_kernels:
+            self._emit(node, "RA001",
+                       f"raw kernel call `{target}` bypasses "
+                       f"KERNEL_LAUNCHES accounting — go through "
+                       f"repro.kernels.ops wrappers")
+        if (self.hot_path and self.loop_depth > 0
+                and target in SINGLE_ITEM_OPS):
+            self._emit(node, "RA004",
+                       f"single-item kernel op `{target}` inside a host "
+                       f"loop on a batched hot path — use the `_many` "
+                       f"batched variant")
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr == "setflags"):
+            for kw in node.keywords:
+                if (kw.arg == "write" and isinstance(kw.value, ast.Constant)
+                        and kw.value.value is True):
+                    self._emit(node, "RA003",
+                               "re-enabling writes on a sealed plan "
+                               "matrix — cached plans are shared; copy "
+                               "instead")
+        if self.gf_critical:
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "astype"
+                    and node.args and _is_float_dtype(node.args[0])):
+                self._emit(node, "RA002",
+                           "float astype on a GF array — GF(2^8) symbols "
+                           "are uint8 table indices")
+            for kw in node.keywords:
+                if kw.arg == "dtype" and _is_float_dtype(kw.value):
+                    self._emit(node, "RA002",
+                               "float dtype in a GF-critical module — "
+                               "GF(2^8) symbols are uint8")
+        self.generic_visit(node)
+
+    # -- assignments (RA003) --------------------------------------------------
+    def _check_plan_mutation(self, target: ast.expr, node: ast.AST) -> None:
+        # `plan.M[...] = v` / `plan.M[...] ^= v`: subscript-assign into
+        # the numpy payload of a frozen plan dataclass.
+        if (isinstance(target, ast.Subscript)
+                and isinstance(target.value, ast.Attribute)
+                and target.value.attr == "M"):
+            self._emit(node, "RA003",
+                       "in-place write to a plan's `.M` payload — "
+                       "DecodePlan matrices are frozen and shared "
+                       "through the cache")
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for target in node.targets:
+            self._check_plan_mutation(target, node)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._check_plan_mutation(node.target, node)
+        self.generic_visit(node)
+
+
+def _waived_rules(source_lines: Sequence[str], line: int) -> set[str]:
+    """Waivers apply on the finding's own line or the line above (for
+    calls split across lines, the comment rides the opening line)."""
+    out: set[str] = set()
+    for ln in (line - 1, line):
+        if 1 <= ln <= len(source_lines):
+            m = _WAIVER_RE.search(source_lines[ln - 1])
+            if m:
+                out |= {r.strip() for r in m.group(1).split(",")
+                        if r.strip()}
+    return out
+
+
+def lint_source(source: str, path: str) -> list[Finding]:
+    """Lint one file's source text; `path` scopes the rules."""
+    norm = path.replace("\\", "/")
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as exc:
+        return [Finding(path, exc.lineno or 0, exc.offset or 0, "RA000",
+                        f"syntax error: {exc.msg}")]
+    linter = _FileLinter(
+        path,
+        gf_critical=any(norm.endswith(s) for s in GF_CRITICAL),
+        hot_path=any(norm.endswith(s) for s in HOT_PATHS),
+        in_kernels=f"{KERNEL_PKG}/" in norm)
+    linter.visit(tree)
+    lines = source.splitlines()
+    return [f for f in linter.findings
+            if f.rule not in _waived_rules(lines, f.line)]
+
+
+def lint_paths(paths: Iterable[pathlib.Path]) -> list[Finding]:
+    findings: list[Finding] = []
+    for root in paths:
+        files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        for f in files:
+            findings.extend(lint_source(f.read_text(), _norm(f)))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.col))
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Repo-invariant AST lint (stdlib-only).")
+    ap.add_argument("paths", nargs="+", type=pathlib.Path,
+                    help="files or directories to lint")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the all-clear summary line")
+    args = ap.parse_args(argv)
+    for p in args.paths:
+        if not p.exists():
+            print(f"error: no such path {p}", file=sys.stderr)
+            return 2
+    findings = lint_paths(args.paths)
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"{len(findings)} invariant violation(s)", file=sys.stderr)
+        return 1
+    if not args.quiet:
+        print("repro-lint: all invariants hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Optional
+from typing import Any
 
 from repro.core.codes import Code
 
@@ -51,7 +51,7 @@ class _Saved:
 
 
 class CheckpointManager:
-    def __init__(self, store: BlockStore, code: Optional[Code] = None, *,
+    def __init__(self, store: BlockStore, code: Code | None = None, *,
                  block_size: int = 1 << 18, use_kernels: bool = True):
         self.store = store
         self.code = code or choose_code(store.topo)
@@ -82,12 +82,12 @@ class CheckpointManager:
             raise KeyError(f"no checkpoint for step {step}")
         return list(self._saved[step].metas)
 
-    def latest_step(self) -> Optional[int]:
+    def latest_step(self) -> int | None:
         return max(self._saved) if self._saved else None
 
     # -- restore ---------------------------------------------------------------
-    def restore(self, step: Optional[int] = None,
-                reader_cluster: Optional[int] = None
+    def restore(self, step: int | None = None,
+                reader_cluster: int | None = None
                 ) -> tuple[Any, RestoreReport]:
         """Restore state; any unavailable block is degraded-read from its
         local group (zero cross-cluster traffic under UniLRC placement)."""

@@ -23,7 +23,6 @@ from __future__ import annotations
 import dataclasses
 import os
 import pathlib
-from typing import Optional
 
 from repro.topo import Topology
 
@@ -128,7 +127,7 @@ class BlockStore:
         return self._blocks[key]
 
     def get(self, stripe: int, block: int, *,
-            reader_cluster: Optional[int] = None) -> bytes:
+            reader_cluster: int | None = None) -> bytes:
         key = (stripe, block)
         node = self._block_node.get(key)
         if node is None:
@@ -141,7 +140,7 @@ class BlockStore:
         self.traffic.add(len(data), cross)
         return data
 
-    def get_many(self, pairs, *, reader_cluster: Optional[int] = None
+    def get_many(self, pairs, *, reader_cluster: int | None = None
                  ) -> dict[tuple[int, int], bytes]:
         """Batched read of many (stripe, block) pairs (deduplicated).
 

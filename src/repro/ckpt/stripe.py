@@ -36,7 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Optional
+from collections.abc import Callable
 
 import numpy as np
 
@@ -129,9 +129,9 @@ class StripeCodec:
 
     def __init__(self, code: Code, store: BlockStore, *,
                  block_size: int = 1 << 20,
-                 placement: Optional[Placement] = None,
+                 placement: Placement | None = None,
                  use_kernels: bool = True,
-                 backend: Optional[Backend] = None,
+                 backend: Backend | None = None,
                  max_batch_stripes: int = 64,
                  gateway_aggregation: bool = False):
         self.code = code
@@ -210,7 +210,7 @@ class StripeCodec:
 
     # -- read planners -------------------------------------------------------
     def _submit_stripe_read(self, sid: int, blocks: range | list[int],
-                            reader_cluster: Optional[int]
+                            reader_cluster: int | None
                             ) -> dict[int, OpHandle]:
         """Read ops for available blocks, recover ops for the rest."""
         return {
@@ -222,7 +222,7 @@ class StripeCodec:
             for b in blocks}
 
     def plan_normal_read(self, meta: StripeMeta, *,
-                         reader_cluster: Optional[int] = None
+                         reader_cluster: int | None = None
                          ) -> Callable[[], bytes]:
         """Two-phase normal_read: submit ops now, assemble at finish."""
         handles = self._submit_stripe_read(
@@ -235,14 +235,14 @@ class StripeCodec:
         return finish
 
     def plan_degraded_read(self, meta: StripeMeta, block: int, *,
-                           reader_cluster: Optional[int] = None
+                           reader_cluster: int | None = None
                            ) -> Callable[[], bytes]:
         handle = self.engine.submit_recover(meta.stripe_id, block,
                                             reader_cluster=reader_cluster)
         return handle.result
 
     def plan_recover_blocks(self, pairs: list[tuple[int, int]], *,
-                            reader_cluster: Optional[int] = None,
+                            reader_cluster: int | None = None,
                             strict: bool = True
                             ) -> Callable[[], tuple[dict, RecoveryStats]]:
         handles = {
@@ -262,7 +262,7 @@ class StripeCodec:
 
     # -- reads ---------------------------------------------------------------
     def normal_read(self, meta: StripeMeta, *,
-                    reader_cluster: Optional[int] = None) -> bytes:
+                    reader_cluster: int | None = None) -> bytes:
         """Read the k data blocks; unavailable ones are recovered in the
         same engine flush — one launch per erasure pattern / fast group,
         not one decode per missing block."""
@@ -271,7 +271,7 @@ class StripeCodec:
         return finish()
 
     def degraded_read(self, meta: StripeMeta, block: int, *,
-                      reader_cluster: Optional[int] = None) -> bytes:
+                      reader_cluster: int | None = None) -> bytes:
         """Recover one unavailable block from survivors via the engine.
 
         Fast path: the minimal single-failure plan (group-local, XOR-only
@@ -284,7 +284,7 @@ class StripeCodec:
         return finish()
 
     def straggler_read(self, meta: StripeMeta, group_idx: int, *,
-                       reader_cluster: Optional[int] = None
+                       reader_cluster: int | None = None
                        ) -> dict[int, bytes]:
         """Read a local group's data blocks, substituting the slowest
         *data* member (per simulated node latency) with a parity-decode —
@@ -323,7 +323,7 @@ class StripeCodec:
 
     # -- partial update (delta parity) ----------------------------------------
     def update_block(self, meta: StripeMeta, block: int, new_data: bytes,
-                     *, reader_cluster: Optional[int] = None) -> int:
+                     *, reader_cluster: int | None = None) -> int:
         """Overwrite one data block and patch every parity in place via the
         code's GF(2^8) linearity:  p_new = p_old ⊕ A[:, block]·Δ  with
         Δ = old ⊕ new — the partial-update property the paper's related
@@ -342,7 +342,7 @@ class StripeCodec:
 
     # -- batched recovery engine --------------------------------------------
     def recover_blocks(self, pairs: list[tuple[int, int]], *,
-                       reader_cluster: Optional[int] = None,
+                       reader_cluster: int | None = None,
                        strict: bool = True
                        ) -> dict[tuple[int, int], bytes]:
         """Recover many (stripe, block) pairs: the pattern-grouped engine.
@@ -370,7 +370,7 @@ class StripeCodec:
         return out
 
     def _recover_blocks(self, pairs: list[tuple[int, int]], *,
-                        reader_cluster: Optional[int] = None,
+                        reader_cluster: int | None = None,
                         strict: bool = True
                         ) -> tuple[dict[tuple[int, int], bytes],
                                    RecoveryStats]:
@@ -383,7 +383,7 @@ class StripeCodec:
 
     # -- reconstruction ------------------------------------------------------
     def _pick_rebuild_node(self, sid: int, block: int,
-                           occupied: set[int], exclude: int) -> Optional[int]:
+                           occupied: set[int], exclude: int) -> int | None:
         """Live node of `block`'s home cluster holding no other block of
         stripe `sid` (preserving the single-node fault-tolerance invariant
         the constructor validates); falls back to a live co-located node
@@ -403,7 +403,7 @@ class StripeCodec:
         return fallback
 
     def plan_rebuild(self, pairs: list[tuple[int, int]], *,
-                     reader_cluster: Optional[int] = None,
+                     reader_cluster: int | None = None,
                      exclude_node: int = -1
                      ) -> Callable[[], tuple[int, RecoveryStats]]:
         """Two-phase rebuild: recovery ops now, placement at finish.
@@ -434,7 +434,7 @@ class StripeCodec:
         return finish
 
     def rebuild_blocks(self, pairs: list[tuple[int, int]], *,
-                       reader_cluster: Optional[int] = None,
+                       reader_cluster: int | None = None,
                        exclude_node: int = -1) -> int:
         """Recover lost (stripe, block) pairs with the batched plan-grouped
         engine and re-place each on a live node of its home cluster.
@@ -446,7 +446,7 @@ class StripeCodec:
             exclude_node=exclude_node).placed
 
     def rebuild_blocks_report(self, pairs: list[tuple[int, int]], *,
-                              reader_cluster: Optional[int] = None,
+                              reader_cluster: int | None = None,
                               exclude_node: int = -1) -> RepairReport:
         """rebuild_blocks plus launch/traffic accounting (RepairReport).
 
@@ -487,7 +487,7 @@ class StripeCodec:
                                    exclude_node=node)
 
     def plan_read_all(self, metas: list[StripeMeta], *,
-                      reader_cluster: Optional[int] = None
+                      reader_cluster: int | None = None
                       ) -> Callable[[], bytes]:
         handles = {
             meta.stripe_id: self._submit_stripe_read(
@@ -505,7 +505,7 @@ class StripeCodec:
         return finish
 
     def read_all(self, metas: list[StripeMeta], *,
-                 reader_cluster: Optional[int] = None) -> bytes:
+                 reader_cluster: int | None = None) -> bytes:
         """Read every stripe's data blocks; unavailable blocks across all
         stripes are recovered by the pattern-grouped engine rather than
         one kernel launch per stripe."""
@@ -516,7 +516,7 @@ class StripeCodec:
 
 def choose_code(topo: ClusterTopology, *, target_rate: float = 0.85,
                 min_mttdl_years: float = 1e9,
-                params: MTTDLParams = MTTDLParams()) -> Code:
+                params: MTTDLParams | None = None) -> Code:
     """Pick UniLRC(α, z=num_clusters) meeting a storage-efficiency target,
     MTTDL-checked (the 'MTTDL-driven code choice' knob in DESIGN.md §4).
 
@@ -524,6 +524,7 @@ def choose_code(topo: ClusterTopology, *, target_rate: float = 0.85,
     reaches the target (smaller α = smaller groups = cheaper recovery),
     then verify MTTDL.
     """
+    params = params or MTTDLParams()
     z = topo.num_clusters
     if z < 2:
         raise ValueError("need >= 2 clusters for UniLRC")

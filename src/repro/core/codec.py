@@ -99,9 +99,9 @@ def decode_plan(code: Code, erased: tuple[int, ...] | list[int]) -> DecodePlan:
 
     Raises ValueError if the pattern exceeds the code's erasure tolerance.
     """
-    erased = tuple(sorted(set(int(e) for e in erased)))
+    erased = tuple(sorted({int(e) for e in erased}))
     if not erased:
-        return DecodePlan((), (), np.zeros((0, 0), dtype=np.uint8))
+        return _sealed_plan((), (), np.zeros((0, 0), dtype=np.uint8))
     alive = [i for i in range(code.n) if i not in erased]
     if len(alive) < code.k:
         raise ValueError("more erasures than parities")
@@ -228,7 +228,16 @@ def decode_plan(code: Code, erased: tuple[int, ...] | list[int]) -> DecodePlan:
     for i, t in enumerate(erased):
         for s, c in plan_rows[t].items():
             M[i, src_pos[s]] = c
-    return DecodePlan(erased, tuple(sources), M)
+    return _sealed_plan(erased, tuple(sources), M)
+
+
+def _sealed_plan(erased: tuple[int, ...], sources: tuple[int, ...],
+                 M: np.ndarray) -> DecodePlan:
+    """Every DecodePlan is born with a read-only matrix: plans are shared
+    through the memo cache, so an in-place edit would silently corrupt
+    every other holder's decodes. Writers fail loudly instead."""
+    M.setflags(write=False)
+    return DecodePlan(erased, sources, M)
 
 
 # ---------------------------------------------------------------------------
@@ -290,16 +299,27 @@ def decode_plan_cached(code: Code,
     by plan identity. The cache is FIFO-bounded per code, so identity is
     guaranteed only within a window of _MAX_DECODE_PLANS distinct
     patterns."""
-    pattern = tuple(sorted(set(int(e) for e in erased)))
+    pattern = tuple(sorted({int(e) for e in erased}))
     cache = _cache_for(code)
     plan = cache.decodes.get(pattern)
     if plan is None:
-        plan = decode_plan(code, pattern)
-        plan.M.setflags(write=False)   # shared object: no in-place poisoning
+        plan = decode_plan(code, pattern)  # M already sealed read-only
         if len(cache.decodes) >= _MAX_DECODE_PLANS:
             cache.decodes.pop(next(iter(cache.decodes)))
         cache.decodes[pattern] = plan
     return plan
+
+
+def cached_decode_plans(code: Code) -> tuple[DecodePlan, ...]:
+    """Snapshot of every DecodePlan currently memoized for `code`.
+
+    The symbolic verifier walks this to certify that what the engines
+    will actually *execute* (they decode through `decode_plan_cached`)
+    inverts its erasure pattern — not just freshly-built plans."""
+    cache = _PLAN_CACHES.get(_code_key(code))
+    if cache is None:
+        return ()
+    return tuple(cache.decodes.values())
 
 
 def clear_plan_caches() -> None:

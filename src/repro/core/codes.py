@@ -16,7 +16,6 @@ Each code records:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import numpy as np
 
@@ -58,7 +57,7 @@ class Code:
     def num_global(self) -> int:
         return sum(1 for t in self.block_type if t == 'g')
 
-    def group_of(self, i: int) -> Optional[int]:
+    def group_of(self, i: int) -> int | None:
         for gi, grp in enumerate(self.groups):
             if i in grp:
                 return gi

@@ -17,7 +17,6 @@ remote block, because a plain-XOR gateway cannot fold them.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import numpy as np
 
@@ -29,7 +28,7 @@ from .placement import Placement
 
 
 def _network_for(placement: Placement,
-                 network: Optional[NetworkModel]) -> NetworkModel:
+                 network: NetworkModel | None) -> NetworkModel:
     """Counting-only NetworkModel on the placement's cluster count (link
     speeds are irrelevant to block counts)."""
     if network is not None:
@@ -54,7 +53,7 @@ class LocalityMetrics:
 
 
 def locality_metrics(code: Code, placement: Placement, *,
-                     network: Optional[NetworkModel] = None
+                     network: NetworkModel | None = None
                      ) -> LocalityMetrics:
     plans = plans_for(code)
     k = code.k
@@ -86,7 +85,7 @@ def recovery_locality(code: Code) -> float:
 
 
 def per_block_repair_traffic(code: Code, placement: Placement, *,
-                             network: Optional[NetworkModel] = None
+                             network: NetworkModel | None = None
                              ) -> np.ndarray:
     """(n, 2) int array: [total blocks read, cross-cluster block
     transfers] for the minimal single-failure repair of each block under

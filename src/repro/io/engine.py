@@ -40,7 +40,7 @@ the planner's job in `ckpt/stripe.py`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any
 
 import numpy as np
 
@@ -56,12 +56,13 @@ class OpHandle:
 
     __slots__ = ("_done", "_value", "_exc", "tier", "group")
 
-    def __init__(self):
+    def __init__(self) -> None:
         self._done = False
-        self._value = None
-        self._exc: Optional[BaseException] = None
-        self.tier: Optional[str] = None   # recovers: 'fast' | 'pattern'
-        self.group = None    # recovers: the batch group key this op rode —
+        self._value: Any = None
+        self._exc: BaseException | None = None
+        self.tier: str | None = None   # recovers: 'fast' | 'pattern'
+        self.group: tuple[str, Any] | None = None
+        #             recovers: the batch group key this op rode —
         #                      ('fast', block id) or ('pattern', pattern) —
         #                      so planners can attribute per-request stats
         #                      even when a flush coalesced many requests
@@ -70,13 +71,13 @@ class OpHandle:
     def done(self) -> bool:
         return self._done
 
-    def _set(self, value) -> None:
+    def _set(self, value: Any) -> None:
         self._done, self._value = True, value
 
     def _fail(self, exc: BaseException) -> None:
         self._done, self._exc = True, exc
 
-    def result(self):
+    def result(self) -> Any:
         if not self._done:
             raise RuntimeError("op not flushed yet — call engine.flush()")
         if self._exc is not None:
@@ -90,10 +91,10 @@ class _Op:
     handle: OpHandle
     stripe: int = -1
     block: int = -1
-    reader_cluster: Optional[int] = None
+    reader_cluster: int | None = None
     strict: bool = True          # recover: raise (True) vs drop to None
-    data: Optional[np.ndarray] = None        # encode: (S, k, B)
-    new_data: Optional[bytes] = None         # update payload
+    data: np.ndarray | None = None        # encode: (S, k, B)
+    new_data: bytes | None = None         # update payload
 
 
 @dataclasses.dataclass
@@ -123,7 +124,7 @@ class CodingEngine:
     pre-refactor StripeCodec bound its launches (peak staging memory ~
     max_batch_stripes * n * block_size bytes)."""
 
-    def __init__(self, code: Code, store, backend: Backend, *,
+    def __init__(self, code: Code, store: Any, backend: Backend, *,
                  max_batch_stripes: int = 64,
                  gateway_aggregation: bool = False):
         if max_batch_stripes < 1:
@@ -147,13 +148,13 @@ class CodingEngine:
         return op.handle
 
     def submit_read(self, stripe: int, block: int, *,
-                    reader_cluster: Optional[int] = None) -> OpHandle:
+                    reader_cluster: int | None = None) -> OpHandle:
         """Plain block read; result is bytes."""
         return self._submit(_Op("read", OpHandle(), stripe, block,
                                 reader_cluster))
 
     def submit_recover(self, stripe: int, block: int, *,
-                       reader_cluster: Optional[int] = None,
+                       reader_cluster: int | None = None,
                        strict: bool = True) -> OpHandle:
         """Recover one unavailable block; result is bytes, or None when
         strict=False and the stripe's pattern is beyond tolerance."""
@@ -175,7 +176,7 @@ class CodingEngine:
         return self._submit(op)
 
     def submit_update(self, stripe: int, block: int, new_data: bytes, *,
-                      reader_cluster: Optional[int] = None) -> OpHandle:
+                      reader_cluster: int | None = None) -> OpHandle:
         """Delta-parity partial update of one data block; result is the
         number of parity blocks patched."""
         op = _Op("update", OpHandle(), stripe, block, reader_cluster)
@@ -187,7 +188,15 @@ class CodingEngine:
         return len(self._pending)
 
     # -- flush ---------------------------------------------------------------
-    def flush(self) -> FlushStats:
+    def flush(self, *, analyze: bool = False) -> FlushStats:
+        if analyze:
+            # Debug mode: statically prove the queued schedule hazard-free
+            # (waves conflict-free, all-reads-before-any-write, submission
+            # order preserved) BEFORE executing anything. Raises
+            # HazardViolation with the offending op pair. Lazy import —
+            # the analysis subsystem is not on the hot path.
+            from repro.analysis.hazards import analyze_flush
+            analyze_flush(self, raise_on_violation=True)
         ops_list, self._pending = self._pending, []
         stats = FlushStats(ops=len(ops_list))
         by_kind: dict[str, list[_Op]] = {}
@@ -201,7 +210,7 @@ class CodingEngine:
 
     # -- reads ---------------------------------------------------------------
     def _run_reads(self, ops_list: list[_Op], stats: FlushStats) -> None:
-        by_rc: dict[Optional[int], list[_Op]] = {}
+        by_rc: dict[int | None, list[_Op]] = {}
         for op in ops_list:
             by_rc.setdefault(op.reader_cluster, []).append(op)
         for rc, group in sorted(by_rc.items(),
@@ -227,7 +236,7 @@ class CodingEngine:
 
     # -- recovers (the pattern-grouped engine) -------------------------------
     def _gather_sources(self, sids: list[int], sources: tuple[int, ...],
-                        rc: Optional[int]) -> dict[int, np.ndarray]:
+                        rc: int | None) -> dict[int, np.ndarray]:
         """{source block id: (S, B)} for a plan group, read via ONE
         get_many batch."""
         got = self.store.get_many(
@@ -235,7 +244,7 @@ class CodingEngine:
         return {s: np.stack([np.frombuffer(got[(sid, s)], np.uint8)
                              for sid in sids]) for s in sources}
 
-    def _should_aggregate(self, rc: Optional[int], plan) -> bool:
+    def _should_aggregate(self, rc: int | None, plan) -> bool:
         return (self.gateway_aggregation and rc is not None
                 and plan_is_xor_linear(plan))
 
@@ -248,7 +257,7 @@ class CodingEngine:
                      for s in sources)
 
     def _recover_xor_batch(self, sids: list[int], sources: tuple[int, ...],
-                           rc: Optional[int], stats: FlushStats
+                           rc: int | None, stats: FlushStats
                            ) -> np.ndarray:
         """Gateway-aggregated execution of one XOR-linear plan over a
         stripe batch: remote clusters holding >= 2 sources read them
@@ -262,7 +271,7 @@ class CodingEngine:
         for i, sid in enumerate(sids):
             sig = self._source_clusters(sid, sources)
             groups.setdefault(sig, []).append(i)
-        results: list[Optional[np.ndarray]] = [None] * len(sids)
+        results: list[np.ndarray | None] = [None] * len(sids)
         for sig, poss in sorted(groups.items()):
             gsids = [sids[i] for i in poss]
             by_c: dict[int, list[int]] = {}
@@ -291,14 +300,14 @@ class CodingEngine:
         return np.stack(results)
 
     def _run_recovers(self, ops_list: list[_Op], stats: FlushStats) -> None:
-        by_rc: dict[Optional[int], list[_Op]] = {}
+        by_rc: dict[int | None, list[_Op]] = {}
         for op in ops_list:
             by_rc.setdefault(op.reader_cluster, []).append(op)
         for rc, group in sorted(by_rc.items(),
                                 key=lambda kv: (kv[0] is None, kv[0] or 0)):
             self._recover_cluster_group(rc, group, stats)
 
-    def _recover_cluster_group(self, rc: Optional[int], group: list[_Op],
+    def _recover_cluster_group(self, rc: int | None, group: list[_Op],
                                stats: FlushStats) -> None:
         pair_ops: dict[tuple[int, int], list[_Op]] = {}
         by_stripe: dict[int, list[int]] = {}

@@ -32,7 +32,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import time
-from typing import Callable, Optional
+from collections.abc import Callable
 
 import numpy as np
 
@@ -86,7 +86,7 @@ class RequestHandle:
         self.size = size                 # block count — the metering unit
         self._done = False
         self._value = None
-        self._exc: Optional[BaseException] = None
+        self._exc: BaseException | None = None
         self._submitted = time.perf_counter()
         self.latency_s = 0.0
 
@@ -94,7 +94,7 @@ class RequestHandle:
     def done(self) -> bool:
         return self._done
 
-    def _resolve(self, value, exc: Optional[BaseException]) -> None:
+    def _resolve(self, value, exc: BaseException | None) -> None:
         self._done, self._value, self._exc = True, value, exc
         self.latency_s = time.perf_counter() - self._submitted
 
@@ -116,7 +116,7 @@ class RequestFrontend:
     """Coalescing, priority-classed request layer over one StripeCodec."""
 
     def __init__(self, codec, *,
-                 background_ops_per_flush: Optional[int] = None):
+                 background_ops_per_flush: int | None = None):
         if (background_ops_per_flush is not None
                 and background_ops_per_flush < 1):
             raise ValueError("background_ops_per_flush must be >= 1")
@@ -135,7 +135,7 @@ class RequestFrontend:
         return handle
 
     def submit_client_read(self, meta, *,
-                           reader_cluster: Optional[int] = None
+                           reader_cluster: int | None = None
                            ) -> RequestHandle:
         """Full-stripe read (CheckpointManager-style restore traffic)."""
         return self._enqueue(
@@ -144,7 +144,7 @@ class RequestFrontend:
                 meta, reader_cluster=reader_cluster))
 
     def submit_degraded_read(self, meta, block: int, *,
-                             reader_cluster: Optional[int] = None
+                             reader_cluster: int | None = None
                              ) -> RequestHandle:
         """One unavailable block served from survivors."""
         return self._enqueue(
@@ -153,7 +153,7 @@ class RequestFrontend:
                 meta, block, reader_cluster=reader_cluster))
 
     def submit_rebuild(self, pairs: list[tuple[int, int]], *,
-                       reader_cluster: Optional[int] = None,
+                       reader_cluster: int | None = None,
                        exclude_node: int = -1) -> RequestHandle:
         """Background re-protect; result is (placed, RecoveryStats)."""
         return self._enqueue(
@@ -163,7 +163,7 @@ class RequestFrontend:
                 exclude_node=exclude_node))
 
     def submit_scrub(self, metas, *,
-                     reader_cluster: Optional[int] = None) -> RequestHandle:
+                     reader_cluster: int | None = None) -> RequestHandle:
         """Background integrity scan; result is a ScrubReport.
 
         One request reads every block of every listed stripe in its
@@ -176,7 +176,7 @@ class RequestFrontend:
             lambda: self._plan_scrub(metas, reader_cluster))
 
     # -- scrub planner -------------------------------------------------------
-    def _plan_scrub(self, metas, reader_cluster: Optional[int]):
+    def _plan_scrub(self, metas, reader_cluster: int | None):
         codec = self.codec
         n, k = codec.code.n, codec.code.k
         handles: dict[int, list] = {}
@@ -252,7 +252,7 @@ class RequestFrontend:
             traffic = self.codec.store.traffic
             inner0, cross0 = traffic.inner_bytes, traffic.cross_bytes
             agg0 = traffic.aggregated_bytes
-            finishes: list[tuple[_Request, Optional[Callable]]] = []
+            finishes: list[tuple[_Request, Callable | None]] = []
             for req in batch:
                 try:
                     finishes.append((req, req.plan()))
@@ -291,7 +291,7 @@ class RequestFrontend:
 
     # -- repair-scheduler convenience ---------------------------------------
     def rebuild(self, pairs: list[tuple[int, int]], *,
-                reader_cluster: Optional[int] = None,
+                reader_cluster: int | None = None,
                 exclude_node: int = -1):
         """Submit one rebuild request and drain it immediately, returning
         the same `RepairReport` the codec's synchronous path produces —

@@ -4,6 +4,7 @@ dump. Usage:
 """
 from __future__ import annotations
 
+import pathlib
 import re
 import sys
 from collections import defaultdict
@@ -84,7 +85,7 @@ def main():
     path = sys.argv[1]
     opf = sys.argv[2] if len(sys.argv) > 2 else "all-gather"
     n = int(sys.argv[3]) if len(sys.argv) > 3 else 10
-    hlo = open(path).read()
+    hlo = pathlib.Path(path).read_text()
     for t, m, b, cn, sig, meta in top_contributors(hlo, opf, n):
         print(f"{t/2**30:9.1f}GB x{m:6.0f} each={b/2**20:8.1f}MB "
               f"{cn:30s} {sig}\n{'':22s}{meta}")

@@ -7,7 +7,7 @@ launcher share.
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -51,7 +51,7 @@ def token_inputs(cfg: ModelConfig, B: int, S: int) -> Any:
     return jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
 
 
-def vision_inputs(cfg: ModelConfig, B: int) -> Optional[jax.ShapeDtypeStruct]:
+def vision_inputs(cfg: ModelConfig, B: int) -> jax.ShapeDtypeStruct | None:
     if cfg.family != "vlm":
         return None
     return jax.ShapeDtypeStruct((B, cfg.vision_seq, cfg.d_model),

@@ -9,7 +9,6 @@ vision model's cross-attention interleave) become multi-layer superblocks.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 BLOCK_KINDS = (
     "attn",        # self-attention + MLP (dense transformer layer)
@@ -76,8 +75,8 @@ class ModelConfig:
     tie_embeddings: bool = False
     causal: bool = True             # False => encoder-only (audio)
     window: int = 0                 # local attention window (hybrid)
-    moe: Optional[MoEConfig] = None
-    mla: Optional[MLAConfig] = None
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
     # vlm: length of the precomputed vision-embedding sequence (frontend STUB)
     vision_seq: int = 0
     # audio: frontend STUB provides frame embeddings directly

@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -34,10 +34,10 @@ class Ctx:
     """Per-call context threaded through blocks."""
     cfg: ModelConfig
     mode: str                 # "train" | "prefill" | "decode"
-    pos: Optional[jax.Array]  # scalar int32: cache fill position (decode)
-    vision: Optional[jax.Array] = None  # (B, Sv, D) stub embeddings (vlm)
+    pos: jax.Array | None  # scalar int32: cache fill position (decode)
+    vision: jax.Array | None = None  # (B, Sv, D) stub embeddings (vlm)
     attn_schedule: str = DEFAULT_ATTN_SCHEDULE
-    mesh: Optional[Any] = None  # jax Mesh: activation sharding constraints
+    mesh: Any | None = None  # jax Mesh: activation sharding constraints
     seq_parallel: bool = False  # shard S of the residual stream over model
 
 
@@ -471,7 +471,7 @@ def init_attention(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
 
 
 def attention_block(params: Params, x: jax.Array, ctx: Ctx,
-                    cache: Optional[Params], *, window: int = 0):
+                    cache: Params | None, *, window: int = 0):
     """x: (B, S, D). Returns (attn_out, new_cache)."""
     cfg = ctx.cfg
     B, S, D = x.shape

@@ -16,7 +16,8 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Any, Callable, Optional
+from collections.abc import Callable
+from typing import Any
 
 
 @dataclasses.dataclass
@@ -64,7 +65,7 @@ class EventQueue:
             ev.cancel()
             self._live -= 1
 
-    def pop(self) -> Optional[Event]:
+    def pop(self) -> Event | None:
         while self._heap:
             ev = heapq.heappop(self._heap)
             if not ev.cancelled:
@@ -73,7 +74,7 @@ class EventQueue:
                 return ev
         return None
 
-    def peek_time(self) -> Optional[float]:
+    def peek_time(self) -> float | None:
         while self._heap and self._heap[0].cancelled:
             heapq.heappop(self._heap)
         return self._heap[0].time if self._heap else None
@@ -112,8 +113,8 @@ class Simulator:
         """Halt `run` after the current handler returns."""
         self._stopped = True
 
-    def run(self, until: Optional[float] = None,
-            max_events: Optional[int] = None) -> float:
+    def run(self, until: float | None = None,
+            max_events: int | None = None) -> float:
         """Drain events; returns the simulation clock when the run ends.
 
         Ends at the first of: queue empty, next event past `until` (clock

@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
 
 import jax
 import numpy as np
@@ -142,13 +141,13 @@ class SimConfig:
     """One Monte Carlo campaign over a simulated deployment."""
     code: Code
     params: MTTDLParams = MTTDLParams()
-    placement: Optional[Placement] = None      # default_placement(code)
+    placement: Placement | None = None      # default_placement(code)
     nodes_per_cluster: int = 0                 # 0 => max cluster load + 1
     n_stripes: int = 4
     mission_hours: float = 10 * HOURS_PER_YEAR
     trials: int = 20
     seed: int = 0
-    failure_model: Optional[FailureModel] = None   # default: exp from params
+    failure_model: FailureModel | None = None   # default: exp from params
     data_path: bool = False                    # drive real bytes via codec
     block_size: int = 1 << 12                  # data-path block bytes
     max_events_per_trial: int = 500_000
@@ -157,7 +156,7 @@ class SimConfig:
     # (survivor uplinks + oversubscribed core). None keeps the chain's
     # pipe semantics; num_clusters/nodes_per_cluster must match the
     # placement's deployment when given.
-    topology: Optional[Topology] = None
+    topology: Topology | None = None
 
     def resolved_placement(self) -> Placement:
         return self.placement or default_placement(self.code)
@@ -187,7 +186,7 @@ class SimConfig:
 class TrialResult:
     observed_hours: float
     lost: bool
-    loss_hours: Optional[float]
+    loss_hours: float | None
     degraded_fraction: float
     repaired_blocks: int
     cross_blocks_read: int
@@ -204,7 +203,7 @@ class CampaignReport:
     trials: int
     losses: int
     total_hours: float
-    mttdl_years: Optional[float]       # total time / losses; None if 0 losses
+    mttdl_years: float | None       # total time / losses; None if 0 losses
     mttdl_lower_bound_years: float     # total time / max(losses, 1)
     loss_probability: float            # P(loss within mission_hours)
     degraded_fraction: float           # time-avg fraction of damaged stripes
@@ -255,7 +254,7 @@ class DssTrial:
         block_TB = cfg.params.S_TB / blocks_per_node
 
         self.missing: dict[int, set[int]] = {}
-        self.lost_at: Optional[float] = None
+        self.lost_at: float | None = None
         self._degraded_acc = 0.0
         self._last_t = 0.0
 
@@ -330,7 +329,7 @@ class DssTrial:
             return pairs
         return list(self.node_blocks.get(node, ()))
 
-    def _fail_node(self, node: int, ev: Optional[Event] = None) -> None:
+    def _fail_node(self, node: int, ev: Event | None = None) -> None:
         pairs = self._lost_pairs_of_node(node)
         self._touch()
         fresh = [p for p in pairs

@@ -42,7 +42,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import AbstractSet, Callable, Optional
+from collections.abc import Callable, Set as AbstractSet
 
 from repro.core.codec import decode_plan_cached, plans_for
 from repro.core.metrics import (effective_block_traffic,
@@ -101,8 +101,8 @@ class RepairScheduler:
                  stripe_missing: Callable[[int], AbstractSet[int]],
                  on_repaired: Callable[[list[tuple[int, int]]], None],
                  codec=None,
-                 topology: Optional[Topology] = None,
-                 exclude_node_of: Optional[Callable[[int, int], int]] = None):
+                 topology: Topology | None = None,
+                 exclude_node_of: Callable[[int, int], int] | None = None):
         self.sim = sim
         self.placement = placement
         self.params = params
@@ -137,7 +137,7 @@ class RepairScheduler:
             placement.assignment, b, plans[b].sources, plan=plans[b])
             for b in range(code.n)]
         self._pending: dict[tuple[int, int], None] = {}   # ordered set
-        self._in_flight: Optional[Event] = None
+        self._in_flight: Event | None = None
         sim.on(REPAIR_DONE, self._handle_done)
 
     # -- damage intake -------------------------------------------------------

@@ -24,7 +24,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
 
 import numpy as np
 
@@ -104,7 +103,7 @@ class NetworkModel:
     Markov chain's ε(N−1)B pipe (`from_repair_pipe`)."""
 
     def __init__(self, topo: Topology, *, cross_bw: float,
-                 inner_bw: float, core_bw: Optional[float] = None):
+                 inner_bw: float, core_bw: float | None = None):
         if cross_bw <= 0 or inner_bw <= 0:
             raise ValueError("link bandwidths must be positive")
         self.topo = topo

@@ -1,0 +1,419 @@
+"""The static-analysis subsystem: symbolic certificates, hazard
+detection, and the repo-invariant lint.
+
+Acceptance invariants (ISSUE 6):
+  * the symbolic verifier certifies every (alpha, z, t) paper-grid code
+    with ZERO kernel launches (pinned via `kernel_counters`);
+  * the hazard analyzer statically rejects the reconstructed PR-3
+    stale-parity ordering and accepts every wave the current coalescer
+    produces across engine workloads;
+  * the lint exits 0 on the repo and non-zero on a fixture that
+    bypasses KERNEL_LAUNCHES accounting;
+  * DecodePlan matrices are read-only from construction and the plan
+    cache still hits.
+"""
+import dataclasses
+import importlib.util
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.analysis.certificate import (Certificate, Claim,
+                                        dump_certificates,
+                                        load_certificates)
+from repro.analysis.hazards import (HazardViolation, OpAccess, Step, Wave,
+                                    analyze_flush, check_schedule,
+                                    check_wave, flush_schedule, staged_wave)
+from repro.analysis.lint import lint_source
+from repro.analysis.lint import main as lint_main
+from repro.analysis.verify import (certify, certify_paper_grid,
+                                   erasure_correctable,
+                                   optimal_lrc_distance)
+from repro.ckpt import BlockStore, ClusterTopology
+from repro.ckpt.stripe import StripeCodec
+from repro.core.codec import (cached_decode_plans, clear_plan_caches,
+                              decode_plan, decode_plan_cached)
+from repro.core.codes import make_unilrc
+from repro.io import NumpyBackend
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+BS = 64
+
+
+def _engine(stripes=4, seed=0):
+    code = make_unilrc(1, 4)
+    store = BlockStore(ClusterTopology(4, 8))
+    codec = StripeCodec(code, store, block_size=BS, backend=NumpyBackend())
+    rng = np.random.default_rng(seed)
+    codec.write(rng.integers(0, 256, size=stripes * code.k * BS,
+                             dtype=np.uint8).tobytes())
+    return code, store, codec.engine
+
+
+# ---------------------------------------------------------------------------
+# Pillar 1: symbolic verifier
+# ---------------------------------------------------------------------------
+
+def test_certify_paper_grid_zero_kernel_launches(kernel_counters):
+    """Acceptance: every (alpha, z) x t paper-grid code certifies all
+    claims, and certification is pure host-side algebra — the
+    kernel-launch counter stays at exactly zero throughout."""
+    certs = certify_paper_grid(trials=40, exhaustive_budget=2000)
+    assert len(certs) == 6          # 3 schemes x t in (1, 2)
+    for cert in certs:
+        assert cert.all_ok, cert.failures()
+        assert cert.kernel_launches == 0
+        assert {c.name for c in cert.claims} == {
+            "generator_check_consistency", "local_groups_mds",
+            "xor_local_parities", "distance_meets_optimal_bound",
+            "decode_plans_invert", "placement_topology"}
+    assert sum(kernel_counters.values()) == 0
+
+
+def test_distance_bound_matches_meta():
+    """The unified-locality optimal-LRC bound n-k-ceil((k+g)/r)+2
+    reproduces the construction's claimed d = r+2 on the paper grid."""
+    for alpha, z in ((1, 4), (1, 6), (2, 8), (2, 10)):
+        code = make_unilrc(alpha, z)
+        assert optimal_lrc_distance(code) == code.meta["d"]
+
+
+def test_erasure_correctable_rank_criterion():
+    code = make_unilrc(1, 4)
+    d = code.meta["d"]
+    # every full local group (d-1 blocks) is correctable ...
+    for grp in code.groups:
+        assert erasure_correctable(code, list(grp))
+    # ... and more erasures than parities never are
+    assert not erasure_correctable(code, list(range(code.n - code.k + 1)))
+    assert erasure_correctable(code, [])
+    assert d - 1 == len(code.groups[0])
+
+
+def test_certify_flags_broken_checks():
+    """Tampering with a check row must fail generator/check consistency
+    — the verifier is not a rubber stamp."""
+    code = make_unilrc(1, 4)
+    bad_checks = code.checks.copy()
+    bad_checks[0, 0] ^= 1
+    bad = dataclasses.replace(code, checks=bad_checks)
+    cert = certify(bad, trials=5, exhaustive_budget=0)
+    assert not cert.claim("generator_check_consistency").ok
+    assert not cert.all_ok
+
+
+def test_certify_flags_overclaimed_distance():
+    """A code whose meta claims one more than the optimal bound must
+    fail the distance claim."""
+    code = make_unilrc(1, 4)
+    meta = dict(code.meta, d=code.meta["d"] + 1)
+    bad = dataclasses.replace(code, meta=meta)
+    claim = certify(bad, trials=5, exhaustive_budget=0).claim(
+        "distance_meets_optimal_bound")
+    assert not claim.ok
+    assert claim.data["optimal_bound"] == code.meta["d"]
+
+
+def test_certify_covers_cached_plans():
+    """The decode-plan claim verifies plans already memoized in the live
+    cache — the exact objects the engines execute."""
+    clear_plan_caches()
+    code = make_unilrc(1, 4)
+    warmed = decode_plan_cached(code, tuple(code.groups[0]))
+    assert any(p is warmed for p in cached_decode_plans(code))
+    claim = certify(code, trials=10, exhaustive_budget=0).claim(
+        "decode_plans_invert")
+    assert claim.ok
+    assert claim.data["cached_plans"] >= 1
+
+
+def test_certificate_roundtrip_and_batch():
+    cert = certify(make_unilrc(1, 4), trials=5, exhaustive_budget=0)
+    again = Certificate.from_json(cert.to_json())
+    assert again == cert
+    batch = load_certificates(dump_certificates([cert, again]))
+    assert batch == [cert, again]
+    assert "OK" in cert.summary()
+    with pytest.raises(KeyError):
+        cert.claim("no_such_claim")
+
+
+# ---------------------------------------------------------------------------
+# Pillar 2: hazard analyzer
+# ---------------------------------------------------------------------------
+
+def _toy_update(stripe=0, block=2, parities=(12, 16)):
+    fp = ((stripe, block), *((stripe, p) for p in parities))
+    return OpAccess(0, "update", stripe, block, reads=fp, writes=fp)
+
+
+def test_pr3_stale_parity_ordering_rejected():
+    """Acceptance: the PR-3 bug — new data written BEFORE the old value
+    is read for the delta — is a statically-detected read-after-write
+    hazard on the data block."""
+    op = _toy_update()
+    pr3 = Wave(0, (op,), (
+        Step(0, "write", (0, 2)),      # data block written first ...
+        Step(0, "read", (0, 2)),       # ... then read: delta folds to 0
+        Step(0, "read", (0, 12)),
+        Step(0, "write", (0, 12)),
+        Step(0, "read", (0, 16)),
+        Step(0, "write", (0, 16)),
+    ))
+    violations = check_wave(pr3)
+    kinds = [v.kind for v in violations]
+    assert "read-after-write" in kinds
+    raw = violations[kinds.index("read-after-write")]
+    assert raw.loc == (0, 2)
+    assert "stale read" in str(raw)
+
+
+def test_staged_wave_is_clean():
+    """The staging discipline the engine actually uses (all reads, then
+    all writes) passes for the same op."""
+    assert check_wave(staged_wave(0, (_toy_update(),))) == []
+
+
+def test_wave_conflict_between_siblings_rejected():
+    a = _toy_update()
+    b = dataclasses.replace(_toy_update(), index=1)  # same footprint
+    violations = check_wave(staged_wave(0, (a, b)))
+    assert any(v.kind == "wave-conflict" for v in violations)
+
+
+def test_engine_coalescer_waves_accepted():
+    """Acceptance: every wave the current coalescer produces across the
+    engine workload shapes analyzes hazard-free, and the static wave
+    count matches what the flush actually executes."""
+    code, store, engine = _engine()
+    engine.submit_read(3, 0)
+    engine.submit_update(0, 0, bytes(BS))
+    engine.submit_update(0, 1, bytes(BS))       # same stripe: second wave
+    engine.submit_update(2, 3, b"\x05" * BS)
+    engine.submit_update(1, 0, b"\x09" * BS,
+                         reader_cluster=1)       # wave-key split
+    report = analyze_flush(engine)
+    assert report.ok
+    assert report.ops == 5
+    stats = engine.flush()
+    assert report.waves == stats.update_waves == 3
+
+
+def test_degraded_workload_analyzes_clean():
+    """Mixed degraded-read + update flushes analyze hazard-free even
+    when node failures force the decode-pattern path (the analyzer sees
+    the same availability the flush will)."""
+    code, store, engine = _engine()
+    store.fail_node(store.node_of(1, 2))
+    engine.submit_recover(1, 2)
+    engine.submit_update(0, 0, bytes(BS))
+    report = analyze_flush(engine)
+    assert report.ok and report.ops == 2 and report.waves == 1
+
+
+def test_flush_analyze_true_runs_and_preserves_results():
+    """`flush(analyze=True)` proves the schedule first, then executes
+    normally — results are identical to an unanalyzed flush."""
+    code, store, engine = _engine()
+    h = engine.submit_update(0, 0, b"\x11" * BS)
+    hr = engine.submit_read(1, 0)
+    stats = engine.flush(analyze=True)
+    assert h.result() > 0 and isinstance(hr.result(), bytes)
+    assert stats.update_waves == 1
+    # parity consistency after the analyzed update
+    pattern_plan = decode_plan(code, (0,))
+    blocks = {b: np.frombuffer(store.get(0, b), np.uint8)
+              for b in pattern_plan.sources}
+    rec = pattern_plan.apply(blocks)[0]
+    assert rec.tobytes() == store.get(0, 0) == b"\x11" * BS
+
+
+def test_flush_schedule_recover_footprint_tracks_availability():
+    """Recover ops read their fast-plan sources when the group is
+    intact, and the decode-pattern sources once availability forces the
+    slow path — the analyzer derives footprints from live store state,
+    exactly as the flush will."""
+    from repro.core.codec import plans_for
+    code, store, engine = _engine()
+    engine.submit_recover(0, 1)
+    sched = flush_schedule(engine)
+    assert set(sched.prelude[0].reads) == {
+        (0, s) for s in plans_for(code)[1].sources}
+    engine._pending.clear()
+
+    # break a second block in the same group: slow path
+    grp = next(g for g in code.groups if 1 in g)
+    other = next(b for b in grp if b != 1)
+    store.fail_node(store.node_of(0, other))
+    engine.submit_recover(0, 1)
+    sched = flush_schedule(engine)
+    pattern = tuple(sorted({1, other}))
+    expect = decode_plan_cached(code, pattern)
+    assert set(sched.prelude[0].reads) == {(0, s) for s in expect.sources}
+    engine._pending.clear()
+
+
+def test_check_schedule_flags_cross_wave_reorder():
+    a = _toy_update()
+    b = dataclasses.replace(_toy_update(), index=1)
+    from repro.analysis.hazards import FlushSchedule
+    reordered = FlushSchedule((), (staged_wave(0, (b,)),
+                                   staged_wave(1, (a,))))
+    assert any(v.kind == "wave-reorder"
+               for v in check_schedule(reordered))
+
+
+def test_hazard_violation_is_raisable_with_pair():
+    with pytest.raises(HazardViolation) as ei:
+        raise HazardViolation("read-after-write", (0, 2),
+                              "op#0 update (write)", "op#0 update (read)",
+                              wave=3)
+    assert ei.value.kind == "read-after-write"
+    assert ei.value.to_dict()["wave"] == 3
+
+
+# ---------------------------------------------------------------------------
+# Pillar 3: repo-invariant lint
+# ---------------------------------------------------------------------------
+
+def test_lint_repo_is_clean():
+    """Acceptance: `python -m repro.analysis.lint src tests benchmarks`
+    exits 0 on the repo."""
+    assert lint_main([str(REPO / "src"), str(REPO / "tests"),
+                      str(REPO / "benchmarks"), "--quiet"]) == 0
+
+
+def test_lint_fixture_bypassing_accounting_fails(tmp_path):
+    """Acceptance: a fixture calling a raw kernel outside kernels/
+    exits non-zero (RA001)."""
+    bad = tmp_path / "sneaky.py"
+    bad.write_text(
+        "from repro.kernels.gf_bitmatmul import gf_bitmatmul\n"
+        "def f(a_bits, data):\n"
+        "    return gf_bitmatmul(a_bits, data)\n")
+    assert lint_main([str(bad)]) == 1
+    findings = lint_source(bad.read_text(), str(bad))
+    assert [f.rule for f in findings] == ["RA001"]
+
+
+def test_lint_waiver_suppresses():
+    src = ("from repro.kernels.xor_reduce import xor_reduce\n"
+           "out = xor_reduce(blocks)   # repro-lint: allow=RA001\n")
+    assert lint_source(src, "tests/oracle.py") == []
+    unwaived = src.replace("   # repro-lint: allow=RA001", "")
+    assert [f.rule for f in lint_source(unwaived, "tests/oracle.py")] \
+        == ["RA001"]
+
+
+def test_lint_kernels_package_exempt():
+    src = ("import jax.experimental.pallas as pl\n"
+           "out = pl.pallas_call(kernel)(x)\n")
+    assert lint_source(src, "src/repro/kernels/new_kernel.py") == []
+    assert [f.rule for f in lint_source(src, "src/repro/io/fast.py")] \
+        == ["RA001"]
+
+
+def test_lint_float_dtype_on_gf_arrays():
+    src = ("import numpy as np\n"
+           "x = np.zeros(4, dtype=np.float32)\n"
+           "y = x.astype(float)\n")
+    findings = lint_source(src, "src/repro/core/gf.py")
+    assert [f.rule for f in findings] == ["RA002", "RA002"]
+    # same code outside GF-critical modules is fine (models use floats)
+    assert lint_source(src, "src/repro/models/layers.py") == []
+
+
+def test_lint_plan_payload_mutation():
+    src = ("plan.M[0, 0] = 7\n"
+           "plan.M.setflags(write=True)\n"
+           "plan.M.setflags(write=False)\n")
+    findings = lint_source(src, "src/repro/io/anything.py")
+    assert [f.rule for f in findings] == ["RA003", "RA003"]
+
+
+def test_lint_single_item_op_in_hot_loop():
+    src = ("from repro.kernels import ops\n"
+           "def run(items):\n"
+           "    for it in items:\n"
+           "        ops.apply_decode(it.plan, it.blocks)\n")
+    findings = lint_source(src, "src/repro/io/engine.py")
+    assert [f.rule for f in findings] == ["RA004"]
+    # the batched variant in a loop is fine (chunking), and the single
+    # op outside a loop is fine
+    ok = ("from repro.kernels import ops\n"
+          "def run(items):\n"
+          "    for chunk in items:\n"
+          "        ops.apply_decode_many(chunk.plan, chunk.blocks)\n"
+          "    ops.apply_decode(items[0].plan, items[0].blocks)\n")
+    assert lint_source(ok, "src/repro/io/engine.py") == []
+
+
+# ---------------------------------------------------------------------------
+# Satellite: sealed DecodePlan matrices + cache behavior
+# ---------------------------------------------------------------------------
+
+def test_decode_plan_matrix_read_only_at_construction():
+    code = make_unilrc(1, 4)
+    plan = decode_plan(code, (0, 1))        # fresh, not via the cache
+    assert not plan.M.flags.writeable
+    with pytest.raises(ValueError):
+        plan.M[0, 0] = 1                    # repro-lint: allow=RA003
+
+
+def test_cached_plan_mutation_raises_and_cache_still_hits():
+    clear_plan_caches()
+    code = make_unilrc(1, 4)
+    plan = decode_plan_cached(code, (3,))
+    with pytest.raises(ValueError):
+        plan.M[0, 0] ^= 1                   # repro-lint: allow=RA003
+    again = decode_plan_cached(code, (3,))
+    assert again is plan                    # identity cache hit survives
+    # and the (unmutated) plan still decodes correctly
+    rng = np.random.default_rng(1)
+    data = rng.integers(0, 256, size=(code.k, 16), dtype=np.uint8)
+    cw = code.encode(data)
+    rec = plan.apply({b: cw[b] for b in plan.sources})
+    assert np.array_equal(rec[3], cw[3])
+
+
+# ---------------------------------------------------------------------------
+# CI gate plumbing (check_regression --analysis-*)
+# ---------------------------------------------------------------------------
+
+def _load_check_regression():
+    spec = importlib.util.spec_from_file_location(
+        "check_regression", REPO / "benchmarks" / "check_regression.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_analysis_gates_in_check_regression():
+    cr = _load_check_regression()
+    cert = certify(make_unilrc(1, 4), trials=5, exhaustive_budget=0)
+    batch = {"version": 1, "certificates": [cert.to_dict()] * 6}
+    assert cr.check_analysis_cert(batch) == []
+    assert cr.check_analysis_cert({"certificates": []})  # grid shrank
+
+    launched = dict(cert.to_dict(), kernel_launches=3)
+    bad = {"certificates": [launched] * 6}
+    assert any("launch" in f for f in cr.check_analysis_cert(bad))
+
+    broken = dict(cert.to_dict())
+    broken["claims"] = [dict(c, ok=False) for c in broken["claims"]]
+    assert cr.check_analysis_cert({"certificates": [broken] * 6})
+
+    hz_ok = {"workloads": {"w": {"ops": 3, "waves": 1, "ok": True,
+                                 "violations": []}}}
+    assert cr.check_analysis_hazards(hz_ok) == []
+    hz_bad = {"workloads": {"w": {"ops": 3, "waves": 1, "ok": False,
+                                  "violations": [{"kind": "read-after-write",
+                                                  "loc": [0, 2],
+                                                  "first": "a",
+                                                  "second": "b"}]}}}
+    assert cr.check_analysis_hazards(hz_bad)
+    assert cr.check_analysis_hazards({"workloads": {}})
+    no_waves = {"workloads": {"w": {"ops": 3, "waves": 0, "ok": True,
+                                    "violations": []}}}
+    assert any("wave" in f for f in cr.check_analysis_hazards(no_waves))

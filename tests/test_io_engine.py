@@ -322,6 +322,78 @@ def test_engine_bad_update_fails_cleanly_not_stranded():
     assert codec.normal_read(metas[0]) == payload[:code.k * BS]  # untouched
 
 
+def test_engine_bad_update_does_not_poison_sibling_updates():
+    """Error isolation: the raising op's wave cannot contain sibling
+    updates with valid payloads — the (payload length, reader cluster)
+    wave key quarantines the mismatched op into its own wave — so
+    siblings' OpHandles resolve normally and their parities stay
+    consistent."""
+    code, store, codec, payload, metas = _setup(3, seed=23)
+    bad = codec.engine.submit_update(0, 0, b"\x01" * (BS // 2))
+    sib1 = codec.engine.submit_update(1, 0, b"\x02" * BS)
+    sib2 = codec.engine.submit_update(2, 3, b"\x03" * BS)
+    codec.engine.flush()
+    with pytest.raises(ValueError, match="bytes"):
+        bad.result()
+    assert sib1.result() > 0 and sib2.result() > 0
+    # siblings' stripes decode consistently with their new data ...
+    want1 = bytearray(payload[code.k * BS:2 * code.k * BS])
+    want1[:BS] = b"\x02" * BS
+    assert codec.normal_read(metas[1]) == bytes(want1)
+    want2 = bytearray(payload[2 * code.k * BS:])
+    want2[3 * BS:4 * BS] = b"\x03" * BS
+    assert codec.normal_read(metas[2]) == bytes(want2)
+    # ... and the bad op's stripe is untouched
+    assert codec.normal_read(metas[0]) == payload[:code.k * BS]
+
+
+def test_engine_wave_store_failure_is_atomic_across_members():
+    """Pin current behavior: a NodeFailure during a wave's staged reads
+    aborts the WHOLE wave — every member op's handle carries the error,
+    including members on healthy stripes — and no member stripe is
+    partially written (the stripe-intact-on-failure invariant trumps
+    per-op isolation inside one wave)."""
+    code, store, codec, payload, metas = _setup(2, seed=31)
+    nz = [int(pi) for pi in np.flatnonzero(code.A[:, 0])]
+    victim = store.node_of(0, code.k + nz[-1])   # parity of stripe 0 only
+    store.fail_node(victim)
+    doomed = codec.engine.submit_update(0, 0, bytes(BS))
+    healthy = codec.engine.submit_update(1, 0, bytes(BS))  # same wave
+    codec.engine.flush()
+    with pytest.raises(NodeFailure):
+        doomed.result()
+    with pytest.raises(NodeFailure):
+        healthy.result()
+    store.heal_node(victim)
+    assert codec.normal_read(metas[0]) == payload[:code.k * BS]
+    assert codec.normal_read(metas[1]) == payload[code.k * BS:]
+
+
+def test_engine_failed_recover_does_not_poison_reads():
+    """A recover whose erasure pattern is beyond code tolerance fails
+    alone; co-flushed reads on live blocks still resolve.  The kill set
+    covers the target's whole local group (defeating fast local repair)
+    plus enough extras to exceed n - k, while avoiding the nodes that
+    host the sibling reads."""
+    code, store, codec, payload, metas = _setup(2, seed=37)
+    grp = list(code.groups[0])                  # (0, 1, 2, 12, 16)
+    extras = [3, 4, 5, 6]
+    dead = sorted(set(grp) | set(extras))       # 9 > n - k = 8
+    deadnodes = {store.node_of(0, b) for b in dead}
+    for nd in deadnodes:
+        store.fail_node(nd)
+    live = [b for b in range(code.k)
+            if store.node_of(1, b) not in deadnodes][:2]
+    assert len(live) == 2
+    doomed = codec.engine.submit_recover(0, grp[0], strict=True)
+    reads = [codec.engine.submit_read(1, b) for b in live]
+    codec.engine.flush()
+    with pytest.raises(ValueError):
+        doomed.result()
+    for h, b in zip(reads, live):
+        assert h.result() == _expect(payload, code, 1, b)
+
+
 def test_engine_rejects_zero_stripe_encode():
     """A zero-stripe encode would strand co-flushed handles (no chunk
     rows -> np.stack([]) after _pending is cleared) — rejected upfront."""

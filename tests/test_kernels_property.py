@@ -24,7 +24,8 @@ def test_gf_bitmatmul_property(seed):
     k = int(rng.integers(1, 33))
     A = rng.integers(0, 256, (m, k), dtype=np.uint8)
     data = rng.integers(0, 256, (k, 512), dtype=np.uint8)
-    got = np.asarray(gf_bitmatmul(expand_coding_matrix_to_bits(A), data))
+    got = np.asarray(                  # repro-lint: allow=RA001
+        gf_bitmatmul(expand_coding_matrix_to_bits(A), data))
     assert np.array_equal(got, gf_matmul(A, data))
 
 

@@ -139,8 +139,9 @@ def test_failure_model_cluster_loss_toggle():
 # Repair scheduler: units + plan grouping
 # ---------------------------------------------------------------------------
 
-def _mk_scheduler(code, missing, *, block_TB=0.25, params=MTTDLParams(),
+def _mk_scheduler(code, missing, *, block_TB=0.25, params=None,
                   codec=None):
+    params = params or MTTDLParams()
     sim = Simulator()
     placement = codec.placement if codec else default_placement(code)
     healed = []
