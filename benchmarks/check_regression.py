@@ -22,13 +22,20 @@ above a cross-traffic floor, correlated cluster-loss repair must slow
 down under 10x core oversubscription, and gateway-aggregated degraded
 reads must stay byte-identical and under the pre-fold launch ceiling.
 
+The concurrency gate (`--conc-*`, fed by fig_concurrent_repair) pins
+the multi-queue scheduler: cluster-loss recovery makespan must beat the
+serialized baseline by `--conc-min-speedup`, the window of
+vulnerability must not grow, jobs must actually overlap, and no
+per-link schedule may ever exceed the link's capacity.
+
 Usage (what .github/workflows/ci.yml runs):
     cp artifacts/bench/fig_batched_recovery.json /tmp/baseline.json
     cp artifacts/bench/fig_correlated_recovery.json /tmp/corr_baseline.json
     cp artifacts/bench/fig_mixed_workload.json /tmp/mixed_baseline.json
     cp artifacts/bench/fig_topology_repair.json /tmp/topo_baseline.json
+    cp artifacts/bench/fig_concurrent_repair.json /tmp/conc_baseline.json
     python -m benchmarks.run --tiny --only \
-        fig_batched_recovery,fig_correlated_recovery,fig_mixed_workload,fig_topology_repair
+        fig_batched_recovery,fig_correlated_recovery,fig_mixed_workload,fig_topology_repair,fig_concurrent_repair
     python -m benchmarks.check_regression \
         --baseline /tmp/baseline.json \
         --fresh artifacts/bench/fig_batched_recovery.json \
@@ -37,7 +44,9 @@ Usage (what .github/workflows/ci.yml runs):
         --mixed-baseline /tmp/mixed_baseline.json \
         --mixed-fresh artifacts/bench/fig_mixed_workload.json \
         --topo-baseline /tmp/topo_baseline.json \
-        --topo-fresh artifacts/bench/fig_topology_repair.json
+        --topo-fresh artifacts/bench/fig_topology_repair.json \
+        --conc-baseline /tmp/conc_baseline.json \
+        --conc-fresh artifacts/bench/fig_concurrent_repair.json
 """
 from __future__ import annotations
 
@@ -228,6 +237,56 @@ def check_topology(baseline: dict, fresh: dict, *,
     return failures
 
 
+def check_concurrent(baseline: dict, fresh: dict, *,
+                     min_speedup: float = 1.3) -> list[str]:
+    """fig_concurrent_repair gate — the concurrent scheduler must beat
+    the serialized baseline without ever oversubscribing a link:
+
+      * cluster-loss recovery makespan speedup >= `min_speedup` (the
+        detection-window overlap the multi-queue scheduler exists for);
+      * every scenario's max window of vulnerability is no worse than
+        serialized (wov_ratio >= 1), and jobs actually overlapped
+        (max_concurrent >= 2);
+      * peak per-link utilization <= 1 (+ float dust) — the fluid
+        reservation ledger's Σ rates <= capacity invariant, which
+        timings cannot check.
+    """
+    failures: list[str] = []
+    base_ids = {_row_id(r) for r in baseline.get("rows", [])}
+    rows = fresh.get("rows", [])
+    if not rows:
+        return ["fresh concurrent-repair result has no rows — "
+                "benchmark did not run"]
+    for row in rows:
+        rid = _row_id(row)
+        if rid not in base_ids:
+            failures.append(f"{rid}: no committed baseline row "
+                            f"(schema drift?)")
+        if row["peak_link_utilization"] > 1 + 1e-6:
+            failures.append(
+                f"{rid}: peak link utilization "
+                f"{row['peak_link_utilization']} exceeds capacity — the "
+                f"reservation ledger admitted an oversubscribing job")
+        if row["max_concurrent"] < 2:
+            failures.append(
+                f"{rid}: max {row['max_concurrent']} concurrent job(s) — "
+                f"the scheduler degenerated into the serialized baseline")
+        if row["wov_ratio"] < 1.0 - 1e-9:
+            failures.append(
+                f"{rid}: window of vulnerability ratio "
+                f"{row['wov_ratio']} < 1 — concurrency left data exposed "
+                f"LONGER than serialized repair")
+        floor = min_speedup if row["scenario"] == "cluster-loss" else 1.0
+        if row["speedup"] < floor:
+            failures.append(
+                f"{rid}: makespan speedup {row['speedup']}x is below "
+                f"the {floor}x floor")
+        print(f"{rid}: speedup {row['speedup']}x, wov {row['wov_ratio']}x, "
+              f"peak util {row['peak_link_utilization']}, "
+              f"max inflight {row['max_concurrent']}")
+    return failures
+
+
 def check_analysis_cert(batch: dict, *, min_certs: int = 6) -> list[str]:
     """Static-analysis gate over the symbolic verifier's certificate
     batch (`python -m repro.analysis.verify --grid --out ...`): every
@@ -309,6 +368,13 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--topo-min-oversub-slowdown", type=float, default=1.1,
                     help="cluster-loss repair at 10x core oversubscription "
                          "must be at least this much slower than at 1x")
+    ap.add_argument("--conc-baseline", type=pathlib.Path,
+                    help="committed fig_concurrent_repair.json")
+    ap.add_argument("--conc-fresh", type=pathlib.Path,
+                    help="fig_concurrent_repair.json from this run")
+    ap.add_argument("--conc-min-speedup", type=float, default=1.3,
+                    help="floor on the cluster-loss makespan speedup of "
+                         "concurrent over serialized repair")
     ap.add_argument("--analysis-cert", type=pathlib.Path,
                     help="certificate batch from "
                          "`python -m repro.analysis.verify --grid`")
@@ -350,6 +416,13 @@ def main(argv: list[str] | None = None) -> int:
             json.loads(args.topo_fresh.read_text()),
             min_cross_ratio=args.topo_min_cross_ratio,
             min_oversub_slowdown=args.topo_min_oversub_slowdown)
+    if (args.conc_baseline is None) != (args.conc_fresh is None):
+        ap.error("--conc-baseline and --conc-fresh go together")
+    if args.conc_fresh is not None:
+        failures += check_concurrent(
+            json.loads(args.conc_baseline.read_text()),
+            json.loads(args.conc_fresh.read_text()),
+            min_speedup=args.conc_min_speedup)
     if args.analysis_cert is not None:
         failures += check_analysis_cert(
             json.loads(args.analysis_cert.read_text()),

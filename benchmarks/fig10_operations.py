@@ -15,10 +15,11 @@ import time
 
 import numpy as np
 
-from repro.ckpt.store import BlockStore, ClusterTopology
+from repro.ckpt.store import BlockStore
 from repro.ckpt.stripe import StripeCodec
 from repro.core.codec import plans_for
 from repro.core.placement import default_placement
+from repro.topo import Topology
 
 from .common import (BLOCK_SIZE, NetModel, all_codes, ALL_SCHEMES, fmt_table,
                      save_result, traffic_of_read)
@@ -44,7 +45,7 @@ def bench_scheme(scheme: str, block_size: int = BENCH_BLOCK,
         # of a stripe gets its own node (StripeCodec enforces this).
         max_occupancy = max(len(placement.cluster_blocks(c))
                             for c in range(clusters))
-        topo = ClusterTopology(clusters, max(4, max_occupancy + 2))
+        topo = Topology(clusters, max(4, max_occupancy + 2))
         store = BlockStore(topo)
         codec = StripeCodec(code, store, block_size=block_size,
                             placement=placement)

@@ -123,14 +123,14 @@ def sweep_rows(n_stripes: int) -> list[dict]:
 # Part 2: gateway aggregation on the degraded-read data path
 # ---------------------------------------------------------------------------
 
-def _degraded_reads(code, placement, block: int, *, use_kernels: bool,
+def _degraded_reads(code, placement, block: int, *, backend: str,
                     aggregation: bool, n_stripes: int, block_size: int):
     """S same-block degraded reads through the front-end; returns
     (payloads, class stats, launches, plan remote-cluster count)."""
     topo = deploy_topology(placement, spare_nodes=1)
     store = BlockStore(topo)
     codec = StripeCodec(code, store, block_size=block_size,
-                        placement=placement, use_kernels=use_kernels,
+                        placement=placement, backend=backend,
                         gateway_aggregation=aggregation)
     rng = np.random.default_rng(42)
     payload = rng.integers(0, 256, code.k * block_size * n_stripes,
@@ -175,16 +175,16 @@ def aggregation_rows(n_stripes: int, block_size: int) -> list[dict]:
                            - placement.cross_cluster_cost(
                                b, plans[b].sources, aggregate=True)))
         runs = {}
-        for use_kernels in (True, False):
+        for backend in ("kernels", "numpy"):
             for agg in (True, False):
-                runs[(use_kernels, agg)] = _degraded_reads(
-                    code, placement, block, use_kernels=use_kernels,
+                runs[(backend, agg)] = _degraded_reads(
+                    code, placement, block, backend=backend,
                     aggregation=agg, n_stripes=n_stripes,
                     block_size=block_size)
         byte_identical = len({tuple(bytes(x) for x in outs)
                               for outs, _, _, _ in runs.values()}) == 1
-        _, raw_stats, raw_launches, _ = runs[(True, False)]
-        _, agg_stats, agg_launches, folding = runs[(True, True)]
+        _, raw_stats, raw_launches, _ = runs[("kernels", False)]
+        _, agg_stats, agg_launches, folding = runs[("kernels", True)]
         ceiling = 1 + folding          # one combine + one fold per cluster
         rows.append({
             "scheme": name, "reads": n_stripes, "block": block,

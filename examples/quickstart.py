@@ -10,12 +10,13 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.ckpt.store import BlockStore, ClusterTopology
+from repro.ckpt.store import BlockStore
 from repro.ckpt.stripe import StripeCodec
 from repro.core.codec import decode_plan, single_recovery_plan
 from repro.core.codes import make_unilrc
 from repro.core.metrics import locality_metrics
 from repro.core.placement import place_unilrc
+from repro.topo import Topology
 
 
 def main():
@@ -25,7 +26,7 @@ def main():
           f"d={code.meta['d']}, groups={len(code.groups)})")
 
     # 2. encode ----------------------------------------------------------
-    topo = ClusterTopology(num_clusters=6, nodes_per_cluster=8)
+    topo = Topology(num_clusters=6, nodes_per_cluster=8)
     store = BlockStore(topo)
     codec = StripeCodec(code, store, block_size=1 << 16)
     rng = np.random.default_rng(0)

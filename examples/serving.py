@@ -14,13 +14,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.ckpt import BlockStore, CheckpointManager, ClusterTopology
+from repro.ckpt import BlockStore, CheckpointManager
 from repro.configs import get_config
 from repro.core.codes import make_unilrc
 from repro.io import Priority, RequestFrontend
 from repro.models import init_params
 from repro.models.model import pad_cache_to
 from repro.train import make_serve_decode, make_serve_prefill
+from repro.topo import Topology
 
 
 def main():
@@ -36,7 +37,7 @@ def main():
     params = init_params(cfg, key)
 
     # --- EC-protected weight registry ------------------------------------
-    topo = ClusterTopology(6, 8)
+    topo = Topology(6, 8)
     store = BlockStore(topo)
     mgr = CheckpointManager(store, make_unilrc(1, 6), block_size=1 << 14)
     mgr.save(params, step=0)

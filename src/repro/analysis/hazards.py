@@ -340,7 +340,8 @@ def _workload_reports() -> dict[str, HazardReport]:
     mixed read/recover/update flushes, same-stripe update chains,
     mixed payload lengths — and analyze each (numpy backend: the
     analysis itself never executes the ops)."""
-    from repro.ckpt.store import BlockStore, ClusterTopology
+    from repro.ckpt.store import BlockStore
+    from repro.topo import Topology
     from repro.ckpt.stripe import StripeCodec
     from repro.core.codes import make_unilrc
     from repro.io.backend import NumpyBackend
@@ -350,7 +351,7 @@ def _workload_reports() -> dict[str, HazardReport]:
     rng = np.random.default_rng(0)
 
     def fresh():
-        store = BlockStore(ClusterTopology(4, 8))
+        store = BlockStore(Topology(4, 8))
         codec = StripeCodec(code, store, block_size=BS,
                             backend=NumpyBackend())
         codec.write(rng.integers(0, 256, size=4 * code.k * BS,

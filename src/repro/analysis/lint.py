@@ -24,6 +24,13 @@ story leans on:
          `recover_single`/`apply_decode` in a `for` re-creates the
          launch-per-stripe regime the batched engine exists to kill;
          use the `*_many` variants.
+  RA005  deprecation hygiene — in-repo use of a retired API spelling:
+         the `use_kernels=` keyword (pass `backend=` instead) or the
+         `ClusterTopology` alias (use `repro.topo.Topology`). The shim
+         definitions themselves (`io/backend.py`, `ckpt/store.py`,
+         `ckpt/__init__.py`, and the constructors that route the shim
+         in `ckpt/stripe.py` / `ckpt/manager.py`) are exempt by path;
+         the tests that pin the shims carry explicit waivers.
 
 Waive a finding with a same-line comment: `# repro-lint: allow=RA001`
 (comma-separated rule ids) — used by the kernel oracle tests that call
@@ -57,6 +64,14 @@ GF_CRITICAL = (
     "io/backend.py", "io/engine.py", "ckpt/stripe.py",
 )
 HOT_PATHS = ("io/engine.py", "io/frontend.py", "ckpt/stripe.py")
+# Files allowed to spell the deprecated APIs: where the shims are
+# defined and the constructors that route them (RA005 scope).
+DEPRECATION_SHIM_PATHS = (
+    "io/backend.py", "ckpt/store.py", "ckpt/__init__.py",
+    "ckpt/stripe.py", "ckpt/manager.py",
+)
+DEPRECATED_NAMES = frozenset({"ClusterTopology"})
+DEPRECATED_KEYWORDS = frozenset({"use_kernels"})
 FLOAT_DTYPES = frozenset({"float", "float16", "float32", "float64",
                           "double", "half"})
 _WAIVER_RE = re.compile(r"#\s*repro-lint:\s*allow=([A-Z0-9,\s]+)")
@@ -92,11 +107,12 @@ def _is_float_dtype(node: ast.expr) -> bool:
 
 class _FileLinter(ast.NodeVisitor):
     def __init__(self, path: str, *, gf_critical: bool, hot_path: bool,
-                 in_kernels: bool):
+                 in_kernels: bool, shim_path: bool = False):
         self.path = path
         self.gf_critical = gf_critical
         self.hot_path = hot_path
         self.in_kernels = in_kernels
+        self.shim_path = shim_path
         self.findings: list[Finding] = []
         self.loop_depth = 0
         # names imported from repro.kernels.* that alias a raw kernel or
@@ -114,6 +130,12 @@ class _FileLinter(ast.NodeVisitor):
                         alias.name
                 if alias.name == "ops":
                     self.ops_modules.add(alias.asname or "ops")
+        if not self.shim_path:
+            for alias in node.names:
+                if alias.name in DEPRECATED_NAMES:
+                    self._emit(node, "RA005",
+                               f"import of deprecated `{alias.name}` — "
+                               f"use repro.topo.Topology")
         self.generic_visit(node)
 
     def visit_Import(self, node: ast.Import) -> None:
@@ -176,6 +198,13 @@ class _FileLinter(ast.NodeVisitor):
                                "re-enabling writes on a sealed plan "
                                "matrix — cached plans are shared; copy "
                                "instead")
+        if not self.shim_path:
+            for kw in node.keywords:
+                if kw.arg in DEPRECATED_KEYWORDS:
+                    self._emit(kw.value, "RA005",
+                               f"deprecated `{kw.arg}=` keyword — pass "
+                               f"backend='kernels'/'numpy' (or a Backend "
+                               f"instance) instead")
         if self.gf_critical:
             if (isinstance(node.func, ast.Attribute)
                     and node.func.attr == "astype"
@@ -188,6 +217,18 @@ class _FileLinter(ast.NodeVisitor):
                     self._emit(node, "RA002",
                                "float dtype in a GF-critical module — "
                                "GF(2^8) symbols are uint8")
+        self.generic_visit(node)
+
+    # -- names (RA005) --------------------------------------------------------
+    def visit_Name(self, node: ast.Name) -> None:
+        # Bare `ClusterTopology(...)` / annotations; imports are caught
+        # separately so one waiver on the import line is not enough to
+        # hide every downstream use.
+        if (not self.shim_path and isinstance(node.ctx, ast.Load)
+                and node.id in DEPRECATED_NAMES):
+            self._emit(node, "RA005",
+                       f"deprecated name `{node.id}` — use "
+                       f"repro.topo.Topology")
         self.generic_visit(node)
 
     # -- assignments (RA003) --------------------------------------------------
@@ -237,7 +278,8 @@ def lint_source(source: str, path: str) -> list[Finding]:
         path,
         gf_critical=any(norm.endswith(s) for s in GF_CRITICAL),
         hot_path=any(norm.endswith(s) for s in HOT_PATHS),
-        in_kernels=f"{KERNEL_PKG}/" in norm)
+        in_kernels=f"{KERNEL_PKG}/" in norm,
+        shim_path=any(norm.endswith(s) for s in DEPRECATION_SHIM_PATHS))
     linter.visit(tree)
     lines = source.splitlines()
     return [f for f in linter.findings

@@ -52,12 +52,17 @@ class _Saved:
 
 class CheckpointManager:
     def __init__(self, store: BlockStore, code: Code | None = None, *,
-                 block_size: int = 1 << 18, use_kernels: bool = True):
+                 block_size: int = 1 << 18,
+                 backend=None, use_kernels: bool | None = None):
         self.store = store
         self.code = code or choose_code(store.topo)
         self.block_size = block_size
-        self.codec = StripeCodec(self.code, store, block_size=block_size,
-                                 use_kernels=use_kernels)
+        # resolve here so the use_kernels= deprecation warning points at
+        # the caller, then hand the concrete Backend down.
+        from repro.io.backend import resolve_backend
+        self.codec = StripeCodec(
+            self.code, store, block_size=block_size,
+            backend=resolve_backend(backend, use_kernels=use_kernels))
         self._saved: dict[int, _Saved] = {}
         self._next_stripe = 0
 

@@ -26,7 +26,11 @@ import pathlib
 
 from repro.topo import Topology
 
-ClusterTopology = Topology      # historical name, used by every call site
+# Deprecated alias — the cluster/node model's one public name is
+# `repro.topo.Topology`. Kept only so external code importing the
+# historical `ckpt.ClusterTopology` keeps working; in-repo call sites
+# were migrated (the repo lint flags new uses, rule RA005).
+ClusterTopology = Topology
 
 
 class NodeFailure(Exception):
@@ -64,7 +68,7 @@ class TrafficStats:
 class BlockStore:
     """In-memory block store with failure + straggler simulation."""
 
-    def __init__(self, topo: ClusterTopology):
+    def __init__(self, topo: Topology):
         self.topo = topo
         self._blocks: dict[tuple, bytes] = {}       # (stripe, block) -> bytes
         self._block_node: dict[tuple, int] = {}
@@ -196,7 +200,7 @@ class DiskBlockStore(BlockStore):
     drill in examples/train_with_failures.py) can re-open the store.
     """
 
-    def __init__(self, topo: ClusterTopology, root: str | os.PathLike):
+    def __init__(self, topo: Topology, root: str | os.PathLike):
         super().__init__(topo)
         self.root = pathlib.Path(root)
         self.root.mkdir(parents=True, exist_ok=True)

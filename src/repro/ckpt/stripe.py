@@ -19,9 +19,10 @@ every method *plans* — decides which blocks to read, recover, encode or
 patch — and emits op descriptors to a `repro.io.CodingEngine`, which
 batches compatible ops (across independent requests, when driven through
 `repro.io.RequestFrontend`) into single backend calls. The backend is
-pluggable: `KernelBackend` (JAX/Pallas MXU/VPU kernels) or
-`NumpyBackend` (the byte-identical host oracle) — the old `use_kernels`
-if/else branches are gone; the flag now just selects a backend.
+pluggable: `backend=` takes a `Backend` instance or a registry name
+("kernels" for the JAX/Pallas MXU/VPU kernels, "numpy" for the
+byte-identical host oracle); the old `use_kernels` bool survives only
+as a deprecation-warned shim through `resolve_backend`.
 
 The synchronous API is preserved and byte-identical: each public method
 submits its ops and flushes the engine immediately. The two-phase
@@ -48,7 +49,9 @@ from repro.io.backend import Backend, resolve_backend
 from repro.io.engine import CodingEngine, OpHandle
 from repro.kernels import ops
 
-from .store import BlockStore, ClusterTopology
+from repro.topo import Topology
+
+from .store import BlockStore
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,8 +121,9 @@ def _stats_from_handles(handles: dict[tuple[int, int], OpHandle]
 class StripeCodec:
     """Encode/decode byte buffers as stripes of a given Code on a store.
 
-    `backend` picks the execution tier (`use_kernels` is kept as the
-    legacy spelling: True -> KernelBackend, False -> NumpyBackend).
+    `backend` picks the execution tier — a `Backend` instance or a
+    registry name ("kernels"/"numpy"); the legacy `use_kernels` bool is
+    a deprecation-warned shim routed through `resolve_backend`.
     `max_batch_stripes` caps how many stripes ride one batched backend
     call: peak memory for encode is ~max_batch_stripes * n * block_size
     bytes (host staging + codeword array), so an unbounded batch over a
@@ -130,8 +134,8 @@ class StripeCodec:
     def __init__(self, code: Code, store: BlockStore, *,
                  block_size: int = 1 << 20,
                  placement: Placement | None = None,
-                 use_kernels: bool = True,
-                 backend: Backend | None = None,
+                 backend: Backend | str | None = None,
+                 use_kernels: bool | None = None,    # deprecated shim
                  max_batch_stripes: int = 64,
                  gateway_aggregation: bool = False):
         self.code = code
@@ -514,7 +518,7 @@ class StripeCodec:
         return finish()
 
 
-def choose_code(topo: ClusterTopology, *, target_rate: float = 0.85,
+def choose_code(topo: Topology, *, target_rate: float = 0.85,
                 min_mttdl_years: float = 1e9,
                 params: MTTDLParams | None = None) -> Code:
     """Pick UniLRC(α, z=num_clusters) meeting a storage-efficiency target,

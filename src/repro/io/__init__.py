@@ -2,12 +2,16 @@
 (with gateway XOR pre-folds), priority-classed front-end with per-link-
 tier byte accounting. Sits between the kernels and the stripe planner:
 topo → core → kernels → io → ckpt → launch."""
-from .backend import Backend, KernelBackend, NumpyBackend, resolve_backend
+from .backend import (BACKENDS, Backend, KernelBackend, NumpyBackend,
+                      resolve_backend)
 from .engine import CodingEngine, FlushStats, OpHandle
+# Priority/ClassStats canonically live in repro.priority; re-exported
+# here because the io layer is where most consumers meet them.
 from .frontend import (ClassStats, Priority, RequestFrontend, RequestHandle,
                        ScrubReport)
 
-__all__ = ["Backend", "KernelBackend", "NumpyBackend", "resolve_backend",
+__all__ = ["BACKENDS", "Backend", "KernelBackend", "NumpyBackend",
+           "resolve_backend",
            "CodingEngine", "FlushStats", "OpHandle",
            "ClassStats", "Priority", "RequestFrontend", "RequestHandle",
            "ScrubReport"]

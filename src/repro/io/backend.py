@@ -120,9 +120,43 @@ class NumpyBackend(Backend):
         return out
 
 
-def resolve_backend(backend: Backend | None = None, *,
-                    use_kernels: bool = True) -> Backend:
-    """The one place the legacy `use_kernels` flag becomes a backend."""
-    if backend is not None:
+#: Registry behind the string spelling of `backend=`. Constructors are
+#: stateless, so a fresh instance per resolve is fine.
+BACKENDS: dict[str, type[Backend]] = {
+    KernelBackend.name: KernelBackend,
+    NumpyBackend.name: NumpyBackend,
+}
+
+
+def resolve_backend(backend: Backend | str | None = None, *,
+                    use_kernels: bool | None = None) -> Backend:
+    """The one place a backend spec becomes a `Backend`.
+
+    `backend` is the primary API: a `Backend` instance, a registry name
+    ("kernels" / "numpy"), or None for the default (kernels). The
+    legacy `use_kernels` bool is a deprecation-warned shim — public
+    constructors (`StripeCodec`, `CheckpointManager`) route it here so
+    the warning and the mapping live in exactly one place.
+    """
+    if use_kernels is not None:
+        import warnings
+        warnings.warn(
+            "use_kernels= is deprecated; pass backend='kernels' or "
+            "backend='numpy' (or a Backend instance) instead",
+            DeprecationWarning, stacklevel=3)
+        if backend is not None:
+            raise TypeError("pass backend= or use_kernels=, not both")
+        return KernelBackend() if use_kernels else NumpyBackend()
+    if backend is None:
+        return KernelBackend()
+    if isinstance(backend, Backend):
         return backend
-    return KernelBackend() if use_kernels else NumpyBackend()
+    if isinstance(backend, str):
+        try:
+            return BACKENDS[backend]()
+        except KeyError:
+            raise ValueError(
+                f"unknown backend {backend!r}; expected one of "
+                f"{sorted(BACKENDS)}") from None
+    raise TypeError(f"backend must be a Backend, str, or None, "
+                    f"got {type(backend).__name__}")

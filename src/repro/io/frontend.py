@@ -30,39 +30,18 @@ after the class's batched reads have executed.
 from __future__ import annotations
 
 import dataclasses
-import enum
 import time
 from collections.abc import Callable
 
 import numpy as np
 
 from repro.kernels import ops as kernel_ops
+# Canonical home is repro.priority (shared with the repair scheduler's
+# risk tiers); re-exported here for the historical import path.
+from repro.priority import ClassStats, Priority
 
-
-class Priority(enum.IntEnum):
-    """Lower value = served earlier. Client reads outrank repair."""
-    CLIENT_READ = 0
-    DEGRADED_READ = 1
-    BACKGROUND = 2        # rebuild / scrub
-
-
-@dataclasses.dataclass
-class ClassStats:
-    """Cumulative accounting for one priority class."""
-    requests: int = 0
-    failed_requests: int = 0
-    blocks: int = 0              # blocks read/recovered/placed by the class
-    launches: int = 0            # kernel launches attributed to the class
-    inner_bytes: int = 0         # link tier: bytes that stayed behind a gateway
-    cross_bytes: int = 0         # link tier: bytes that crossed a gateway
-    aggregated_bytes: int = 0    # of cross_bytes: shipped as pre-folded blocks
-    flushes: int = 0
-    total_latency_s: float = 0.0
-    max_latency_s: float = 0.0
-
-    @property
-    def mean_latency_s(self) -> float:
-        return self.total_latency_s / self.requests if self.requests else 0.0
+__all__ = ["Priority", "ClassStats", "ScrubReport", "RequestHandle",
+           "RequestFrontend"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,10 +133,15 @@ class RequestFrontend:
 
     def submit_rebuild(self, pairs: list[tuple[int, int]], *,
                        reader_cluster: int | None = None,
-                       exclude_node: int = -1) -> RequestHandle:
-        """Background re-protect; result is (placed, RecoveryStats)."""
+                       exclude_node: int = -1,
+                       priority: Priority = Priority.BACKGROUND
+                       ) -> RequestHandle:
+        """Re-protect; result is (placed, RecoveryStats). Routine rebuild
+        rides BACKGROUND; the repair scheduler escalates an almost-exposed
+        stripe's rebuild to its RAFI risk tier (URGENT/EXPEDITED alias
+        onto the serving classes — see repro.priority)."""
         return self._enqueue(
-            Priority.BACKGROUND, "rebuild", len(dict.fromkeys(pairs)),
+            Priority(priority), "rebuild", len(dict.fromkeys(pairs)),
             lambda: self.codec.plan_rebuild(
                 pairs, reader_cluster=reader_cluster,
                 exclude_node=exclude_node))
@@ -292,7 +276,8 @@ class RequestFrontend:
     # -- repair-scheduler convenience ---------------------------------------
     def rebuild(self, pairs: list[tuple[int, int]], *,
                 reader_cluster: int | None = None,
-                exclude_node: int = -1):
+                exclude_node: int = -1,
+                priority: Priority = Priority.BACKGROUND):
         """Submit one rebuild request and drain it immediately, returning
         the same `RepairReport` the codec's synchronous path produces —
         the hook `sim/repair.py`'s data-path mode drives. Launch/traffic
@@ -306,7 +291,8 @@ class RequestFrontend:
         inner0, cross0 = traffic.inner_bytes, traffic.cross_bytes
         agg0 = traffic.aggregated_bytes
         handle = self.submit_rebuild(pairs, reader_cluster=reader_cluster,
-                                     exclude_node=exclude_node)
+                                     exclude_node=exclude_node,
+                                     priority=priority)
         self.drain()
         placed, stats = handle.result()
         return RepairReport(

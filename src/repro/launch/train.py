@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.ckpt import (BlockStore, CheckpointManager, ClusterTopology)
+from repro.ckpt import BlockStore, CheckpointManager
+from repro.topo import Topology
 from repro.configs import get_config
 from repro.core.codes import make_unilrc
 from repro.data import DataConfig, SyntheticTokenDataset
@@ -78,7 +79,7 @@ def run(argv=None):
           f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
     # --- EC checkpoint layer (the paper's technique) -----------------------
-    topo = ClusterTopology(args.clusters, args.nodes_per_cluster)
+    topo = Topology(args.clusters, args.nodes_per_cluster)
     store = BlockStore(topo)
     code = make_unilrc(args.alpha, args.clusters)
     mgr = CheckpointManager(store, code, block_size=1 << 16)

@@ -1,0 +1,93 @@
+"""The one scheduling-priority vocabulary every layer shares.
+
+Two subsystems used to speak different dialects about the same thing:
+the io front-end queued requests in CLIENT_READ / DEGRADED_READ /
+BACKGROUND classes, while the repair scheduler ranked jobs with a
+private integer ("multi-failure first"). RAFI-style risk-aware repair
+(CR-SIM's `RAFIEventHandler` lineage) makes that split untenable: an
+almost-exposed stripe's rebuild must be able to outrank ordinary
+degraded-read traffic, which only works if repair risk tiers and
+serving classes live on ONE scale.
+
+`Priority` is that scale. The serving classes are the canonical
+members; the repair risk tiers are *aliases* onto the same values, so
+`Priority.URGENT is Priority.CLIENT_READ` — one enum, two readings:
+
+  ==========  =============  ===========================================
+  value       serving class  repair risk tier (aliases)
+  ==========  =============  ===========================================
+  0           CLIENT_READ    URGENT    — live erasures ≥ f: one more
+                              failure in the stripe loses data, so its
+                              repair rides ahead of everything
+  1           DEGRADED_READ  EXPEDITED — 2 ≤ erasures < f: degraded but
+                              not yet at the exposure edge
+  2           BACKGROUND     NORMAL    — single erasure, routine
+                              re-protect
+  ==========  =============  ===========================================
+
+This module sits below every other package (stdlib-only) so `sim`,
+`io`, and the benchmarks can import it without cycles. `ClassStats`
+rides along because it is the generic per-class accounting record the
+front-end (and anything else that batches by `Priority`) keeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+
+class Priority(enum.IntEnum):
+    """Lower value = served earlier. Client reads outrank repair —
+    except URGENT repairs, which ARE client-priority work: losing the
+    stripe would fail every future read of it."""
+    CLIENT_READ = 0
+    DEGRADED_READ = 1
+    BACKGROUND = 2        # rebuild / scrub
+
+    # RAFI risk-tier reading of the same scale (enum aliases: identity
+    # holds, iteration does not repeat them).
+    URGENT = 0
+    EXPEDITED = 1
+    NORMAL = 2
+
+
+def risk_tier(live_erasures: int, tolerable: int) -> Priority:
+    """Map a stripe's live erasure count onto the shared scale.
+
+    `tolerable` is f, the worst-case failure count the code always
+    survives (core.mttdl.tolerable_failures). At `live_erasures >= f`
+    the stripe is one failure from the edge — URGENT; two-or-more but
+    below the edge is EXPEDITED; a single erasure is NORMAL
+    re-protect. (f <= 1 codes have no EXPEDITED band: any
+    multi-erasure is already at-or-past the edge.)"""
+    if live_erasures >= max(tolerable, 2):
+        return Priority.URGENT
+    if live_erasures >= 2:
+        return Priority.EXPEDITED
+    return Priority.NORMAL
+
+
+def failures_to_exposure(live_erasures: int, tolerable: int) -> int:
+    """How many further failures until the stripe may be unrecoverable —
+    the RAFI time-to-exposure ordinal (0 = the next failure can lose
+    data). Within one risk tier, lower = repaired first."""
+    return max(tolerable - live_erasures, 0)
+
+
+@dataclasses.dataclass
+class ClassStats:
+    """Cumulative accounting for one priority class."""
+    requests: int = 0
+    failed_requests: int = 0
+    blocks: int = 0              # blocks read/recovered/placed by the class
+    launches: int = 0            # kernel launches attributed to the class
+    inner_bytes: int = 0         # link tier: bytes that stayed behind a gateway
+    cross_bytes: int = 0         # link tier: bytes that crossed a gateway
+    aggregated_bytes: int = 0    # of cross_bytes: shipped as pre-folded blocks
+    flushes: int = 0
+    total_latency_s: float = 0.0
+    max_latency_s: float = 0.0
+
+    @property
+    def mean_latency_s(self) -> float:
+        return self.total_latency_s / self.requests if self.requests else 0.0

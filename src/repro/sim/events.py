@@ -84,8 +84,9 @@ class Simulator:
     """Event loop: register handlers, schedule, run to a horizon.
 
     Handlers receive (sim, event) and may schedule/cancel freely. The
-    clock only moves at event boundaries; `schedule(delay, ...)` is the
-    only way to move work into the future, so causality is structural.
+    clock only moves at event boundaries; `schedule(delay, ...)` (and
+    its absolute-time twin `schedule_at`) is the only way to move work
+    into the future, so causality is structural.
     """
 
     def __init__(self):
@@ -105,6 +106,15 @@ class Simulator:
         if delay < 0:
             raise ValueError(f"cannot schedule into the past (delay={delay})")
         return self.queue.push(self.now + delay, kind, **payload)
+
+    def schedule_at(self, time: float, kind: str, **payload) -> Event:
+        """Absolute-time scheduling (setup code seeding lifetimes drawn
+        on the t=0 axis). Same causality rule as `schedule`: the event
+        may not land before `now`."""
+        if time < self.now:
+            raise ValueError(
+                f"cannot schedule into the past (t={time} < now={self.now})")
+        return self.queue.push(time, kind, **payload)
 
     def cancel(self, ev: Event) -> None:
         self.queue.cancel(ev)

@@ -110,7 +110,7 @@ def simulate_stripe_mttdl(code_n: int, f: int, C_blocks: float,
         sim.on("fail", on_fail)
         sim.on("repair", on_repair)
         for b in range(code_n):
-            sim.queue.push(float(init[t, b]), "fail", block=b)
+            sim.schedule_at(float(init[t, b]), "fail", block=b)
         sim.run(max_events=max_events_per_trial)
         if len(failed) <= f:
             raise RuntimeError(
@@ -157,6 +157,10 @@ class SimConfig:
     # pipe semantics; num_clusters/nodes_per_cluster must match the
     # placement's deployment when given.
     topology: Topology | None = None
+    # Concurrent repair cap (link mode only): None = admission-limited,
+    # 1 = the serialized baseline. The pipe mode is inherently serial
+    # (one Markov repair server) and rejects any other value.
+    max_inflight_repairs: int | None = None
 
     def resolved_placement(self) -> Placement:
         return self.placement or default_placement(self.code)
@@ -303,11 +307,12 @@ class DssTrial:
             stripe_missing=lambda sid: self.missing.get(sid, frozenset()),
             on_repaired=self._on_repaired,
             codec=self.codec,
-            topology=cfg.topology)
+            topology=cfg.topology,
+            max_inflight=cfg.max_inflight_repairs)
 
         self._node_ev: dict[int, Event] = {}
         for node in range(self.num_nodes):
-            self._node_ev[node] = self.sim.queue.push(
+            self._node_ev[node] = self.sim.schedule_at(
                 float(init_lifetimes[node]), self.NODE_FAIL, node=node)
         gap = self.model.next_cluster_loss(self.rng)
         if gap is not None:

@@ -1,5 +1,5 @@
-"""Bandwidth-constrained repair scheduling over the topology's links,
-plan-grouped like the batched recovery engine.
+"""Concurrent, risk-aware, bandwidth-constrained repair scheduling over
+the topology's links, plan-grouped like the batched recovery engine.
 
 The scheduler charges each repair job against a `repro.topo.NetworkModel`
 built in the Markov chain's units (ε(N-1)B — the exact number behind
@@ -10,33 +10,61 @@ z·pipe/oversubscription). Two charging modes:
     reading (`NetworkModel.pipe_time`), so a whole-node repair takes
     C·S/bw = 1/μ and multi-failure stripes finish in T (μ' = 1/T) —
     the scheduler and the Markov model agree on units by construction
-    (tests/test_mttdl.py pins this).
+    (tests/test_mttdl.py pins this). The chain has ONE repair server,
+    so this mode is always serial and its job ordering is frozen
+    (multi-failure first, then lowest block id) — pipe-mode
+    trajectories are bit-identical across scheduler generations.
   * explicit `topology`: per-link bottleneck scheduling
-    (`NetworkModel.bottleneck`): survivor-cluster uplinks, the
-    oversubscribed core, the home cluster's downlink and node-NIC
-    ingest each gate the transfer, so a correlated cluster loss
-    contends on the surviving uplinks and repair time depends on the
-    core oversubscription factor — the regime the closed form cannot
-    express (benchmarks/fig_topology_repair.py). Multi-failure jobs
-    are charged max(T, transfer): detection-limited only until the
-    bytes themselves dominate.
+    (`NetworkModel.bottleneck`) *with concurrency*. Jobs are admitted
+    against a fluid per-link reservation ledger
+    (`repro.topo.LinkReservations`): a job of duration d reserves
+    bytes/d on every link it touches and is admitted only if every
+    reservation fits the link's residual capacity. Consequences:
+    jobs whose bottleneck links are provably disjoint overlap; jobs
+    sharing a saturated bottleneck serialize exactly as before; and
+    detection-limited multi-failure jobs (duration T > transfer time)
+    overlap their detection windows while the shared links stay at —
+    never above — capacity. Σ rates ≤ capacity per link is the
+    invariant CI gates on (fig_concurrent_repair).
 
-Pairs are grouped by recovery plan (same block id => same minimal
-plan, the fast-path invariant `StripeCodec.recover_blocks` batches on),
-so a single-failure job is exactly one batched kernel launch in
-data-path mode; a multi-failure job's pairs are further pattern-grouped
-by the codec engine — one launch per distinct live erasure pattern.
+Link-mode queueing is multi-queue and risk-aware (RAFI-style, cf.
+CR-SIM's RAFIEventHandler): candidate jobs are ranked by
+
+  1. risk tier — `repro.priority.risk_tier` maps a stripe's live
+     erasure count onto the io layer's priority classes (URGENT =
+     erasures ≥ f aliases CLIENT_READ, EXPEDITED aliases
+     DEGRADED_READ, single-erasure NORMAL aliases BACKGROUND), so the
+     scheduler, the front-end, and the ledger speak one enum;
+  2. time-to-exposure — fewest further failures until possible data
+     loss first;
+  3. source-cluster rotation — among equal-risk jobs, round-robin by
+     the dominant survivor (uplink) cluster so a correlated cluster
+     loss keeps every survivor uplink busy instead of draining
+     clusters in placement order;
+  4. block id — the deterministic tie-break.
+
+Admission scans ALL candidate groups in that order (skip-ahead: a job
+that cannot fit right now does not head-of-line-block a disjoint one
+behind it).
+
+Pairs are grouped by recovery plan within a risk tier (same block id
+=> same minimal plan, the fast-path invariant
+`StripeCodec.recover_blocks` batches on), so a single-failure job is
+exactly one batched kernel launch in data-path mode; a multi-failure
+job's pairs are further pattern-grouped by the codec engine — one
+launch per distinct live erasure pattern.
 
 Cross-cluster byte accounting routes through the network model's
 aggregation-validity check: XOR-linear plans ship one pre-folded block
 per remote cluster, Cauchy/multi-target plans ship per block.
 
 In data-path mode the scheduler drives real bytes through the request
-front-end (`repro.io.RequestFrontend.rebuild`, BACKGROUND priority — so
-repair traffic shares the coalescing engine with, and yields to, any
-concurrent client reads on the same codec) and folds the returned
-kernel-launch delta into its ledger — the launch counters act as a
-traffic oracle: launches == plan groups actually repaired.
+front-end (`repro.io.RequestFrontend.rebuild`) at the job's risk tier —
+URGENT repairs ride the client-read class, routine re-protects stay
+BACKGROUND behind any concurrent client reads on the same codec — and
+folds the returned kernel-launch delta into its ledger; the launch
+counters act as a traffic oracle: launches == plan groups actually
+repaired.
 """
 from __future__ import annotations
 
@@ -47,9 +75,11 @@ from collections.abc import Callable, Set as AbstractSet
 from repro.core.codec import decode_plan_cached, plans_for
 from repro.core.metrics import (effective_block_traffic,
                                 per_block_repair_traffic)
-from repro.core.mttdl import MTTDLParams, repair_bandwidth_TB_per_hour
+from repro.core.mttdl import (MTTDLParams, repair_bandwidth_TB_per_hour,
+                              tolerable_failures)
 from repro.core.placement import Placement
-from repro.topo import LinkSchedule, NetworkModel, Topology
+from repro.priority import Priority, failures_to_exposure, risk_tier
+from repro.topo import LinkReservations, LinkSchedule, NetworkModel, Topology
 
 from .events import Event, Simulator
 
@@ -77,6 +107,11 @@ class RepairLedger:
     multi_erasure_blocks: int = 0  # blocks healed via pattern decodes
     bottlenecks: collections.Counter = dataclasses.field(
         default_factory=collections.Counter)  # jobs by binding link kind
+    jobs_by_class: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)  # jobs by Priority risk tier
+    max_concurrent_jobs: int = 0   # high-water mark of in-flight jobs
+    peak_link_utilization: float = 0.0  # max over time+links of used/capacity
+    max_exposure_hours: float = 0.0  # worst damage -> re-protect window
 
     @property
     def cross_traffic_fraction(self) -> float:
@@ -85,14 +120,16 @@ class RepairLedger:
 
 
 class RepairScheduler:
-    """Per-link, plan-grouped, multi-failure-prioritised repair.
+    """Per-link, plan-grouped, risk-tiered concurrent repair.
 
     Wiring: the owner (montecarlo.DssTrial) constructs the scheduler with
     callbacks, calls `damaged(pairs)` as failures land, and receives
     `on_repaired(pairs)` when a job completes. The scheduler registers
     its own REPAIR_DONE handler on the simulator. Passing an explicit
     `topology` switches from the Markov-calibrated pipe to per-link
-    bottleneck charging (see module docstring).
+    bottleneck charging with concurrent admission (see module
+    docstring); `max_inflight=1` there recovers the serialized
+    baseline the concurrency benchmarks compare against.
     """
 
     def __init__(self, sim: Simulator, placement: Placement,
@@ -102,13 +139,14 @@ class RepairScheduler:
                  on_repaired: Callable[[list[tuple[int, int]]], None],
                  codec=None,
                  topology: Topology | None = None,
+                 max_inflight: int | None = None,
                  exclude_node_of: Callable[[int, int], int] | None = None):
         self.sim = sim
         self.placement = placement
         self.params = params
         self.block_TB = block_TB
         # currently-missing blocks of a stripe (including ones queued or in
-        # flight here) — drives both multi-failure prioritisation and the
+        # flight here) — drives both risk-tier prioritisation and the
         # actual-plan traffic accounting.
         self.stripe_missing = stripe_missing
         self.on_repaired = on_repaired
@@ -122,12 +160,22 @@ class RepairScheduler:
         code = placement.code
         self._bw = repair_bandwidth_TB_per_hour(params)
         self._use_links = topology is not None
+        if max_inflight is not None and max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1")
+        if not self._use_links and max_inflight not in (None, 1):
+            # The Markov chain models ONE repair server; overlapping
+            # pipe-mode jobs would silently break the μ calibration.
+            raise ValueError("concurrent repair (max_inflight > 1) "
+                             "requires an explicit topology")
+        self.max_inflight = (1 if not self._use_links else max_inflight)
         if topology is None:
             topology = Topology(placement.num_clusters,
                                 max(placement.cluster_sizes()))
         self.topology = topology
         self.net = NetworkModel.from_repair_pipe(topology, self._bw,
                                                  params.delta)
+        self.reservations = LinkReservations(self.net)
+        self._tolerable = tolerable_failures(code)
         self._traffic = per_block_repair_traffic(code, placement)
         self._eff = effective_block_traffic(code, placement, params.delta)
         plans = plans_for(code)
@@ -137,35 +185,79 @@ class RepairScheduler:
             placement.assignment, b, plans[b].sources, plan=plans[b])
             for b in range(code.n)]
         self._pending: dict[tuple[int, int], None] = {}   # ordered set
-        self._in_flight: Event | None = None
+        self._damaged_at: dict[tuple[int, int], float] = {}
+        # In-flight jobs: event seq -> per-link rates reserved for it
+        # (Event itself is an eq-comparable dataclass, not hashable).
+        self._active: dict[int, dict[tuple, float]] = {}
+        self._rr_cluster = 0       # source-cluster round-robin cursor
         sim.on(REPAIR_DONE, self._handle_done)
 
     # -- damage intake -------------------------------------------------------
     def damaged(self, pairs: list[tuple[int, int]]) -> None:
         for p in pairs:
             self._pending.setdefault(p, None)
+            # first-damage timestamp survives requeues: the window of
+            # vulnerability runs until the block is actually re-placed.
+            self._damaged_at.setdefault(p, self.sim.now)
         self._kick()
 
     @property
     def pending(self) -> int:
         return len(self._pending)
 
+    @property
+    def in_flight(self) -> int:
+        return len(self._active)
+
     def _multi(self, sid: int) -> bool:
         return len(self.stripe_missing(sid)) >= 2
 
+    def _tier(self, sid: int) -> Priority:
+        return risk_tier(len(self.stripe_missing(sid)), self._tolerable)
+
     # -- scheduling ----------------------------------------------------------
-    def _next_group(self) -> list[tuple[int, int]]:
-        """Pick the next plan group: multi-failure stripes first, then the
-        lowest block id; the group is every pending pair sharing that
-        block id and priority class (one plan == one batched launch)."""
-        best_key = None
+    def _candidate_groups(self) -> list[tuple[tuple, list[tuple[int, int]]]]:
+        """Pending pairs bucketed into plan groups, most-urgent first.
+
+        Pipe mode freezes the PR-5 ordering — (multi-failure?, block) —
+        so the Markov-calibrated trajectory is reproduced exactly; the
+        chain's μ' state does not distinguish risk tiers. Link mode
+        orders by (risk tier, time-to-exposure, rotated dominant source
+        cluster, block) and buckets by (tier, block) so one job is one
+        priority class end to end."""
+        groups: dict[tuple, list[tuple[int, int]]] = {}
+        if not self._use_links:
+            for (sid, b) in self._pending:
+                rank = 0 if self._multi(sid) else 1
+                groups.setdefault((rank, b), []).append((sid, b))
+            return [(key, groups[key]) for key in sorted(groups)]
         for (sid, b) in self._pending:
-            prio = 0 if self._multi(sid) else 1
-            if best_key is None or (prio, b) < best_key:
-                best_key = (prio, b)
-        prio, block = best_key
-        return [(sid, b) for (sid, b) in self._pending
-                if b == block and (0 if self._multi(sid) else 1) == prio]
+            groups.setdefault((self._tier(sid), b), []).append((sid, b))
+
+        def order(item):
+            (tier, block), pairs = item
+            exposure = min(failures_to_exposure(
+                len(self.stripe_missing(sid)), self._tolerable)
+                for sid, _ in pairs)
+            rot = ((self._dominant_cluster(pairs) - self._rr_cluster)
+                   % self.topology.num_clusters)
+            return (int(tier), exposure, rot, block)
+        return sorted(groups.items(), key=order)
+
+    def _dominant_cluster(self, group: list[tuple[int, int]]) -> int:
+        """The survivor cluster shipping the most bytes for this group
+        (ties to the lowest id); the target's home cluster when nothing
+        crosses a gateway. The round-robin interleave cursor rotates
+        over this, spreading concurrent jobs across survivor uplinks."""
+        uplink: dict[int, float] = {}
+        for sid, b in group:
+            sched = (self._pair_schedule(sid, b) if self._multi(sid)
+                     else self._sched[b])
+            for c, bytes_ in sched.uplink.items():
+                uplink[c] = uplink.get(c, 0.0) + bytes_
+        if uplink:
+            return min(uplink, key=lambda c: (-uplink[c], c))
+        return int(self.placement.assignment[group[0][1]])
 
     def _pair_schedule(self, sid: int, b: int) -> LinkSchedule:
         """Unit-volume link schedule for repairing (sid, b) under the
@@ -183,12 +275,16 @@ class RepairScheduler:
                 pass
         return self._sched[b]
 
-    def _job_cost(self, group: list[tuple[int, int]]) -> tuple[float, str]:
-        """(hours, binding link) for one job through the network model."""
+    def _job_cost(self, group: list[tuple[int, int]]
+                  ) -> tuple[float, str, LinkSchedule]:
+        """(hours, binding link, merged schedule) for one job run in
+        isolation — the duration a fluid reservation divides the job's
+        bytes by (`LinkReservations`)."""
         multi = any(self._multi(sid) for sid, _ in group)
         if not self._use_links:
             if multi:
-                return self.params.T_hours, "detection"   # μ' = 1/T exactly
+                # μ' = 1/T exactly
+                return self.params.T_hours, "detection", LinkSchedule()
             # The chain's units, bit for bit: C_b = cross_b + δ·inner_b
             # from the SAME metrics the Markov μ is computed from (the
             # link schedule's inner differs from the chain's C2 under
@@ -198,7 +294,8 @@ class RepairScheduler:
             # and a livelocked event loop when a job re-enqueues its
             # dropped pairs.
             traffic_TB = sum(self._eff[b] for _, b in group) * self.block_TB
-            return max(traffic_TB / self._bw, 1e-9), "pipe"
+            return (max(traffic_TB / self._bw, 1e-9), "pipe",
+                    LinkSchedule())
         merged = LinkSchedule()
         for sid, b in group:
             merged.add(self._pair_schedule(sid, b) if multi
@@ -206,8 +303,8 @@ class RepairScheduler:
         hours, label = self.net.bottleneck(merged)
         label = label.split("[")[0]        # uplink[3] -> uplink
         if multi and self.params.T_hours >= hours:
-            return self.params.T_hours, "detection"
-        return max(hours, 1e-9), label
+            return self.params.T_hours, "detection", merged
+        return max(hours, 1e-9), label, merged
 
     def _pair_traffic(self, sid: int, b: int) -> tuple[int, int]:
         """(total, cross) blocks read to repair (sid, b) given the stripe's
@@ -229,29 +326,73 @@ class RepairScheduler:
         return self.net.recovery_blocks(self.placement.assignment, b,
                                         dplan.sources, plan=dplan)
 
-    def _kick(self) -> None:
-        if self._in_flight is not None or not self._pending:
-            return
-        group = self._next_group()
+    def _admit(self, key: tuple, group: list[tuple[int, int]]) -> bool:
+        """Try to start one group; True if it was put in flight."""
+        hours, bottleneck, merged = self._job_cost(group)
+        rates: dict[tuple, float] = {}
+        if self._use_links:
+            rates = self.reservations.rates_for(merged, hours)
+            if not self.reservations.admits(rates):
+                self.reservations.rejected += 1
+                return False
+            self.reservations.reserve(rates)
+            self._rr_cluster = ((self._dominant_cluster(group) + 1)
+                                % self.topology.num_clusters)
         for p in group:
             del self._pending[p]
-        hours, bottleneck = self._job_cost(group)
-        self._in_flight = self.sim.schedule(hours, REPAIR_DONE,
-                                            pairs=group, hours=hours,
-                                            bottleneck=bottleneck)
+        tier = (min(self._tier(sid) for sid, _ in group)
+                if self._use_links else
+                (Priority.URGENT if any(self._multi(sid) for sid, _ in group)
+                 else Priority.NORMAL))
+        ev = self.sim.schedule(hours, REPAIR_DONE,
+                               pairs=group, hours=hours,
+                               bottleneck=bottleneck, tier=tier)
+        self._active[ev.seq] = rates
+        self.ledger.max_concurrent_jobs = max(self.ledger.max_concurrent_jobs,
+                                              len(self._active))
+        return True
+
+    def _kick(self) -> None:
+        """Admit as many pending groups as capacity allows. Serial modes
+        (pipe, or max_inflight=1) admit only the single best group when
+        idle — the PR-5 behavior. Concurrent link mode scans the whole
+        risk-ordered candidate list each pass (skip-ahead: a job that
+        does not fit cannot block a disjoint one behind it) and repeats
+        until a full scan admits nothing."""
+        while self._pending:
+            if (self.max_inflight is not None
+                    and len(self._active) >= self.max_inflight):
+                return
+            admitted = False
+            for key, group in self._candidate_groups():
+                if self._admit(key, group):
+                    admitted = True
+                    break              # recompute candidates: state moved
+                if not self._use_links or self.max_inflight == 1:
+                    return             # serial: only the best group may run
+            if not admitted:
+                return                 # nothing fits until a job completes
 
     # -- completion ----------------------------------------------------------
     def _handle_done(self, sim: Simulator, ev: Event) -> None:
         group: list[tuple[int, int]] = ev.payload["pairs"]
-        self._in_flight = None
+        tier: Priority = ev.payload["tier"]
+        rates = self._active.pop(ev.seq)
+        if self._use_links:
+            self.reservations.release(rates)
+            self.ledger.peak_link_utilization = max(
+                self.ledger.peak_link_utilization,
+                self.reservations.peak_utilization)
         self.ledger.jobs += 1
+        self.ledger.jobs_by_class[tier] += 1
         self.ledger.busy_hours += ev.payload["hours"]
         self.ledger.bottlenecks[ev.payload["bottleneck"]] += 1
         placed = group
         if self.codec is not None:
             exclude = (self.exclude_node_of(*group[0])
                        if self.exclude_node_of else -1)
-            report = self.frontend.rebuild(group, exclude_node=exclude)
+            report = self.frontend.rebuild(group, exclude_node=exclude,
+                                           priority=tier)
             self.ledger.kernel_launches += report.launches
             self.ledger.data_bytes_read += (report.inner_bytes
                                             + report.cross_bytes)
@@ -267,6 +408,9 @@ class RepairScheduler:
             self.ledger.repaired_blocks += 1
             self.ledger.inner_blocks_read += total - cross
             self.ledger.cross_blocks_read += cross
+            born = self._damaged_at.pop((sid, b), sim.now)
+            self.ledger.max_exposure_hours = max(
+                self.ledger.max_exposure_hours, sim.now - born)
         dropped = [p for p in group if p not in set(placed)]
         self.ledger.dropped_blocks += len(dropped)
         self.on_repaired(placed)

@@ -23,9 +23,9 @@ duck-types plan objects), so `core.placement`/`core.metrics`, the io
 engine, the ckpt store, and the failure simulator can all route their
 cluster arithmetic through it without cycles.
 """
-from .network import (LinkSchedule, NetworkModel, cross_cluster_blocks,
-                      plan_is_xor_linear)
+from .network import (LinkReservations, LinkSchedule, NetworkModel,
+                      cross_cluster_blocks, plan_is_xor_linear)
 from .topology import Topology
 
-__all__ = ["Topology", "NetworkModel", "LinkSchedule",
+__all__ = ["Topology", "NetworkModel", "LinkSchedule", "LinkReservations",
            "cross_cluster_blocks", "plan_is_xor_linear"]

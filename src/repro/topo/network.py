@@ -210,3 +210,121 @@ class NetworkModel:
 
     def transfer_time(self, sched: LinkSchedule) -> float:
         return self.bottleneck(sched)[0]
+
+    # -- concurrent admission ------------------------------------------------
+    def link_loads(self, sched: LinkSchedule) -> dict[tuple, float]:
+        """Flatten a schedule to {link key: bytes} over the SAME link
+        terms `bottleneck()` maxes over, keyed ("ingest", c) /
+        ("uplink", c) / ("downlink", c) / ("core",). Invariant (pinned
+        by tests): bottleneck(sched)[0] ==
+        max(load / self.link_capacity(key)) over these entries — the
+        flattening and the serial cost model can never disagree about
+        which links a job occupies."""
+        loads: dict[tuple, float] = {}
+        for c in set(sched.inner) | set(sched.down):
+            b = sched.inner.get(c, 0.0) + sched.down.get(c, 0.0)
+            if b > 0:
+                loads[("ingest", c)] = b
+        for c, b in sched.uplink.items():
+            if b > 0:
+                loads[("uplink", c)] = b
+        for c, b in sched.down.items():
+            if b > 0:
+                loads[("downlink", c)] = b
+        cross = sched.cross_bytes
+        if cross > 0:
+            loads[("core",)] = cross
+        return loads
+
+    def link_capacity(self, key: tuple) -> float:
+        """Bandwidth of one flattened link key (same units as the model)."""
+        kind = key[0]
+        if kind == "ingest":
+            return self.inner_bw
+        if kind in ("uplink", "downlink"):
+            return self.cross_bw
+        if kind == "core":
+            return self.core_bw
+        raise KeyError(f"unknown link key {key!r}")
+
+
+class LinkReservations:
+    """Fluid-flow residual-capacity ledger for concurrent transfers.
+
+    Each admitted job runs for a fixed duration d (its *exclusive*
+    bottleneck time, possibly stretched by a detection floor) and is
+    modelled as a constant-rate flow: on every link it touches it
+    reserves rate = bytes_on_link / d. A job is admitted only if every
+    such rate fits in the link's residual capacity, so
+
+        sum over in-flight jobs of rate(link)  <=  capacity(link)
+
+    holds at all times — the oversubscription invariant CI gates on.
+    Consequences that make this the right model for repair overlap:
+
+      * a job whose duration IS its bottleneck transfer time reserves
+        that link at full capacity — two jobs sharing a bottleneck link
+        serialize, exactly like the old one-at-a-time scheduler;
+      * jobs with provably disjoint link sets overlap freely;
+      * a detection-limited job (duration T > transfer time) reserves
+        only bytes/T on each link, so ~T/transfer such jobs overlap
+        while their shared links stay at (not above) capacity.
+
+    Release must be exact under float arithmetic, so `reserve` returns
+    the rate dict and `release` subtracts those same floats (with a
+    drop-to-zero clamp against residual dust).
+    """
+
+    #: Relative tolerance for admission: a job is allowed to fill a link
+    #: to exactly its capacity; the epsilon only absorbs float rounding
+    #: from the bytes/duration division, never real oversubscription.
+    EPS = 1e-9
+
+    def __init__(self, net: NetworkModel):
+        self.net = net
+        self._used: dict[tuple, float] = {}
+        self.peak_utilization = 0.0   # max over time+links of used/capacity
+        self.admitted = 0
+        self.rejected = 0             # admission attempts that had to wait
+
+    def rates_for(self, sched: LinkSchedule,
+                  duration: float) -> dict[tuple, float]:
+        if duration <= 0:
+            raise ValueError("transfer duration must be positive")
+        return {key: b / duration
+                for key, b in self.net.link_loads(sched).items()}
+
+    def admits(self, rates: dict[tuple, float]) -> bool:
+        """Would these per-link rates fit in the residual capacity?"""
+        for key, r in rates.items():
+            cap = self.net.link_capacity(key)
+            if self._used.get(key, 0.0) + r > cap * (1.0 + self.EPS):
+                return False
+        return True
+
+    def reserve(self, rates: dict[tuple, float]) -> None:
+        """Commit the rates (caller already checked `admits`)."""
+        for key, r in rates.items():
+            used = self._used.get(key, 0.0) + r
+            self._used[key] = used
+            cap = self.net.link_capacity(key)
+            if cap > 0 and used / cap > self.peak_utilization:
+                self.peak_utilization = used / cap
+        self.admitted += 1
+
+    def release(self, rates: dict[tuple, float]) -> None:
+        """Return a completed job's rates — the exact floats reserved."""
+        for key, r in rates.items():
+            left = self._used.get(key, 0.0) - r
+            if left <= self.EPS * self.net.link_capacity(key):
+                self._used.pop(key, None)   # clamp float dust to idle
+            else:
+                self._used[key] = left
+
+    def utilization(self, key: tuple) -> float:
+        cap = self.net.link_capacity(key)
+        return self._used.get(key, 0.0) / cap if cap > 0 else 0.0
+
+    @property
+    def busy_links(self) -> int:
+        return len(self._used)

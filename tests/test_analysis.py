@@ -30,12 +30,13 @@ from repro.analysis.lint import main as lint_main
 from repro.analysis.verify import (certify, certify_paper_grid,
                                    erasure_correctable,
                                    optimal_lrc_distance)
-from repro.ckpt import BlockStore, ClusterTopology
+from repro.ckpt import BlockStore
 from repro.ckpt.stripe import StripeCodec
 from repro.core.codec import (cached_decode_plans, clear_plan_caches,
                               decode_plan, decode_plan_cached)
 from repro.core.codes import make_unilrc
 from repro.io import NumpyBackend
+from repro.topo import Topology
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 BS = 64
@@ -43,7 +44,7 @@ BS = 64
 
 def _engine(stripes=4, seed=0):
     code = make_unilrc(1, 4)
-    store = BlockStore(ClusterTopology(4, 8))
+    store = BlockStore(Topology(4, 8))
     codec = StripeCodec(code, store, block_size=BS, backend=NumpyBackend())
     rng = np.random.default_rng(seed)
     codec.write(rng.integers(0, 256, size=stripes * code.k * BS,

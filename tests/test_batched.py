@@ -6,13 +6,14 @@ import zlib
 import numpy as np
 import pytest
 
-from repro.ckpt import BlockStore, ClusterTopology
+from repro.ckpt import BlockStore
 from repro.ckpt.stripe import StripeCodec
 from repro.core import ALL_SCHEMES, make_unilrc, paper_schemes
 from repro.core.codec import (clear_plan_caches, decode_plan,
                               decode_plan_cached, plans_for,
                               single_recovery_plan)
 from repro.kernels import ops
+from repro.topo import Topology
 
 S, B = 3, 512
 
@@ -115,7 +116,7 @@ def _payload(code, bs, stripes, seed=0):
 
 def test_write_is_one_launch_and_reads_back(kernel_counters):
     code = make_unilrc(1, 4)
-    store = BlockStore(ClusterTopology(4, 8))
+    store = BlockStore(Topology(4, 8))
     codec = StripeCodec(code, store, block_size=1024)
     payload = _payload(code, 1024, stripes=4)
     metas = codec.write(payload)
@@ -126,14 +127,14 @@ def test_write_is_one_launch_and_reads_back(kernel_counters):
 
 def test_batched_recovery_matches_oracle_codec():
     """Kernel-batched write/read_all/reconstruct_node produce the same
-    bytes and store state as the numpy-oracle (use_kernels=False) codec."""
+    bytes and store state as the numpy-oracle (backend="numpy") codec."""
     code = make_unilrc(1, 4)
-    topo = ClusterTopology(4, 8)
+    topo = Topology(4, 8)
     results = {}
-    for use_kernels in (True, False):
+    for backend in ("kernels", "numpy"):
         store = BlockStore(topo)
         codec = StripeCodec(code, store, block_size=512,
-                            use_kernels=use_kernels)
+                            backend=backend)
         # 12 stripes > nodes_per_cluster: recovery groups span S > 1
         # stripes, so both engines exercise the stacked (S, B) path.
         payload = _payload(code, 512, stripes=12, seed=7)
@@ -144,10 +145,10 @@ def test_batched_recovery_matches_oracle_codec():
         rebuilt = codec.reconstruct_node(victim)
         store.heal_node(victim)
         clean = codec.read_all(metas)
-        results[use_kernels] = (degraded, rebuilt, clean)
+        results[backend] = (degraded, rebuilt, clean)
         assert degraded == payload
         assert clean == payload
-    assert results[True] == results[False]
+    assert results["kernels"] == results["numpy"]
 
 
 def test_reconstruct_node_batches_by_plan(kernel_counters):
@@ -158,7 +159,7 @@ def test_reconstruct_node_batches_by_plan(kernel_counters):
     the victim holds the SAME block id in several stripes — at least one
     plan group genuinely batches S > 1 stripes into one launch."""
     code = make_unilrc(1, 4)
-    store = BlockStore(ClusterTopology(4, 8))
+    store = BlockStore(Topology(4, 8))
     codec = StripeCodec(code, store, block_size=512)
     payload = _payload(code, 512, stripes=20, seed=9)
     metas = codec.write(payload)
@@ -181,7 +182,7 @@ def test_reconstruct_does_not_colocate_stripe_blocks():
     distinct nodes (the invariant the constructor validates), not just on
     the first live node of the cluster."""
     code = make_unilrc(1, 4)
-    store = BlockStore(ClusterTopology(4, 8))
+    store = BlockStore(Topology(4, 8))
     codec = StripeCodec(code, store, block_size=512)
     payload = _payload(code, 512, stripes=20, seed=11)
     metas = codec.write(payload)
@@ -204,7 +205,7 @@ def test_rebuild_skips_undecodable_stripes():
     """One stripe lost beyond tolerance must not abort repair of the
     other, fully recoverable stripes."""
     code = make_unilrc(1, 4)
-    store = BlockStore(ClusterTopology(4, 8))
+    store = BlockStore(Topology(4, 8))
     codec = StripeCodec(code, store, block_size=256)
     payload = _payload(code, 256, stripes=2, seed=13)
     codec.write(payload)
@@ -225,7 +226,7 @@ def test_max_batch_stripes_caps_launches_not_bytes(kernel_counters):
     payload = _payload(code, 512, stripes=5, seed=3)
     outs = {}
     for cap in (64, 2):
-        store = BlockStore(ClusterTopology(4, 8))
+        store = BlockStore(Topology(4, 8))
         codec = StripeCodec(code, store, block_size=512,
                             max_batch_stripes=cap)
         before = kernel_counters["gf_bitmatmul"]
@@ -236,7 +237,7 @@ def test_max_batch_stripes_caps_launches_not_bytes(kernel_counters):
         assert outs[cap] == payload
     assert outs[64] == outs[2]
     with pytest.raises(ValueError):
-        StripeCodec(code, BlockStore(ClusterTopology(4, 8)),
+        StripeCodec(code, BlockStore(Topology(4, 8)),
                     max_batch_stripes=0)
 
 
@@ -244,8 +245,8 @@ def test_colocating_placement_rejected():
     """nodes_per_cluster < local group size would wrap slots and put two
     group members on one node — constructor must refuse."""
     code = make_unilrc(1, 4)            # group size 5
-    store = BlockStore(ClusterTopology(4, 4))
+    store = BlockStore(Topology(4, 4))
     with pytest.raises(ValueError, match="co-locate"):
         StripeCodec(code, store, block_size=512)
     # one more node per cluster and the same code is accepted
-    StripeCodec(code, BlockStore(ClusterTopology(4, 5)), block_size=512)
+    StripeCodec(code, BlockStore(Topology(4, 5)), block_size=512)

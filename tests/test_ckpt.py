@@ -4,11 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.ckpt import (BlockStore, CheckpointManager, ClusterTopology,
-                        DiskBlockStore)
+from repro.ckpt import BlockStore, CheckpointManager, DiskBlockStore
 from repro.ckpt.serialize import deserialize_tree, serialize_tree
 from repro.ckpt.stripe import StripeCodec, choose_code
 from repro.core.codes import make_unilrc
+from repro.topo import Topology
 
 
 def tiny_state():
@@ -39,7 +39,7 @@ def test_serialize_roundtrip():
 
 
 def make_mgr(block_size=4096, alpha=1, z=4, npc=6):
-    topo = ClusterTopology(z, npc)
+    topo = Topology(z, npc)
     store = BlockStore(topo)
     return CheckpointManager(store, make_unilrc(alpha, z),
                              block_size=block_size), store
@@ -110,7 +110,7 @@ def test_restore_latest_and_verify():
 
 
 def test_straggler_read_substitutes_parity():
-    topo = ClusterTopology(4, 8)
+    topo = Topology(4, 8)
     store = BlockStore(topo)
     code = make_unilrc(1, 4)
     codec = StripeCodec(code, store, block_size=1024)
@@ -127,7 +127,7 @@ def test_straggler_read_substitutes_parity():
 
 
 def test_disk_store_roundtrip(tmp_path):
-    topo = ClusterTopology(4, 6)
+    topo = Topology(4, 6)
     store = DiskBlockStore(topo, tmp_path / "blocks")
     mgr = CheckpointManager(store, make_unilrc(1, 4), block_size=2048)
     state = tiny_state()
@@ -141,7 +141,7 @@ def test_disk_store_roundtrip(tmp_path):
 
 
 def test_choose_code_meets_rate():
-    topo = ClusterTopology(10, 30)
+    topo = Topology(10, 30)
     code = choose_code(topo, target_rate=0.85)
     assert code.k / code.n >= 0.85
     assert code.meta["z"] == 10
@@ -150,7 +150,7 @@ def test_choose_code_meets_rate():
 
 
 def test_choose_code_small_cluster_falls_back():
-    topo = ClusterTopology(4, 4)          # only 16 nodes
+    topo = Topology(4, 4)          # only 16 nodes
     code = choose_code(topo, target_rate=0.85)
     assert code.n <= topo.num_nodes * 2   # still constructible
 
@@ -160,7 +160,7 @@ def test_delta_parity_update_preserves_code():
     the stripe stays consistent (any d-1 erasures still decode to the
     UPDATED data)."""
     from repro.core.codec import decode_plan
-    topo = ClusterTopology(4, 8)
+    topo = Topology(4, 8)
     store = BlockStore(topo)
     code = make_unilrc(1, 4)
     codec = StripeCodec(code, store, block_size=512)

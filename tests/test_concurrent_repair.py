@@ -1,0 +1,216 @@
+"""Concurrent risk-aware repair scheduling (the multi-queue link-mode
+scheduler): overlap of disjoint-bottleneck jobs, serialization of
+shared-bottleneck jobs, risk-tier ordering, the never-oversubscribe
+reservation invariant, and the frozen pipe-mode (Markov) path.
+"""
+import pytest
+
+from repro.core.codes import make_unilrc
+from repro.core.mttdl import MTTDLParams
+from repro.core.placement import default_placement
+from repro.priority import Priority, risk_tier
+from repro.sim import RepairScheduler, Simulator
+from repro.topo import LinkReservations, NetworkModel, Topology
+
+P = MTTDLParams()
+CODE = make_unilrc(1, 4)              # n=20, z=4 clusters of 5 blocks
+PL = default_placement(CODE)
+TOPO = Topology(PL.num_clusters, 8)
+
+
+def _run(pairs, *, topo=TOPO, max_inflight=None, block_TB=0.25):
+    """Drive one scheduler over `pairs`; returns (hours, ledger, healed
+    in completion order)."""
+    sim = Simulator()
+    missing: dict[int, set[int]] = {}
+    for sid, b in pairs:
+        missing.setdefault(sid, set()).add(b)
+    healed: list[tuple[int, int]] = []
+
+    def on_repaired(done):
+        for sid, b in done:
+            missing.get(sid, set()).discard(b)
+        healed.extend(done)
+
+    sched = RepairScheduler(
+        sim, PL, P, block_TB=block_TB,
+        stripe_missing=lambda sid: missing.get(sid, frozenset()),
+        on_repaired=on_repaired, topology=topo, max_inflight=max_inflight)
+    sched.damaged(list(pairs))
+    sim.run()
+    assert not any(missing.values()), "repair did not drain"
+    return sim.now, sched.ledger, healed
+
+
+# ---------------------------------------------------------------------------
+# Overlap vs serialization
+# ---------------------------------------------------------------------------
+
+def test_disjoint_bottleneck_jobs_overlap():
+    """Single failures in different clusters repair over disjoint ingest
+    links: concurrent makespan is the slowest job, not the sum."""
+    b0 = min(PL.cluster_blocks(0))
+    b1 = min(PL.cluster_blocks(1))
+    h_a, _, _ = _run([(0, b0)])
+    h_b, _, _ = _run([(1, b1)])
+    h_ser, led_ser, _ = _run([(0, b0), (1, b1)], max_inflight=1)
+    h_con, led_con, _ = _run([(0, b0), (1, b1)])
+    assert h_ser == pytest.approx(h_a + h_b)
+    assert h_con == pytest.approx(max(h_a, h_b))
+    assert led_ser.max_concurrent_jobs == 1
+    assert led_con.max_concurrent_jobs == 2
+
+
+def test_shared_bottleneck_jobs_serialize():
+    """Two single-failure jobs in the SAME cluster both need the full
+    ingest link: the reservation ledger must refuse to overlap them,
+    so the concurrent scheduler matches the serialized baseline."""
+    b0, b0b = sorted(PL.cluster_blocks(0))[:2]
+    pairs = [(0, b0), (1, b0b)]
+    h_ser, _, _ = _run(pairs, max_inflight=1)
+    h_con, led_con, _ = _run(pairs)
+    assert h_con == pytest.approx(h_ser)
+    assert led_con.max_concurrent_jobs == 1
+    assert led_con.peak_link_utilization <= 1 + 1e-6
+
+
+def test_detection_limited_jobs_overlap_on_shared_links():
+    """Cluster loss: every job's traffic converges on the lost cluster's
+    downlink, but with a small block size the jobs are detection-limited
+    (duration = T_hours > transfer), each rating only a fraction of the
+    link — so they overlap and the makespan beats the serialized
+    baseline without any link going over capacity."""
+    pairs = [(sid, b) for sid in range(3) for b in PL.cluster_blocks(0)]
+    h_ser, led_ser, _ = _run(pairs, max_inflight=1, block_TB=0.002)
+    h_con, led_con, _ = _run(pairs, block_TB=0.002)
+    assert led_con.bottlenecks["detection"] > 0
+    assert h_con < h_ser
+    assert led_con.max_concurrent_jobs > 1
+    assert led_con.peak_link_utilization <= 1 + 1e-6
+    # concurrency must also shrink (never grow) the worst window of
+    # vulnerability
+    assert led_con.max_exposure_hours <= led_ser.max_exposure_hours + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Risk tiers
+# ---------------------------------------------------------------------------
+
+def test_risk_tiers_map_onto_priority_classes():
+    f = 5                                   # UniLRC(1,4) tolerates 5
+    assert risk_tier(1, f) is Priority.NORMAL is Priority.BACKGROUND
+    assert risk_tier(2, f) is Priority.EXPEDITED is Priority.DEGRADED_READ
+    assert risk_tier(5, f) is Priority.URGENT is Priority.CLIENT_READ
+    assert risk_tier(7, f) is Priority.URGENT
+    # at most 2 tolerable: nothing in between, 2+ is already urgent
+    assert risk_tier(2, 2) is Priority.URGENT
+
+
+def test_multi_failure_stripe_repaired_before_single():
+    """A double-failure stripe outranks a single-failure stripe damaged
+    at the same instant, regardless of block order."""
+    b_single = min(PL.cluster_blocks(0))            # lowest block id
+    a, b = sorted(PL.cluster_blocks(1))[:2]
+    _, led, healed = _run([(0, b_single), (1, a), (1, b)], max_inflight=1)
+    assert healed[0][0] == 1, "single-failure stripe jumped the queue"
+    assert led.jobs_by_class[Priority.EXPEDITED] >= 1
+    assert all(isinstance(t, Priority) for t in led.jobs_by_class)
+
+
+def test_pipe_mode_rejects_concurrency_and_bad_inflight():
+    sim = Simulator()
+    kw = dict(block_TB=0.25, stripe_missing=lambda sid: frozenset({-1}),
+              on_repaired=lambda pairs: None)
+    with pytest.raises(ValueError, match="explicit topology"):
+        RepairScheduler(sim, PL, P, max_inflight=4, **kw)
+    with pytest.raises(ValueError, match="max_inflight"):
+        RepairScheduler(sim, PL, P, topology=TOPO, max_inflight=0, **kw)
+
+
+def test_pipe_mode_ordering_frozen_multi_first_then_block():
+    """Default (Markov) mode stays serial and keeps the PR-5 order:
+    multi-failure stripes first, then ascending block id — risk tiers
+    and concurrency must not leak into the calibrated path."""
+    sim = Simulator()
+    missing = {2: {3, 4}}
+    healed = []
+    sched = RepairScheduler(
+        sim, PL, P, block_TB=0.25,
+        stripe_missing=lambda sid: missing.get(sid, frozenset({-1})),
+        on_repaired=healed.extend)
+    sched.damaged([(0, 7), (1, 2), (2, 3), (2, 4)])
+    sim.run()
+    assert sched.ledger.max_concurrent_jobs == 1
+    assert healed[:2] == [(2, 3), (2, 4)]          # multi-failure stripe
+    assert healed[2:] == [(1, 2), (0, 7)]          # then block order
+    assert set(sched.ledger.bottlenecks) <= {"pipe", "detection"}
+
+
+# ---------------------------------------------------------------------------
+# Link model consistency + the reservation ledger
+# ---------------------------------------------------------------------------
+
+def test_link_loads_agree_with_bottleneck():
+    net = NetworkModel.from_repair_pipe(TOPO, 1.0, P.delta)
+    # a cross-cluster read pattern: block 0 (cluster 0) decoding from
+    # sources spread over clusters 1 and 2
+    sched = net.recovery_schedule(PL.assignment, 0, [3, 4, 6])
+    hours, _label = net.bottleneck(sched)
+    loads = net.link_loads(sched)
+    assert loads, "cross repair produced no link loads"
+    assert hours == pytest.approx(max(
+        v / net.link_capacity(k) for k, v in loads.items()))
+    with pytest.raises(KeyError):
+        net.link_capacity(("warp", 3))
+
+
+def test_reservations_admission_and_release():
+    net = NetworkModel.from_repair_pipe(TOPO, 1.0, P.delta)
+    res = LinkReservations(net)
+    sched = net.recovery_schedule(PL.assignment, 0, [1, 2])  # intra-cluster
+    hours, _ = net.bottleneck(sched)
+    rates = res.rates_for(sched, hours)       # saturates ingest[0]
+    assert res.admits(rates)
+    res.reserve(rates)
+    assert not res.admits(rates)              # same link again: refused
+    assert res.utilization(("ingest", 0)) == pytest.approx(1.0)
+    res.release(rates)
+    assert res.admits(rates)                  # float dust fully clamped
+    assert not res.busy_links
+    with pytest.raises(ValueError):
+        res.rates_for(sched, 0.0)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                          # property test becomes a no-op
+    given = None
+
+if given is not None:
+    @given(st.sets(st.tuples(st.integers(0, 3), st.integers(0, CODE.n - 1)),
+                   min_size=1, max_size=10))
+    @settings(max_examples=25, deadline=None)
+    def test_property_random_damage_never_oversubscribes(damage):
+        """Hypothesis sweep of the same invariant: Σ reserved rates stays
+        within every link's capacity for arbitrary damage sets, and the
+        queue always drains."""
+        pairs = sorted(damage)
+        _, led, healed = _run(pairs)
+        assert sorted(healed) == pairs
+        assert led.peak_link_utilization <= 1 + 1e-6
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_random_damage_never_oversubscribes(seed):
+    """Randomized damage sets: whatever mix of single- and multi-failure
+    stripes lands, the concurrent scheduler must drain them all with
+    every link at or under capacity the whole time."""
+    import random
+    rng = random.Random(seed)
+    pairs = sorted({(rng.randrange(4), rng.randrange(CODE.n))
+                    for _ in range(rng.randrange(2, 12))})
+    _, led, healed = _run(pairs)
+    assert sorted(healed) == pairs
+    assert led.repaired_blocks == len(pairs)
+    assert led.peak_link_utilization <= 1 + 1e-6
+    assert led.max_exposure_hours >= 0.0

@@ -15,21 +15,22 @@ pytest.importorskip(
     "hypothesis", reason="hypothesis not installed; property tests skipped")
 from hypothesis import given, settings, strategies as st
 
-from repro.ckpt import BlockStore, ClusterTopology
+from repro.ckpt import BlockStore
 from repro.ckpt.stripe import StripeCodec
 from repro.core.codes import make_unilrc
 from repro.io import RequestFrontend
+from repro.topo import Topology
 
 CODE = make_unilrc(1, 3)          # n=12, k=6 — smallest paper code
 S = 3
 BS = 64
-TOPO = ClusterTopology(3, 5)
+TOPO = Topology(3, 5)
 
 
-def _fresh(use_kernels: bool, seed: int):
+def _fresh(backend: str, seed: int):
     store = BlockStore(TOPO)
     codec = StripeCodec(CODE, store, block_size=BS,
-                        use_kernels=use_kernels)
+                        backend=backend)
     payload = np.random.default_rng(seed).integers(
         0, 256, size=CODE.k * BS * S, dtype=np.uint8).tobytes()
     metas = codec.write(payload)
@@ -123,16 +124,15 @@ def _run_frontend(codec, metas, drops, requests):
     return results
 
 
-@pytest.mark.parametrize("use_kernels", [False, True],
-                         ids=["numpy", "kernels"])
+@pytest.mark.parametrize("backend", ["numpy", "kernels"])
 @settings(max_examples=12, deadline=None)
 @given(requests=requests_strategy, drops=drops_strategy,
        seed=st.integers(0, 2**16))
-def test_frontend_coalesced_equals_sequential(use_kernels, requests,
+def test_frontend_coalesced_equals_sequential(backend, requests,
                                               drops, seed):
     runs = {}
     for mode in ("sequential", "frontend"):
-        store, codec, metas = _fresh(use_kernels, seed)
+        store, codec, metas = _fresh(backend, seed)
         for sid, b in drops:
             store.drop_block(sid, b)
         if mode == "sequential":

@@ -10,22 +10,23 @@ ahead of background rebuild/scrub in the per-class accounting.
 import numpy as np
 import pytest
 
-from repro.ckpt import BlockStore, ClusterTopology, DiskBlockStore
+from repro.ckpt import BlockStore, DiskBlockStore
 from repro.ckpt.store import NodeFailure
 from repro.ckpt.stripe import StripeCodec
 from repro.core.codes import make_unilrc
 from repro.io import (KernelBackend, NumpyBackend, Priority,
                       RequestFrontend, resolve_backend)
+from repro.topo import Topology
 
 BS = 256
 
 
-def _setup(stripes, *, use_kernels=True, seed=0, block_size=BS,
+def _setup(stripes, *, backend="kernels", seed=0, block_size=BS,
            store_cls=BlockStore, **store_kw):
     code = make_unilrc(1, 4)                  # n=20, k=12, group size 5
-    store = store_cls(ClusterTopology(4, 8), **store_kw)
+    store = store_cls(Topology(4, 8), **store_kw)
     codec = StripeCodec(code, store, block_size=block_size,
-                        use_kernels=use_kernels)
+                        backend=backend)
     rng = np.random.default_rng(seed)
     payload = rng.integers(0, 256, size=code.k * block_size * stripes,
                            dtype=np.uint8).tobytes()
@@ -46,15 +47,39 @@ def _group_data(code, gi):
 # Backend abstraction
 # ---------------------------------------------------------------------------
 
-def test_resolve_backend_legacy_flag():
-    assert isinstance(resolve_backend(use_kernels=True), KernelBackend)
-    assert isinstance(resolve_backend(use_kernels=False), NumpyBackend)
+def test_resolve_backend_names_and_instances():
+    assert isinstance(resolve_backend("kernels"), KernelBackend)
+    assert isinstance(resolve_backend("numpy"), NumpyBackend)
+    assert isinstance(resolve_backend(None), KernelBackend)
     nb = NumpyBackend()
-    assert resolve_backend(nb, use_kernels=True) is nb
+    assert resolve_backend(nb) is nb
+    with pytest.raises(ValueError, match="unknown backend"):
+        resolve_backend("cuda")
+    with pytest.raises(TypeError, match="Backend, str, or None"):
+        resolve_backend(3.14)
     codec = StripeCodec(make_unilrc(1, 4),
-                        BlockStore(ClusterTopology(4, 8)),
+                        BlockStore(Topology(4, 8)),
                         block_size=64, backend=nb)
     assert codec.backend is nb and codec.use_kernels is False
+
+
+def test_resolve_backend_legacy_flag_deprecated():
+    """The retired use_kernels bool still works but warns, and mixing
+    it with backend= is an error."""
+    with pytest.deprecated_call():
+        assert isinstance(resolve_backend(use_kernels=True),  # repro-lint: allow=RA005
+                          KernelBackend)
+    with pytest.deprecated_call():
+        assert isinstance(resolve_backend(use_kernels=False),  # repro-lint: allow=RA005
+                          NumpyBackend)
+    with pytest.deprecated_call(), \
+            pytest.raises(TypeError, match="not both"):
+        resolve_backend(NumpyBackend(), use_kernels=True)  # repro-lint: allow=RA005
+    with pytest.deprecated_call():
+        codec = StripeCodec(make_unilrc(1, 4),
+                            BlockStore(Topology(4, 8)),
+                            block_size=64, use_kernels=False)  # repro-lint: allow=RA005
+    assert isinstance(codec.backend, NumpyBackend)
 
 
 def test_backends_byte_identical_encode_and_decode():
@@ -419,9 +444,9 @@ def test_engine_handle_before_flush_raises():
 def test_oracle_frontend_zero_launches_byte_identical(kernel_counters):
     N = 8
     outs = {}
-    for use_kernels in (True, False):
+    for backend in ("kernels", "numpy"):
         code, store, codec, payload, metas = _setup(
-            N, use_kernels=use_kernels, seed=13)
+            N, backend=backend, seed=13)
         b1, b2 = _group_data(code, 0)[:2]
         for sid in range(N):
             store.drop_block(sid, b1)
@@ -432,9 +457,9 @@ def test_oracle_frontend_zero_launches_byte_identical(kernel_counters):
         before = sum(kernel_counters.values())
         fe.drain()
         launches = sum(kernel_counters.values()) - before
-        assert launches == (1 if use_kernels else 0)
-        outs[use_kernels] = [h.result() for h in handles]
-    assert outs[True] == outs[False]
+        assert launches == (1 if backend == "kernels" else 0)
+        outs[backend] = [h.result() for h in handles]
+    assert outs["kernels"] == outs["numpy"]
 
 
 # ---------------------------------------------------------------------------
@@ -515,7 +540,7 @@ def test_disk_store_restart_multi_erasure_identity(tmp_path):
     code, dstore, dcodec, payload, _ = _setup(
         S, seed=18, store_cls=DiskBlockStore, root=tmp_path / "blocks")
     # restart: a new process opens the tree with a cold index
-    dstore2 = DiskBlockStore(ClusterTopology(4, 8), tmp_path / "blocks")
+    dstore2 = DiskBlockStore(Topology(4, 8), tmp_path / "blocks")
     dstore2.reopen()
     codec2 = StripeCodec(code, dstore2, block_size=BS)
     mem_code, mem_store, mem_codec, mem_payload, _ = _setup(S, seed=18)
@@ -534,7 +559,7 @@ def test_disk_store_restart_multi_erasure_identity(tmp_path):
         assert rec_disk[(sid, b)] == _expect(payload, code, sid, b)
     # rebuild re-persists to disk: a SECOND restart reads clean stripes
     assert codec2.rebuild_blocks(pairs) == len(pairs)
-    dstore3 = DiskBlockStore(ClusterTopology(4, 8), tmp_path / "blocks")
+    dstore3 = DiskBlockStore(Topology(4, 8), tmp_path / "blocks")
     dstore3.reopen()
     for sid in range(S):
         for b in range(code.k):

@@ -10,19 +10,20 @@ byte-identical to the kernel path.
 import numpy as np
 import pytest
 
-from repro.ckpt import BlockStore, ClusterTopology, DiskBlockStore
+from repro.ckpt import BlockStore, DiskBlockStore
 from repro.ckpt.store import NodeFailure
 from repro.ckpt.stripe import StripeCodec, choose_code
 from repro.core.codes import make_unilrc
+from repro.topo import Topology
 
 BS = 256
 
 
-def _setup(stripes, *, use_kernels=True, seed=0, block_size=BS):
+def _setup(stripes, *, backend="kernels", seed=0, block_size=BS):
     code = make_unilrc(1, 4)                  # n=20, k=12, group size 5
-    store = BlockStore(ClusterTopology(4, 8))
+    store = BlockStore(Topology(4, 8))
     codec = StripeCodec(code, store, block_size=block_size,
-                        use_kernels=use_kernels)
+                        backend=backend)
     rng = np.random.default_rng(seed)
     payload = rng.integers(0, 256, size=code.k * block_size * stripes,
                            dtype=np.uint8).tobytes()
@@ -105,24 +106,24 @@ def test_cluster_loss_read_all_is_one_decode_launch(kernel_counters):
 
 
 def test_multi_erasure_oracle_is_byte_identical():
-    """use_kernels=False must produce byte-identical recoveries for the
+    """backend="numpy" must produce byte-identical recoveries for the
     same multi-erasure batch (ISSUE: numpy-oracle parity)."""
     S = 8
     results = {}
-    for use_kernels in (True, False):
+    for backend in ("kernels", "numpy"):
         code, store, codec, payload, _ = _setup(
-            S, use_kernels=use_kernels, seed=3)
+            S, backend=backend, seed=3)
         d0 = _group_data(code, 0)
         pairs = []
         for sid in range(S):
             for b in (d0[0], d0[1]):
                 store.drop_block(sid, b)
                 pairs.append((sid, b))
-        results[use_kernels] = codec.recover_blocks(pairs)
+        results[backend] = codec.recover_blocks(pairs)
         for sid, b in pairs:
-            assert results[use_kernels][(sid, b)] == _expect(
-                payload, code, sid, b), (use_kernels, sid, b)
-    assert results[True] == results[False]
+            assert results[backend][(sid, b)] == _expect(
+                payload, code, sid, b), (backend, sid, b)
+    assert results["kernels"] == results["numpy"]
 
 
 def test_rebuild_blocks_report_pattern_accounting(kernel_counters):
@@ -216,13 +217,13 @@ def test_update_block_patches_parities_in_one_launch(kernel_counters):
 # ---------------------------------------------------------------------------
 
 def test_choose_code_fallback_fits_tiny_topologies():
-    topo = ClusterTopology(2, 3)             # 6 nodes
+    topo = Topology(2, 3)             # 6 nodes
     code = choose_code(topo)
     assert code.n <= topo.num_nodes
     StripeCodec(code, BlockStore(topo), block_size=64)   # deployable
 
     # pre-fix: fallback returned UniLRC(1, 3) with n=12 > 9 nodes
-    topo = ClusterTopology(3, 3)
+    topo = Topology(3, 3)
     code = choose_code(topo)
     assert code.n <= topo.num_nodes
     StripeCodec(code, BlockStore(topo), block_size=64)
@@ -231,13 +232,13 @@ def test_choose_code_fallback_fits_tiny_topologies():
     # 3-node clusters, so UniLRC(1, 3) (n=12, 4-block groups) would be
     # rejected by the StripeCodec constructor — the fallback must clamp
     # by nodes_per_cluster.
-    topo = ClusterTopology(4, 3)
+    topo = Topology(4, 3)
     code = choose_code(topo)
     assert code.n <= topo.num_nodes
     StripeCodec(code, BlockStore(topo), block_size=64)
 
     with pytest.raises(ValueError):
-        choose_code(ClusterTopology(2, 2))   # nothing fits 2-node clusters
+        choose_code(Topology(2, 2))   # nothing fits 2-node clusters
 
 
 # ---------------------------------------------------------------------------
@@ -245,7 +246,7 @@ def test_choose_code_fallback_fits_tiny_topologies():
 # ---------------------------------------------------------------------------
 
 def test_nodes_holding_public_view():
-    store = BlockStore(ClusterTopology(2, 3))
+    store = BlockStore(Topology(2, 3))
     store.put(0, 0, 1, b"a")
     store.put(0, 1, 4, b"b")
     store.put(1, 0, 2, b"c")
@@ -259,7 +260,7 @@ def test_nodes_holding_public_view():
 
 
 def test_disk_store_failure_message_has_context(tmp_path):
-    store = DiskBlockStore(ClusterTopology(2, 3), tmp_path / "blocks")
+    store = DiskBlockStore(Topology(2, 3), tmp_path / "blocks")
     store.put(3, 7, 1, b"payload")
     store.fail_node(1)
     with pytest.raises(NodeFailure, match=r"stripe 3 block 7"):

@@ -10,7 +10,7 @@ import math
 import numpy as np
 import pytest
 
-from repro.ckpt import BlockStore, ClusterTopology
+from repro.ckpt import BlockStore
 from repro.ckpt.stripe import StripeCodec
 from repro.core import (MTTDLParams, make_alrc, make_unilrc,
                         tolerable_failures)
@@ -25,6 +25,7 @@ from repro.sim import (DssTrial, Exponential, FailureModel, SimConfig,
                        simulate_stripe_mttdl)
 from repro.sim.events import EventQueue
 from repro.sim.repair import RepairScheduler
+from repro.topo import Topology
 
 # Stressed regime: μ/λ ≈ 10 so absorption is simulable (the paper's real
 # parameters put MTTDL at 1e60 years — no Monte Carlo reaches that).
@@ -307,7 +308,7 @@ def test_baseline_ecwide_has_cross_repair_traffic():
 
 def test_data_path_scheduler_repairs_real_bytes(kernel_counters):
     code = make_unilrc(1, 4)
-    store = BlockStore(ClusterTopology(4, 8))
+    store = BlockStore(Topology(4, 8))
     codec = StripeCodec(code, store, block_size=512)
     rng = np.random.default_rng(3)
     payload = rng.integers(0, 256, code.k * 512 * 12, np.uint8).tobytes()
@@ -339,7 +340,7 @@ def test_data_path_correlated_pattern_grouping(kernel_counters):
     multi-erasure blocks from fast-path blocks."""
     S = 6
     code = make_unilrc(1, 4)
-    store = BlockStore(ClusterTopology(4, 8))
+    store = BlockStore(Topology(4, 8))
     codec = StripeCodec(code, store, block_size=512)
     rng = np.random.default_rng(7)
     payload = rng.integers(0, 256, code.k * 512 * S, np.uint8).tobytes()

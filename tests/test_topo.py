@@ -18,6 +18,7 @@ Headline assertions (ISSUE 5):
 import numpy as np
 import pytest
 
+# repro-lint: allow=RA005  (the alias-identity shim test below)
 from repro.ckpt import BlockStore, ClusterTopology
 from repro.ckpt.stripe import StripeCodec
 from repro.core import MTTDLParams, make_alrc, make_unilrc
@@ -43,7 +44,7 @@ P = MTTDLParams()
 def test_topology_subsumes_cluster_topology():
     """The ckpt store's ClusterTopology is the shared Topology now —
     same constructor, same round-robin slot arithmetic."""
-    assert ClusterTopology is Topology
+    assert ClusterTopology is Topology  # repro-lint: allow=RA005
     t = Topology(4, 8)
     assert t.num_nodes == 32
     assert t.node_of(2, 3) == 19
@@ -294,13 +295,13 @@ def test_scheduler_default_stays_markov_calibrated():
 # Gateway pre-fold on the degraded-read data path
 # ---------------------------------------------------------------------------
 
-def _degraded_setup(use_kernels, aggregation, *, t=2, S=4, bs=256):
+def _degraded_setup(backend, aggregation, *, t=2, S=4, bs=256):
     code = make_unilrc(2, 4)
     pl = place_unilrc_relaxed(code, t=t)
     npc = max(len(pl.cluster_blocks(c)) for c in range(pl.num_clusters)) + 1
     store = BlockStore(Topology(pl.num_clusters, npc))
     codec = StripeCodec(code, store, block_size=bs, placement=pl,
-                        use_kernels=use_kernels,
+                        backend=backend,
                         gateway_aggregation=aggregation)
     rng = np.random.default_rng(11)
     payload = rng.integers(0, 256, code.k * bs * S, np.uint8).tobytes()
@@ -311,13 +312,12 @@ def _degraded_setup(use_kernels, aggregation, *, t=2, S=4, bs=256):
     return code, pl, store, codec, metas, block
 
 
-@pytest.mark.parametrize("use_kernels", [True, False],
-                         ids=["kernels", "numpy"])
-def test_gateway_prefold_byte_identical(use_kernels):
+@pytest.mark.parametrize("backend", ["kernels", "numpy"])
+def test_gateway_prefold_byte_identical(backend):
     outs = {}
     for agg in (False, True):
         _, pl, store, codec, metas, block = _degraded_setup(
-            use_kernels, agg)
+            backend, agg)
         rc = pl.assignment[block]
         outs[agg] = [codec.degraded_read(m, block, reader_cluster=rc)
                      for m in metas]
@@ -331,7 +331,7 @@ def test_gateway_prefold_ships_t_minus_1_blocks(kernel_counters):
     pre-fold per remote cluster plus one combine."""
     t, S, bs = 2, 4, 256
     code, pl, store, codec, metas, block = _degraded_setup(
-        True, True, t=t, S=S, bs=bs)
+        "kernels", True, t=t, S=S, bs=bs)
     fe = RequestFrontend(codec)
     rc = pl.assignment[block]
     handles = [fe.submit_degraded_read(m, block, reader_cluster=rc)
@@ -357,7 +357,7 @@ def test_gateway_prefold_ships_t_minus_1_blocks(kernel_counters):
 def test_gateway_prefold_off_ships_every_remote_block():
     t, S, bs = 2, 4, 256
     code, pl, store, codec, metas, block = _degraded_setup(
-        True, False, t=t, S=S, bs=bs)
+        "kernels", False, t=t, S=S, bs=bs)
     rc = pl.assignment[block]
     for m in metas:
         codec.degraded_read(m, block, reader_cluster=rc)
@@ -368,7 +368,7 @@ def test_gateway_prefold_off_ships_every_remote_block():
 
 
 def test_rebuild_report_counts_aggregated_bytes():
-    code, pl, store, codec, metas, block = _degraded_setup(True, True)
+    code, pl, store, codec, metas, block = _degraded_setup("kernels", True)
     fe = RequestFrontend(codec)
     pairs = [(m.stripe_id, block) for m in metas]
     rc = pl.assignment[block]

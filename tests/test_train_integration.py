@@ -4,12 +4,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.ckpt import BlockStore, CheckpointManager, ClusterTopology
+from repro.ckpt import BlockStore, CheckpointManager
 from repro.core.codes import make_unilrc
 from repro.data import DataConfig, SyntheticTokenDataset
 from repro.models import ModelConfig, uniform_segments
 from repro.optim import AdamWConfig
 from repro.train import TrainConfig, init_train_state, make_train_step
+from repro.topo import Topology
 
 TINY = ModelConfig(
     name="tiny", family="dense", d_model=64, num_heads=4, num_kv_heads=2,
@@ -66,7 +67,7 @@ def test_checkpoint_restart_resumes_identically():
     state = init_train_state(TINY, jax.random.PRNGKey(0))
     state, _ = run_steps(step_fn, ds, state, 0, 10)
 
-    store = BlockStore(ClusterTopology(4, 6))
+    store = BlockStore(Topology(4, 6))
     mgr = CheckpointManager(store, make_unilrc(1, 4), block_size=4096)
     host_state = jax.tree_util.tree_map(np.asarray, state)
     mgr.save(host_state, step=10)
