@@ -47,6 +47,11 @@ Usage (what .github/workflows/ci.yml runs):
         --topo-fresh artifacts/bench/fig_topology_repair.json \
         --conc-baseline /tmp/conc_baseline.json \
         --conc-fresh artifacts/bench/fig_concurrent_repair.json
+
+The static-analysis gates run standalone (no benchmark baselines
+needed — CI's `analysis` job):
+    python -m repro.analysis.schedcheck --grid --out /tmp/schedcheck.json
+    python -m benchmarks.check_regression --sched-model /tmp/schedcheck.json
 """
 from __future__ import annotations
 
@@ -343,11 +348,55 @@ def check_analysis_hazards(report: dict) -> list[str]:
     return failures
 
 
+def check_sched_model(batch: dict, *, min_scenarios: int = 4) -> list[str]:
+    """Static-analysis gate over the scheduler model checker's output
+    (`python -m repro.analysis.schedcheck --grid --out ...`): every
+    bounded scenario must prove every property claim exhaustively, all
+    six property names must appear across the grid, the model/simulator
+    differential harness must agree, the exploration must be launch-free,
+    and the grid must not silently shrink below `min_scenarios`."""
+    failures: list[str] = []
+    certs = batch.get("certificates", [])
+    if len(certs) < min_scenarios:
+        failures.append(
+            f"schedcheck batch has {len(certs)} scenarios, expected "
+            f">= {min_scenarios} — the scenario grid shrank")
+    required = {"link_safety", "deadlock_freedom", "work_conservation",
+                "starvation_freedom", "bounded_priority_inversion",
+                "pipe_determinism", "model_sim_agreement"}
+    seen: set[str] = set()
+    for cert in certs:
+        cid = f"{cert.get('code', '?')}[{cert.get('placement', '?')}]"
+        claims = cert.get("claims", [])
+        seen |= {c.get("name") for c in claims}
+        for c in claims:
+            if not c.get("ok"):
+                failures.append(
+                    f"{cid}: property {c.get('name')} failed "
+                    f"[{c.get('method')}]: {c.get('detail')}")
+        if cert.get("kernel_launches", 0) != 0:
+            failures.append(
+                f"{cid}: model checking launched "
+                f"{cert['kernel_launches']} kernels — the explorer must "
+                f"be pure host-side control flow")
+        p = cert.get("params", {})
+        print(f"{cid}: {p.get('states', '?')} states, "
+              f"{p.get('transitions', '?')} transitions, "
+              f"{len([c for c in claims if not c.get('ok')])} failed, "
+              f"{cert.get('kernel_launches', 0)} launches")
+    missing = required - seen
+    if certs and missing:
+        failures.append(
+            f"schedcheck grid never checked {sorted(missing)} — "
+            f"a property silently dropped out of the scenario set")
+    return failures
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--baseline", required=True, type=pathlib.Path,
+    ap.add_argument("--baseline", type=pathlib.Path,
                     help="committed fig_batched_recovery.json")
-    ap.add_argument("--fresh", required=True, type=pathlib.Path,
+    ap.add_argument("--fresh", type=pathlib.Path,
                     help="fig_batched_recovery.json from this run")
     ap.add_argument("--corr-baseline", type=pathlib.Path,
                     help="committed fig_correlated_recovery.json")
@@ -384,6 +433,12 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--analysis-min-certs", type=int, default=6,
                     help="minimum certificates expected in the batch "
                          "(3 paper schemes x 2 placement widths)")
+    ap.add_argument("--sched-model", type=pathlib.Path,
+                    help="certificate batch from "
+                         "`python -m repro.analysis.schedcheck --grid`")
+    ap.add_argument("--sched-min-scenarios", type=int, default=4,
+                    help="minimum bounded scenarios the model checker "
+                         "must have explored")
     ap.add_argument("--min-speedup", type=float, default=2.0,
                     help="absolute floor on batched speedup per row")
     ap.add_argument("--rel-floor", type=float, default=0.4,
@@ -391,9 +446,20 @@ def main(argv: list[str] | None = None) -> int:
                          "the committed baseline's")
     args = ap.parse_args(argv)
 
-    baseline = json.loads(args.baseline.read_text())
-    fresh = json.loads(args.fresh.read_text())
-    failures = check(baseline, fresh, args.min_speedup, args.rel_floor)
+    if (args.baseline is None) != (args.fresh is None):
+        ap.error("--baseline and --fresh go together")
+    any_gate = any(x is not None for x in (
+        args.fresh, args.analysis_cert, args.analysis_hazards,
+        args.sched_model))
+    if not any_gate:
+        ap.error("nothing to check: pass --baseline/--fresh and/or an "
+                 "analysis gate (--analysis-cert, --analysis-hazards, "
+                 "--sched-model)")
+    failures: list[str] = []
+    if args.fresh is not None:
+        baseline = json.loads(args.baseline.read_text())
+        fresh = json.loads(args.fresh.read_text())
+        failures += check(baseline, fresh, args.min_speedup, args.rel_floor)
     if (args.corr_baseline is None) != (args.corr_fresh is None):
         ap.error("--corr-baseline and --corr-fresh go together")
     if args.corr_fresh is not None:
@@ -430,6 +496,10 @@ def main(argv: list[str] | None = None) -> int:
     if args.analysis_hazards is not None:
         failures += check_analysis_hazards(
             json.loads(args.analysis_hazards.read_text()))
+    if args.sched_model is not None:
+        failures += check_sched_model(
+            json.loads(args.sched_model.read_text()),
+            min_scenarios=args.sched_min_scenarios)
     if failures:
         for f in failures:
             print(f"REGRESSION: {f}", file=sys.stderr)

@@ -1,6 +1,6 @@
 """Static analysis subsystem: prove the paper's invariants before bytes move.
 
-Three pillars, each a CI gate:
+Four pillars, each a CI gate:
 
   * `verify`  — symbolic verifier: certify a (Code, placement) pair over
     GF(2^8) algebra alone (local MDS, optimal-LRC distance, XOR-linear
@@ -9,10 +9,17 @@ Three pillars, each a CI gate:
   * `hazards` — static RAW/WAW/WAR analysis of a queued `CodingEngine`
     flush: proves every coalesced update wave conflict-free and staged
     (the PR-3 stale-parity ordering is rejected before execution).
+  * `model` + `schedcheck` — explicit-state model checking of the
+    concurrent repair scheduler: every admission/release interleaving
+    of bounded damage scenarios is explored against the scheduler's own
+    pure transition core (`sim.repair.SchedCore`), proving link safety,
+    deadlock- and starvation-freedom, work conservation, bounded
+    priority inversion, and pipe-mode determinism — with violating
+    traces replayable through the real `Simulator`.
   * `lint`    — repo-invariant AST lint (`python -m repro.analysis.lint
     src tests`): kernel calls bypassing `KERNEL_LAUNCHES` accounting,
     float arithmetic on GF arrays, plan-payload mutation, host loops in
-    batched hot paths.
+    batched hot paths, mixed-unit arithmetic (`_hours` vs `_TB`).
 
 This `__init__` stays import-light on purpose: the lint pillar is
 stdlib-only and must run (in CI and pre-commit) without jax installed,
@@ -22,7 +29,8 @@ from __future__ import annotations
 
 from typing import Any
 
-__all__ = ["certificate", "hazards", "lint", "verify"]
+__all__ = ["certificate", "hazards", "lint", "model", "schedcheck",
+           "verify"]
 
 
 def __getattr__(name: str) -> Any:

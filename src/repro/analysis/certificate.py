@@ -20,7 +20,13 @@ import dataclasses
 import json
 from typing import Any
 
-CERTIFICATE_VERSION = 1
+# Schema history:
+#   1 — initial (PR 6); serialization was dict-ordered, so equal
+#       certificates could emit different bytes.
+#   2 — deterministic serialization: every json.dumps sorts keys, so
+#       byte-equal JSON <=> equal certificate content and artifacts
+#       diff cleanly in CI (golden-file test pins this).
+CERTIFICATE_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,7 +97,7 @@ class Certificate:
                    version=int(d.get("version", CERTIFICATE_VERSION)))
 
     def to_json(self, indent: int | None = None) -> str:
-        return json.dumps(self.to_dict(), indent=indent)
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
 
     @classmethod
     def from_json(cls, s: str) -> "Certificate":
@@ -107,10 +113,12 @@ class Certificate:
 
 def dump_certificates(certs: list[Certificate],
                       indent: int | None = 2) -> str:
-    """Serialize a certificate batch (the --grid CLI output) to JSON."""
+    """Serialize a certificate batch (the --grid CLI output) to JSON.
+    Deterministic byte-for-byte: keys are sorted at every level, so two
+    batches with equal content always serialize identically."""
     return json.dumps({"version": CERTIFICATE_VERSION,
                        "certificates": [c.to_dict() for c in certs]},
-                      indent=indent)
+                      indent=indent, sort_keys=True)
 
 
 def load_certificates(s: str) -> list[Certificate]:

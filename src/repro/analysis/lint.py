@@ -31,6 +31,18 @@ story leans on:
          `ckpt/__init__.py`, and the constructors that route the shim
          in `ckpt/stripe.py` / `ckpt/manager.py`) are exempt by path;
          the tests that pin the shims carry explicit waivers.
+  RA006  dimensional hygiene — adding, subtracting, or comparing
+         quantities whose names carry DIFFERENT unit suffixes
+         (`_hours`, `_TB`, `_per_hour`, `_TB_per_hour`, `_Gbps`):
+         `duration_hours + size_TB` type-checks, runs, and produces a
+         number that is dimensional nonsense — the Markov-unit
+         agreement bug class PR 5/7 pinned by hand. A small local
+         dataflow pass propagates units through straight-line
+         assignments (`t = params.T_hours; t + x_TB` is caught);
+         multiplication/division deliberately erases units (that IS
+         the conversion idiom: `size_TB / bw_TB_per_hour` makes
+         hours), and calls carry a unit only when the callee's own
+         name is suffixed (`repair_bandwidth_TB_per_hour(p)`).
 
 Waive a finding with a same-line comment: `# repro-lint: allow=RA001`
 (comma-separated rule ids) — used by the kernel oracle tests that call
@@ -74,7 +86,20 @@ DEPRECATED_NAMES = frozenset({"ClusterTopology"})
 DEPRECATED_KEYWORDS = frozenset({"use_kernels"})
 FLOAT_DTYPES = frozenset({"float", "float16", "float32", "float64",
                           "double", "half"})
+# RA006 unit vocabulary, longest suffix first (a `_TB_per_hour` name
+# must not be read as `_per_hour`).
+UNIT_SUFFIXES = ("_TB_per_hour", "_per_hour", "_hours", "_TB", "_Gbps")
 _WAIVER_RE = re.compile(r"#\s*repro-lint:\s*allow=([A-Z0-9,\s]+)")
+
+
+def _unit_of_name(name: str) -> str | None:
+    """Infer the unit a bare identifier claims: its unit suffix, or the
+    unit itself when the whole name IS the unit (`hours`, `block_TB`
+    and plain `TB` both read as TB-denominated)."""
+    for suf in UNIT_SUFFIXES:
+        if name.endswith(suf) or name == suf[1:]:
+            return suf[1:]
+    return None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,6 +140,9 @@ class _FileLinter(ast.NodeVisitor):
         self.shim_path = shim_path
         self.findings: list[Finding] = []
         self.loop_depth = 0
+        # RA006 local dataflow: per-scope map of unsuffixed variable
+        # name -> unit it was assigned from.
+        self._unit_envs: list[dict[str, str]] = [{}]
         # names imported from repro.kernels.* that alias a raw kernel or
         # a single-item op — `from repro.kernels.ops import encode as e`
         self.kernel_aliases: dict[str, str] = {}
@@ -246,10 +274,106 @@ class _FileLinter(ast.NodeVisitor):
     def visit_Assign(self, node: ast.Assign) -> None:
         for target in node.targets:
             self._check_plan_mutation(target, node)
+        self._track_unit_assign(node.targets, node.value)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            self._track_unit_assign([node.target], node.value)
         self.generic_visit(node)
 
     def visit_AugAssign(self, node: ast.AugAssign) -> None:
         self._check_plan_mutation(node.target, node)
+        if isinstance(node.op, (ast.Add, ast.Sub)):
+            self._check_unit_mix(node, node.target, node.value,
+                                 op="+=" if isinstance(node.op, ast.Add)
+                                 else "-=")
+        self.generic_visit(node)
+
+    # -- units (RA006) --------------------------------------------------------
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._unit_envs.append({})
+        self.generic_visit(node)
+        self._unit_envs.pop()
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self._unit_envs.append({})
+        self.generic_visit(node)
+        self._unit_envs.pop()
+
+    def _expr_unit(self, node: ast.expr) -> str | None:
+        """The unit an expression is denominated in, or None when it is
+        unitless / unknown. `*` and `/` erase units on purpose — they
+        are how conversions are spelled — and so does any call whose
+        name carries no unit suffix (a conversion helper)."""
+        if isinstance(node, ast.Name):
+            unit = _unit_of_name(node.id)
+            if unit is not None:
+                return unit
+            for env in reversed(self._unit_envs):
+                if node.id in env:
+                    return env[node.id]
+            return None
+        if isinstance(node, ast.Attribute):
+            return _unit_of_name(node.attr)
+        if isinstance(node, ast.Call):
+            func = node.func
+            if isinstance(func, ast.Name):
+                return _unit_of_name(func.id)
+            if isinstance(func, ast.Attribute):
+                return _unit_of_name(func.attr)
+            return None
+        if isinstance(node, ast.Subscript):
+            return self._expr_unit(node.value)
+        if isinstance(node, ast.UnaryOp):
+            return self._expr_unit(node.operand)
+        if (isinstance(node, ast.BinOp)
+                and isinstance(node.op, (ast.Add, ast.Sub))):
+            lu = self._expr_unit(node.left)
+            ru = self._expr_unit(node.right)
+            return lu if lu == ru else None
+        return None
+
+    def _track_unit_assign(self, targets: Sequence[ast.expr],
+                           value: ast.expr) -> None:
+        """Straight-line dataflow: `t = params.T_hours` gives `t` the
+        hours unit until reassigned. Names whose own suffix already
+        declares a unit need no tracking (the suffix wins)."""
+        if len(targets) != 1 or not isinstance(targets[0], ast.Name):
+            return
+        name = targets[0].id
+        if _unit_of_name(name) is not None:
+            return
+        unit = self._expr_unit(value)
+        env = self._unit_envs[-1]
+        if unit is not None:
+            env[name] = unit
+        else:
+            env.pop(name, None)
+
+    def _check_unit_mix(self, node: ast.AST, left: ast.expr,
+                        right: ast.expr, *, op: str) -> None:
+        lu = self._expr_unit(left)
+        ru = self._expr_unit(right)
+        if lu is not None and ru is not None and lu != ru:
+            self._emit(node, "RA006",
+                       f"`{op}` mixes {lu}- and {ru}-denominated "
+                       f"quantities — convert explicitly (multiply/"
+                       f"divide, or route through a conversion helper)")
+
+    def visit_BinOp(self, node: ast.BinOp) -> None:
+        if isinstance(node.op, (ast.Add, ast.Sub)):
+            self._check_unit_mix(node, node.left, node.right,
+                                 op="+" if isinstance(node.op, ast.Add)
+                                 else "-")
+        self.generic_visit(node)
+
+    def visit_Compare(self, node: ast.Compare) -> None:
+        operands = [node.left] + list(node.comparators)
+        for cmp_op, lhs, rhs in zip(node.ops, operands, operands[1:]):
+            if isinstance(cmp_op, (ast.Lt, ast.LtE, ast.Gt, ast.GtE,
+                                   ast.Eq, ast.NotEq)):
+                self._check_unit_mix(node, lhs, rhs, op="comparison")
         self.generic_visit(node)
 
 

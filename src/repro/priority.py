@@ -51,6 +51,16 @@ class Priority(enum.IntEnum):
     NORMAL = 2
 
 
+def tier_label(p: Priority) -> str:
+    """The RAFI risk-tier reading of a priority value. Enum aliases do
+    not surface through `.name` (`Priority(0).name` is "CLIENT_READ"),
+    so reports about *repair* work use this to say URGENT/EXPEDITED/
+    NORMAL instead of the serving-class spelling."""
+    return {Priority.URGENT: "URGENT",
+            Priority.EXPEDITED: "EXPEDITED",
+            Priority.NORMAL: "NORMAL"}[Priority(p)]
+
+
 def risk_tier(live_erasures: int, tolerable: int) -> Priority:
     """Map a stripe's live erasure count onto the shared scale.
 

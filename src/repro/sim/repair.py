@@ -119,6 +119,189 @@ class RepairLedger:
         return self.cross_blocks_read / total if total else 0.0
 
 
+class SchedCore:
+    """The scheduler's pure transition semantics, shared with the model
+    checker.
+
+    Everything policy-shaped about link/pipe-mode repair — candidate
+    grouping and ordering, per-pair link schedules under the live
+    erasure pattern, job cost/duration, risk tiering, the round-robin
+    cursor advance, traffic accounting — lives here as side-effect-free
+    functions of explicit state: the pending pair set, a `missing_of`
+    view, the rotation cursor. `RepairScheduler` delegates every
+    decision to this core against its live state; the exhaustive
+    interleaving explorer (`repro.analysis.model`) evaluates the SAME
+    core against abstract states, so the model checker and the
+    event-driven scheduler cannot drift apart — there is only one
+    implementation of the semantics.
+    """
+
+    def __init__(self, placement: Placement, params: MTTDLParams, *,
+                 block_TB: float, topology: Topology | None = None):
+        self.placement = placement
+        self.params = params
+        self.block_TB = block_TB
+        self.use_links = topology is not None
+        self.bw = repair_bandwidth_TB_per_hour(params)
+        if topology is None:
+            topology = Topology(placement.num_clusters,
+                                max(placement.cluster_sizes()))
+        self.topology = topology
+        self.net = NetworkModel.from_repair_pipe(topology, self.bw,
+                                                 params.delta)
+        code = placement.code
+        self.tolerable = tolerable_failures(code)
+        self.traffic = per_block_repair_traffic(code, placement)
+        self.eff = effective_block_traffic(code, placement, params.delta)
+        plans = plans_for(code)
+        # Per-block unit link schedule for the minimal plan (scaled by
+        # block_TB · #pairs at job time).
+        self.min_sched = [self.net.recovery_schedule(
+            placement.assignment, b, plans[b].sources, plan=plans[b])
+            for b in range(code.n)]
+
+    MissingOf = Callable[[int], AbstractSet[int]]
+
+    def multi(self, sid: int, missing_of: MissingOf) -> bool:
+        return len(missing_of(sid)) >= 2
+
+    def tier(self, sid: int, missing_of: MissingOf) -> Priority:
+        return risk_tier(len(missing_of(sid)), self.tolerable)
+
+    def candidate_groups(self, pending, missing_of: MissingOf,
+                         rr_cluster: int
+                         ) -> list[tuple[tuple, list[tuple[int, int]]]]:
+        """Pending pairs bucketed into plan groups, most-urgent first.
+
+        Pipe mode freezes the PR-5 ordering — (multi-failure?, block) —
+        so the Markov-calibrated trajectory is reproduced exactly; the
+        chain's μ' state does not distinguish risk tiers. Link mode
+        orders by (risk tier, time-to-exposure, rotated dominant source
+        cluster, block) and buckets by (tier, block) so one job is one
+        priority class end to end."""
+        groups: dict[tuple, list[tuple[int, int]]] = {}
+        if not self.use_links:
+            for (sid, b) in pending:
+                rank = 0 if self.multi(sid, missing_of) else 1
+                groups.setdefault((rank, b), []).append((sid, b))
+            return [(key, groups[key]) for key in sorted(groups)]
+        for (sid, b) in pending:
+            groups.setdefault((self.tier(sid, missing_of), b),
+                              []).append((sid, b))
+
+        def order(item):
+            (tier, block), pairs = item
+            exposure = min(failures_to_exposure(
+                len(missing_of(sid)), self.tolerable)
+                for sid, _ in pairs)
+            rot = ((self.dominant_cluster(pairs, missing_of) - rr_cluster)
+                   % self.topology.num_clusters)
+            return (int(tier), exposure, rot, block)
+        return sorted(groups.items(), key=order)
+
+    def dominant_cluster(self, group: list[tuple[int, int]],
+                         missing_of: MissingOf) -> int:
+        """The survivor cluster shipping the most bytes for this group
+        (ties to the lowest id); the target's home cluster when nothing
+        crosses a gateway. The round-robin interleave cursor rotates
+        over this, spreading concurrent jobs across survivor uplinks."""
+        uplink: dict[int, float] = {}
+        for sid, b in group:
+            sched = (self.pair_schedule(sid, b, missing_of)
+                     if self.multi(sid, missing_of) else self.min_sched[b])
+            for c, bytes_ in sched.uplink.items():
+                uplink[c] = uplink.get(c, 0.0) + bytes_
+        if uplink:
+            return min(uplink, key=lambda c: (-uplink[c], c))
+        return int(self.placement.assignment[group[0][1]])
+
+    def next_rr(self, group: list[tuple[int, int]],
+                missing_of: MissingOf) -> int:
+        """Cursor value after admitting `group` (link mode only)."""
+        return ((self.dominant_cluster(group, missing_of) + 1)
+                % self.topology.num_clusters)
+
+    def pair_schedule(self, sid: int, b: int,
+                      missing_of: MissingOf) -> LinkSchedule:
+        """Unit-volume link schedule for repairing (sid, b) under the
+        stripe's CURRENT erasure pattern (minimal plan when its sources
+        are intact, the real multi-erasure decode plan otherwise)."""
+        plan = plans_for(self.placement.code)[b]
+        others = set(missing_of(sid)) - {b}
+        if others.intersection(plan.sources):
+            try:
+                dplan = decode_plan_cached(self.placement.code,
+                                           tuple(others | {b}))
+                return self.net.recovery_schedule(
+                    self.placement.assignment, b, dplan.sources, plan=dplan)
+            except ValueError:          # beyond tolerance right now
+                pass
+        return self.min_sched[b]
+
+    def job_cost(self, group: list[tuple[int, int]], missing_of: MissingOf
+                 ) -> tuple[float, str, LinkSchedule]:
+        """(hours, binding link, merged schedule) for one job run in
+        isolation — the duration a fluid reservation divides the job's
+        bytes by (`LinkReservations`)."""
+        multi = any(self.multi(sid, missing_of) for sid, _ in group)
+        if not self.use_links:
+            if multi:
+                # μ' = 1/T exactly
+                return self.params.T_hours, "detection", LinkSchedule()
+            # The chain's units, bit for bit: C_b = cross_b + δ·inner_b
+            # from the SAME metrics the Markov μ is computed from (the
+            # link schedule's inner differs from the chain's C2 under
+            # aggregation — gateway-local fold reads vs ARC−CARC — so
+            # pipe mode must charge the metrics, not the schedule).
+            # δ=0 with zero cross traffic would yield zero-duration jobs
+            # and a livelocked event loop when a job re-enqueues its
+            # dropped pairs.
+            traffic_TB = sum(self.eff[b] for _, b in group) * self.block_TB
+            return (max(traffic_TB / self.bw, 1e-9), "pipe",
+                    LinkSchedule())
+        merged = LinkSchedule()
+        for sid, b in group:
+            merged.add(self.pair_schedule(sid, b, missing_of) if multi
+                       else self.min_sched[b], self.block_TB)
+        hours, label = self.net.bottleneck(merged)
+        label = label.split("[")[0]        # uplink[3] -> uplink
+        if multi and self.params.T_hours >= hours:
+            return self.params.T_hours, "detection", merged
+        return max(hours, 1e-9), label, merged
+
+    def job_tier(self, group: list[tuple[int, int]],
+                 missing_of: MissingOf) -> Priority:
+        """The priority class one job rides end to end: the most urgent
+        member tier in link mode, the frozen multi/single split in pipe
+        mode (the Markov chain's μ' state knows only that much)."""
+        if self.use_links:
+            return min(self.tier(sid, missing_of) for sid, _ in group)
+        return (Priority.URGENT
+                if any(self.multi(sid, missing_of) for sid, _ in group)
+                else Priority.NORMAL)
+
+    def pair_traffic(self, sid: int, b: int,
+                     missing_of: MissingOf) -> tuple[int, int]:
+        """(total, cross) blocks read to repair (sid, b) given the stripe's
+        CURRENT erasure pattern. Single failure (or plan sources intact):
+        the minimal plan. Otherwise the real multi-erasure decode plan —
+        whose sources differ, e.g. a UniLRC double-failure inside one
+        local group reads global parities from other clusters even under
+        the native placement. Cross counts go through the network
+        model's aggregation-validity check either way."""
+        plan = plans_for(self.placement.code)[b]
+        others = set(missing_of(sid)) - {b}
+        if not others.intersection(plan.sources):
+            return (int(self.traffic[b, 0]), int(self.traffic[b, 1]))
+        try:
+            dplan = decode_plan_cached(self.placement.code,
+                                       tuple(others | {b}))
+        except ValueError:                       # beyond tolerance right now
+            return (int(self.traffic[b, 0]), int(self.traffic[b, 1]))
+        return self.net.recovery_blocks(self.placement.assignment, b,
+                                        dplan.sources, plan=dplan)
+
+
 class RepairScheduler:
     """Per-link, plan-grouped, risk-tiered concurrent repair.
 
@@ -130,6 +313,15 @@ class RepairScheduler:
     bottleneck charging with concurrent admission (see module
     docstring); `max_inflight=1` there recovers the serialized
     baseline the concurrency benchmarks compare against.
+
+    All policy decisions route through a `SchedCore` — the pure
+    transition functions the model checker (`repro.analysis.schedcheck`)
+    exhaustively explores. `observer`, if given, receives
+    `admitted(group, tier, hours, bottleneck, rates)` /
+    `completed(group)` callbacks in event order (the differential
+    harness records these to prove model/simulator step agreement).
+    `unsafe_admission=True` re-introduces the oversubscribing admission
+    bug the model checker exists to rule out — test-only, never set it.
     """
 
     def __init__(self, sim: Simulator, placement: Placement,
@@ -140,7 +332,9 @@ class RepairScheduler:
                  codec=None,
                  topology: Topology | None = None,
                  max_inflight: int | None = None,
-                 exclude_node_of: Callable[[int, int], int] | None = None):
+                 exclude_node_of: Callable[[int, int], int] | None = None,
+                 observer=None,
+                 unsafe_admission: bool = False):
         self.sim = sim
         self.placement = placement
         self.params = params
@@ -156,9 +350,8 @@ class RepairScheduler:
             from repro.io import RequestFrontend
             self.frontend = RequestFrontend(codec)
         self.exclude_node_of = exclude_node_of
+        self.observer = observer
         self.ledger = RepairLedger()
-        code = placement.code
-        self._bw = repair_bandwidth_TB_per_hour(params)
         self._use_links = topology is not None
         if max_inflight is not None and max_inflight < 1:
             raise ValueError("max_inflight must be >= 1")
@@ -168,22 +361,12 @@ class RepairScheduler:
             raise ValueError("concurrent repair (max_inflight > 1) "
                              "requires an explicit topology")
         self.max_inflight = (1 if not self._use_links else max_inflight)
-        if topology is None:
-            topology = Topology(placement.num_clusters,
-                                max(placement.cluster_sizes()))
-        self.topology = topology
-        self.net = NetworkModel.from_repair_pipe(topology, self._bw,
-                                                 params.delta)
-        self.reservations = LinkReservations(self.net)
-        self._tolerable = tolerable_failures(code)
-        self._traffic = per_block_repair_traffic(code, placement)
-        self._eff = effective_block_traffic(code, placement, params.delta)
-        plans = plans_for(code)
-        # Per-block unit link schedule for the minimal plan (scaled by
-        # block_TB · #pairs at job time).
-        self._sched = [self.net.recovery_schedule(
-            placement.assignment, b, plans[b].sources, plan=plans[b])
-            for b in range(code.n)]
+        self.core = SchedCore(placement, params, block_TB=block_TB,
+                              topology=topology)
+        self.topology = self.core.topology
+        self.net = self.core.net
+        self.reservations = LinkReservations(
+            self.net, unsafe_ignore_residual=unsafe_admission)
         self._pending: dict[tuple[int, int], None] = {}   # ordered set
         self._damaged_at: dict[tuple[int, int], float] = {}
         # In-flight jobs: event seq -> per-link rates reserved for it
@@ -210,125 +393,23 @@ class RepairScheduler:
         return len(self._active)
 
     def _multi(self, sid: int) -> bool:
-        return len(self.stripe_missing(sid)) >= 2
+        return self.core.multi(sid, self.stripe_missing)
 
     def _tier(self, sid: int) -> Priority:
-        return risk_tier(len(self.stripe_missing(sid)), self._tolerable)
+        return self.core.tier(sid, self.stripe_missing)
 
     # -- scheduling ----------------------------------------------------------
     def _candidate_groups(self) -> list[tuple[tuple, list[tuple[int, int]]]]:
-        """Pending pairs bucketed into plan groups, most-urgent first.
-
-        Pipe mode freezes the PR-5 ordering — (multi-failure?, block) —
-        so the Markov-calibrated trajectory is reproduced exactly; the
-        chain's μ' state does not distinguish risk tiers. Link mode
-        orders by (risk tier, time-to-exposure, rotated dominant source
-        cluster, block) and buckets by (tier, block) so one job is one
-        priority class end to end."""
-        groups: dict[tuple, list[tuple[int, int]]] = {}
-        if not self._use_links:
-            for (sid, b) in self._pending:
-                rank = 0 if self._multi(sid) else 1
-                groups.setdefault((rank, b), []).append((sid, b))
-            return [(key, groups[key]) for key in sorted(groups)]
-        for (sid, b) in self._pending:
-            groups.setdefault((self._tier(sid), b), []).append((sid, b))
-
-        def order(item):
-            (tier, block), pairs = item
-            exposure = min(failures_to_exposure(
-                len(self.stripe_missing(sid)), self._tolerable)
-                for sid, _ in pairs)
-            rot = ((self._dominant_cluster(pairs) - self._rr_cluster)
-                   % self.topology.num_clusters)
-            return (int(tier), exposure, rot, block)
-        return sorted(groups.items(), key=order)
-
-    def _dominant_cluster(self, group: list[tuple[int, int]]) -> int:
-        """The survivor cluster shipping the most bytes for this group
-        (ties to the lowest id); the target's home cluster when nothing
-        crosses a gateway. The round-robin interleave cursor rotates
-        over this, spreading concurrent jobs across survivor uplinks."""
-        uplink: dict[int, float] = {}
-        for sid, b in group:
-            sched = (self._pair_schedule(sid, b) if self._multi(sid)
-                     else self._sched[b])
-            for c, bytes_ in sched.uplink.items():
-                uplink[c] = uplink.get(c, 0.0) + bytes_
-        if uplink:
-            return min(uplink, key=lambda c: (-uplink[c], c))
-        return int(self.placement.assignment[group[0][1]])
-
-    def _pair_schedule(self, sid: int, b: int) -> LinkSchedule:
-        """Unit-volume link schedule for repairing (sid, b) under the
-        stripe's CURRENT erasure pattern (minimal plan when its sources
-        are intact, the real multi-erasure decode plan otherwise)."""
-        plan = plans_for(self.placement.code)[b]
-        others = set(self.stripe_missing(sid)) - {b}
-        if others.intersection(plan.sources):
-            try:
-                dplan = decode_plan_cached(self.placement.code,
-                                           tuple(others | {b}))
-                return self.net.recovery_schedule(
-                    self.placement.assignment, b, dplan.sources, plan=dplan)
-            except ValueError:          # beyond tolerance right now
-                pass
-        return self._sched[b]
-
-    def _job_cost(self, group: list[tuple[int, int]]
-                  ) -> tuple[float, str, LinkSchedule]:
-        """(hours, binding link, merged schedule) for one job run in
-        isolation — the duration a fluid reservation divides the job's
-        bytes by (`LinkReservations`)."""
-        multi = any(self._multi(sid) for sid, _ in group)
-        if not self._use_links:
-            if multi:
-                # μ' = 1/T exactly
-                return self.params.T_hours, "detection", LinkSchedule()
-            # The chain's units, bit for bit: C_b = cross_b + δ·inner_b
-            # from the SAME metrics the Markov μ is computed from (the
-            # link schedule's inner differs from the chain's C2 under
-            # aggregation — gateway-local fold reads vs ARC−CARC — so
-            # pipe mode must charge the metrics, not the schedule).
-            # δ=0 with zero cross traffic would yield zero-duration jobs
-            # and a livelocked event loop when a job re-enqueues its
-            # dropped pairs.
-            traffic_TB = sum(self._eff[b] for _, b in group) * self.block_TB
-            return (max(traffic_TB / self._bw, 1e-9), "pipe",
-                    LinkSchedule())
-        merged = LinkSchedule()
-        for sid, b in group:
-            merged.add(self._pair_schedule(sid, b) if multi
-                       else self._sched[b], self.block_TB)
-        hours, label = self.net.bottleneck(merged)
-        label = label.split("[")[0]        # uplink[3] -> uplink
-        if multi and self.params.T_hours >= hours:
-            return self.params.T_hours, "detection", merged
-        return max(hours, 1e-9), label, merged
+        return self.core.candidate_groups(self._pending, self.stripe_missing,
+                                          self._rr_cluster)
 
     def _pair_traffic(self, sid: int, b: int) -> tuple[int, int]:
-        """(total, cross) blocks read to repair (sid, b) given the stripe's
-        CURRENT erasure pattern. Single failure (or plan sources intact):
-        the minimal plan. Otherwise the real multi-erasure decode plan —
-        whose sources differ, e.g. a UniLRC double-failure inside one
-        local group reads global parities from other clusters even under
-        the native placement. Cross counts go through the network
-        model's aggregation-validity check either way."""
-        plan = plans_for(self.placement.code)[b]
-        others = set(self.stripe_missing(sid)) - {b}
-        if not others.intersection(plan.sources):
-            return (int(self._traffic[b, 0]), int(self._traffic[b, 1]))
-        try:
-            dplan = decode_plan_cached(self.placement.code,
-                                       tuple(others | {b}))
-        except ValueError:                       # beyond tolerance right now
-            return (int(self._traffic[b, 0]), int(self._traffic[b, 1]))
-        return self.net.recovery_blocks(self.placement.assignment, b,
-                                        dplan.sources, plan=dplan)
+        return self.core.pair_traffic(sid, b, self.stripe_missing)
 
     def _admit(self, key: tuple, group: list[tuple[int, int]]) -> bool:
         """Try to start one group; True if it was put in flight."""
-        hours, bottleneck, merged = self._job_cost(group)
+        hours, bottleneck, merged = self.core.job_cost(group,
+                                                       self.stripe_missing)
         rates: dict[tuple, float] = {}
         if self._use_links:
             rates = self.reservations.rates_for(merged, hours)
@@ -336,20 +417,19 @@ class RepairScheduler:
                 self.reservations.rejected += 1
                 return False
             self.reservations.reserve(rates)
-            self._rr_cluster = ((self._dominant_cluster(group) + 1)
-                                % self.topology.num_clusters)
+            self._rr_cluster = self.core.next_rr(group, self.stripe_missing)
+        tier = self.core.job_tier(group, self.stripe_missing)
         for p in group:
             del self._pending[p]
-        tier = (min(self._tier(sid) for sid, _ in group)
-                if self._use_links else
-                (Priority.URGENT if any(self._multi(sid) for sid, _ in group)
-                 else Priority.NORMAL))
         ev = self.sim.schedule(hours, REPAIR_DONE,
                                pairs=group, hours=hours,
                                bottleneck=bottleneck, tier=tier)
         self._active[ev.seq] = rates
         self.ledger.max_concurrent_jobs = max(self.ledger.max_concurrent_jobs,
                                               len(self._active))
+        if self.observer is not None:
+            self.observer.admitted(list(group), tier, hours, bottleneck,
+                                   dict(rates))
         return True
 
     def _kick(self) -> None:
@@ -378,6 +458,8 @@ class RepairScheduler:
         group: list[tuple[int, int]] = ev.payload["pairs"]
         tier: Priority = ev.payload["tier"]
         rates = self._active.pop(ev.seq)
+        if self.observer is not None:
+            self.observer.completed(list(group))
         if self._use_links:
             self.reservations.release(rates)
             self.ledger.peak_link_utilization = max(

@@ -23,9 +23,13 @@ duck-types plan objects), so `core.placement`/`core.metrics`, the io
 engine, the ckpt store, and the failure simulator can all route their
 cluster arithmetic through it without cycles.
 """
-from .network import (LinkReservations, LinkSchedule, NetworkModel,
-                      cross_cluster_blocks, plan_is_xor_linear)
+from .network import (RESERVATION_EPS, LinkReservations, LinkSchedule,
+                      NetworkModel, cross_cluster_blocks, flow_rates,
+                      merge_reservation, plan_is_xor_linear,
+                      release_reservation, reservation_fits)
 from .topology import Topology
 
 __all__ = ["Topology", "NetworkModel", "LinkSchedule", "LinkReservations",
-           "cross_cluster_blocks", "plan_is_xor_linear"]
+           "cross_cluster_blocks", "plan_is_xor_linear", "RESERVATION_EPS",
+           "flow_rates", "reservation_fits", "merge_reservation",
+           "release_reservation"]

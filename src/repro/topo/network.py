@@ -248,6 +248,69 @@ class NetworkModel:
         raise KeyError(f"unknown link key {key!r}")
 
 
+#: Relative admission tolerance shared by the live ledger and the model
+#: checker: a job may fill a link to exactly its capacity; the epsilon
+#: only absorbs float rounding from the bytes/duration division, never
+#: real oversubscription.
+RESERVATION_EPS = 1e-9
+
+
+def flow_rates(net: NetworkModel, sched: LinkSchedule,
+               duration: float) -> dict[tuple, float]:
+    """Pure reservation arithmetic: a job of `duration` moving `sched`'s
+    bytes is a constant-rate flow of bytes/duration on every link it
+    touches. This is THE rate computation — `LinkReservations` and the
+    scheduler model checker (`repro.analysis.model`) both call it, so
+    the admission semantics cannot fork."""
+    if duration <= 0:
+        raise ValueError("transfer duration must be positive")
+    return {key: b / duration
+            for key, b in net.link_loads(sched).items()}
+
+
+def reservation_fits(used, rates, capacity_of, *,
+                     eps: float = RESERVATION_EPS,
+                     ignore_residual: bool = False) -> bool:
+    """Pure admission predicate: do `rates` fit the residual capacity on
+    every link, given the per-link `used` totals? Number-generic on
+    purpose: the live ledger passes floats, the model checker passes
+    exact `fractions.Fraction` sums (Python compares them exactly).
+
+    `ignore_residual=True` is the deliberately BROKEN variant behind the
+    model checker's counterexample tests: it checks each job in
+    isolation (rate <= capacity) and ignores what is already reserved —
+    the classic oversubscription bug. Never enable it outside a test.
+    """
+    for key, r in rates.items():
+        cap = capacity_of(key)
+        base = 0 if ignore_residual else used.get(key, 0)
+        if base + r > cap * (1.0 + eps):
+            return False
+    return True
+
+
+def merge_reservation(used, rates):
+    """Pure reserve: a new {link: total} map with `rates` added."""
+    new = dict(used)
+    for key, r in rates.items():
+        new[key] = new.get(key, 0) + r
+    return new
+
+
+def release_reservation(used, rates, capacity_of, *,
+                        eps: float = RESERVATION_EPS):
+    """Pure release: a new map with `rates` subtracted and float dust
+    (anything at or below eps * capacity) clamped back to idle."""
+    new = dict(used)
+    for key, r in rates.items():
+        left = new.get(key, 0) - r
+        if left <= eps * capacity_of(key):
+            new.pop(key, None)
+        else:
+            new[key] = left
+    return new
+
+
 class LinkReservations:
     """Fluid-flow residual-capacity ledger for concurrent transfers.
 
@@ -275,51 +338,45 @@ class LinkReservations:
     drop-to-zero clamp against residual dust).
     """
 
-    #: Relative tolerance for admission: a job is allowed to fill a link
-    #: to exactly its capacity; the epsilon only absorbs float rounding
-    #: from the bytes/duration division, never real oversubscription.
-    EPS = 1e-9
+    #: Relative tolerance for admission — see `RESERVATION_EPS`.
+    EPS = RESERVATION_EPS
 
-    def __init__(self, net: NetworkModel):
+    def __init__(self, net: NetworkModel, *,
+                 unsafe_ignore_residual: bool = False):
         self.net = net
         self._used: dict[tuple, float] = {}
         self.peak_utilization = 0.0   # max over time+links of used/capacity
         self.admitted = 0
         self.rejected = 0             # admission attempts that had to wait
+        # TEST-ONLY: the oversubscribing admission variant the model
+        # checker's counterexample harness re-introduces on purpose.
+        self.unsafe_ignore_residual = unsafe_ignore_residual
 
     def rates_for(self, sched: LinkSchedule,
                   duration: float) -> dict[tuple, float]:
-        if duration <= 0:
-            raise ValueError("transfer duration must be positive")
-        return {key: b / duration
-                for key, b in self.net.link_loads(sched).items()}
+        return flow_rates(self.net, sched, duration)
 
     def admits(self, rates: dict[tuple, float]) -> bool:
         """Would these per-link rates fit in the residual capacity?"""
-        for key, r in rates.items():
-            cap = self.net.link_capacity(key)
-            if self._used.get(key, 0.0) + r > cap * (1.0 + self.EPS):
-                return False
-        return True
+        return reservation_fits(
+            self._used, rates, self.net.link_capacity, eps=self.EPS,
+            ignore_residual=self.unsafe_ignore_residual)
 
     def reserve(self, rates: dict[tuple, float]) -> None:
         """Commit the rates (caller already checked `admits`)."""
-        for key, r in rates.items():
-            used = self._used.get(key, 0.0) + r
-            self._used[key] = used
+        self._used = merge_reservation(self._used, rates)
+        for key in rates:
             cap = self.net.link_capacity(key)
+            used = self._used.get(key, 0.0)
             if cap > 0 and used / cap > self.peak_utilization:
                 self.peak_utilization = used / cap
         self.admitted += 1
 
     def release(self, rates: dict[tuple, float]) -> None:
         """Return a completed job's rates — the exact floats reserved."""
-        for key, r in rates.items():
-            left = self._used.get(key, 0.0) - r
-            if left <= self.EPS * self.net.link_capacity(key):
-                self._used.pop(key, None)   # clamp float dust to idle
-            else:
-                self._used[key] = left
+        self._used = release_reservation(self._used, rates,
+                                         self.net.link_capacity,
+                                         eps=self.EPS)
 
     def utilization(self, key: tuple) -> float:
         cap = self.net.link_capacity(key)

@@ -350,6 +350,116 @@ def test_lint_single_item_op_in_hot_loop():
     assert lint_source(ok, "src/repro/io/engine.py") == []
 
 
+def test_lint_unit_mixing_flagged():
+    """RA006: +, -, comparisons, and augmented +=/-= between
+    differently-denominated names are dimensional nonsense."""
+    src = ("def f(duration_hours, size_TB, params):\n"
+           "    bad = duration_hours + size_TB\n"
+           "    if size_TB > params.T_hours:\n"
+           "        duration_hours -= size_TB\n"
+           "    return bad\n")
+    findings = lint_source(src, "src/repro/sim/anything.py")
+    assert [f.rule for f in findings] == ["RA006", "RA006", "RA006"]
+    assert "mixes hours- and TB-denominated" in findings[0].message
+
+
+def test_lint_unit_dataflow_through_assignment():
+    """An unsuffixed local assigned from a unit-suffixed expression
+    inherits the unit — mixing is caught one hop away, and reassigning
+    from a unitless expression clears the taint."""
+    src = ("def f(t_hours, size_TB, n):\n"
+           "    t = t_hours\n"
+           "    wrong = t + size_TB\n"
+           "    t = n\n"
+           "    fine = t + size_TB\n"
+           "    return wrong, fine\n")
+    findings = lint_source(src, "src/repro/sim/anything.py")
+    assert [f.rule for f in findings] == ["RA006"]
+    assert findings[0].line == 3
+
+
+def test_lint_unit_conversions_and_same_unit_clean():
+    """`*` and `/` erase units (they ARE the conversion idiom),
+    same-unit arithmetic is fine, unitless calls are fine, and a waiver
+    suppresses a deliberate mix."""
+    ok = ("def f(size_TB, bw_TB_per_hour, t_hours, dt_hours):\n"
+          "    hours = size_TB / bw_TB_per_hour\n"
+          "    total_hours = t_hours + dt_hours\n"
+          "    also_TB = bw_TB_per_hour * t_hours\n"
+          "    n = len(str(size_TB)) + 1\n"
+          "    return hours + total_hours\n")
+    assert lint_source(ok, "src/repro/sim/anything.py") == []
+    waived = ("def f(a_hours, b_TB):\n"
+              "    return a_hours + b_TB   # repro-lint: allow=RA006\n")
+    assert lint_source(waived, "src/repro/sim/anything.py") == []
+
+
+def test_lint_unit_scopes_do_not_leak():
+    """The per-function unit environment pops on exit: a sibling
+    function reusing the same local name is not tainted."""
+    src = ("def f(t_hours):\n"
+           "    t = t_hours\n"
+           "def g(size_TB, t):\n"
+           "    return t + size_TB\n")
+    assert lint_source(src, "src/repro/sim/anything.py") == []
+
+
+# ---------------------------------------------------------------------------
+# Certificate determinism (schema version 2)
+# ---------------------------------------------------------------------------
+
+def test_certificate_serialization_is_deterministic():
+    """Version-2 schema: equal content serializes byte-identically
+    regardless of dict insertion order, and the version is pinned."""
+    from repro.analysis.certificate import CERTIFICATE_VERSION
+    assert CERTIFICATE_VERSION == 2
+    claim_a = Claim(name="x", ok=True, method="m",
+                    data={"b": 1, "a": 2})
+    claim_b = Claim(name="x", ok=True, method="m",
+                    data={"a": 2, "b": 1})
+    ca = Certificate(code_name="c", placement_name="p",
+                     params={"z": 1, "alpha": 2}, claims=(claim_a,),
+                     kernel_launches=0)
+    cb = Certificate(code_name="c", placement_name="p",
+                     params={"alpha": 2, "z": 1}, claims=(claim_b,),
+                     kernel_launches=0)
+    assert ca.to_json() == cb.to_json()
+    assert dump_certificates([ca]) == dump_certificates([cb])
+    assert ca.to_json(indent=2).startswith('{\n  "claims"')
+    assert Certificate.from_json(ca.to_json()).version == 2
+
+
+def test_certificate_golden_bytes():
+    """Golden-file pin: the exact serialized bytes of a fixed
+    certificate. Any schema or ordering drift must update this test
+    (and bump CERTIFICATE_VERSION)."""
+    cert = Certificate(
+        code_name="unilrc_a1_z4", placement_name="sched/demo",
+        params={"states": 3}, kernel_launches=0,
+        claims=(Claim(name="link_safety", ok=True,
+                      method="exhaustive(states=3,transitions=2)",
+                      detail="holds in all 3 reachable states"),))
+    golden = (
+        '{"claims": [{"data": {}, '
+        '"detail": "holds in all 3 reachable states", '
+        '"method": "exhaustive(states=3,transitions=2)", '
+        '"name": "link_safety", "ok": true}], '
+        '"code": "unilrc_a1_z4", "kernel_launches": 0, '
+        '"params": {"states": 3}, "placement": "sched/demo", '
+        '"version": 2}')
+    assert cert.to_json() == golden
+    assert Certificate.from_json(golden) == cert
+
+
+def test_dump_load_roundtrip_is_fixed_point():
+    """dump -> load -> dump is the identity on bytes (stability under
+    re-serialization, what CI artifact diffs rely on)."""
+    cert = certify(make_unilrc(1, 4), trials=5, exhaustive_budget=0)
+    once = dump_certificates([cert])
+    again = dump_certificates(load_certificates(once))
+    assert once == again
+
+
 # ---------------------------------------------------------------------------
 # Satellite: sealed DecodePlan matrices + cache behavior
 # ---------------------------------------------------------------------------
