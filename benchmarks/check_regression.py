@@ -292,6 +292,94 @@ def check_concurrent(baseline: dict, fresh: dict, *,
     return failures
 
 
+def check_serving(baseline: dict, fresh: dict, *,
+                  min_shard_speedup: float = 2.0,
+                  max_p99_ratio: float = 2.0,
+                  rel_floor: float = 0.4) -> list[str]:
+    """fig_saturation gate — the production-serving invariants, all
+    measured in deterministic virtual time:
+
+      * goodput at saturation with 4 shards >= `min_shard_speedup` x
+        the 1-shard peak (the pipelined shard-parallel front-end's
+        reason to exist), and no worse than `rel_floor` of the
+        committed baseline's speedup;
+      * client p99 under a rebuild storm <= `max_p99_ratio` x the
+        failure-free p99 (admission control + per-class metering keep
+        BACKGROUND repair from starving the serving path);
+      * the hot-block cache collapses a same-block degraded-read storm
+        to O(1) decodes: cached decode launches == distinct lost
+        blocks, while the uncached run decodes every wave;
+      * shed accounting balances exactly (every submission is served
+        or shed — per class, per scenario);
+      * cached and uncached front-ends are byte-identical across
+        interleaved reads/updates/rebuilds on BOTH backends;
+      * the hazard analyzer checked (and accepted) every flush wave.
+    """
+    failures: list[str] = []
+    s = fresh.get("summary", {})
+    if not s:
+        return ["fresh serving result has no summary — "
+                "fig_saturation did not run"]
+    base = baseline.get("summary", {})
+    speedup = float(s.get("shard_speedup", 0.0))
+    base_speedup = float(base.get("shard_speedup", 0.0))
+    print(f"serving: shard speedup {speedup:.2f}x "
+          f"(baseline {base_speedup:.2f}x), storm p99 ratio "
+          f"{s.get('storm_p99_ratio')}x")
+    if speedup < min_shard_speedup:
+        failures.append(
+            f"serving: shard speedup {speedup:.2f}x is below the "
+            f"{min_shard_speedup:.1f}x floor — the sharded front-end "
+            f"no longer scales past one coding pipeline")
+    elif base and speedup < rel_floor * base_speedup:
+        failures.append(
+            f"serving: shard speedup {speedup:.2f}x fell below "
+            f"{rel_floor:.0%} of the committed baseline "
+            f"{base_speedup:.2f}x")
+    ratio = float(s.get("storm_p99_ratio", float("inf")))
+    if ratio > max_p99_ratio:
+        failures.append(
+            f"serving: storm client p99 is {ratio:.2f}x failure-free "
+            f"(ceiling {max_p99_ratio:.1f}x) — QoS isolation of the "
+            f"serving path from rebuild storms regressed")
+    col = s.get("cache_collapse", {})
+    cached = col.get("cached_decode_launches")
+    uncached = col.get("uncached_decode_launches")
+    distinct = col.get("distinct_blocks")
+    print(f"serving: same-block storm decodes cached={cached} "
+          f"uncached={uncached} (distinct blocks {distinct})")
+    if cached is None or uncached is None:
+        failures.append("serving: summary lacks cache_collapse launch "
+                        "counts (schema drift?)")
+    else:
+        if cached != distinct:
+            failures.append(
+                f"serving: cached storm decoded {cached} time(s) for "
+                f"{distinct} distinct lost block(s) — the hot-block "
+                f"cache no longer collapses repeat degraded reads")
+        if uncached <= cached:
+            failures.append(
+                f"serving: uncached storm decoded {uncached} time(s) "
+                f"vs cached {cached} — the comparison no longer "
+                f"exercises the cache")
+    if not s.get("shed_balanced"):
+        failures.append(
+            "serving: shed accounting does not balance — requests were "
+            "dropped without being counted as served or shed")
+    ident = s.get("byte_identical", {})
+    for backend in ("kernels", "numpy"):
+        if not ident.get(backend):
+            failures.append(
+                f"serving: cached front-end is NOT byte-identical to "
+                f"uncached on the {backend} backend — stale cache "
+                f"entries survived a mutation")
+    if s.get("hazard_checked_flushes", 0) <= 0:
+        failures.append(
+            "serving: the hazard analyzer checked zero flush waves — "
+            "analyze_flushes coverage vanished")
+    return failures
+
+
 def check_analysis_cert(batch: dict, *, min_certs: int = 6) -> list[str]:
     """Static-analysis gate over the symbolic verifier's certificate
     batch (`python -m repro.analysis.verify --grid --out ...`): every
@@ -424,6 +512,16 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--conc-min-speedup", type=float, default=1.3,
                     help="floor on the cluster-loss makespan speedup of "
                          "concurrent over serialized repair")
+    ap.add_argument("--serve-baseline", type=pathlib.Path,
+                    help="committed fig_saturation.json")
+    ap.add_argument("--serve-fresh", type=pathlib.Path,
+                    help="fig_saturation.json from this run")
+    ap.add_argument("--serve-min-shard-speedup", type=float, default=2.0,
+                    help="floor on 4-shard over 1-shard goodput at "
+                         "saturation")
+    ap.add_argument("--serve-max-p99-ratio", type=float, default=2.0,
+                    help="ceiling on storm client p99 over failure-free "
+                         "client p99")
     ap.add_argument("--analysis-cert", type=pathlib.Path,
                     help="certificate batch from "
                          "`python -m repro.analysis.verify --grid`")
@@ -449,8 +547,8 @@ def main(argv: list[str] | None = None) -> int:
     if (args.baseline is None) != (args.fresh is None):
         ap.error("--baseline and --fresh go together")
     any_gate = any(x is not None for x in (
-        args.fresh, args.analysis_cert, args.analysis_hazards,
-        args.sched_model))
+        args.fresh, args.serve_fresh, args.analysis_cert,
+        args.analysis_hazards, args.sched_model))
     if not any_gate:
         ap.error("nothing to check: pass --baseline/--fresh and/or an "
                  "analysis gate (--analysis-cert, --analysis-hazards, "
@@ -489,6 +587,15 @@ def main(argv: list[str] | None = None) -> int:
             json.loads(args.conc_baseline.read_text()),
             json.loads(args.conc_fresh.read_text()),
             min_speedup=args.conc_min_speedup)
+    if (args.serve_baseline is None) != (args.serve_fresh is None):
+        ap.error("--serve-baseline and --serve-fresh go together")
+    if args.serve_fresh is not None:
+        failures += check_serving(
+            json.loads(args.serve_baseline.read_text()),
+            json.loads(args.serve_fresh.read_text()),
+            min_shard_speedup=args.serve_min_shard_speedup,
+            max_p99_ratio=args.serve_max_p99_ratio,
+            rel_floor=args.rel_floor)
     if args.analysis_cert is not None:
         failures += check_analysis_cert(
             json.loads(args.analysis_cert.read_text()),

@@ -30,7 +30,7 @@ import os
 
 import numpy as np
 
-from repro.io import Priority, RequestFrontend
+from repro.io import Priority, ShardedFrontend
 from repro.kernels import ops
 
 from .common import (ALL_SCHEMES, all_codes, fmt_table, make_codec,
@@ -78,10 +78,14 @@ def _run_sequential(code, codec, store, metas):
 
 
 def _run_coalesced(code, codec, store, metas):
-    """All requests through the front-end, maximum coalescing."""
+    """All requests through the front-end, maximum coalescing. Routed
+    through the sharded serving path at num_shards=1, which must be
+    structurally identical to the plain RequestFrontend (same launch
+    counts, same per-class accounting) — the single-shard degenerate
+    case of fig_saturation's scaling axis."""
     pairs = _damage(code, store)
     b1, _ = _hot_blocks(code)
-    fe = RequestFrontend(codec)
+    fe = ShardedFrontend(codec, num_shards=1)
     reads = [fe.submit_degraded_read(metas[i % S], b1)
              for i in range(N_READS)]
     clients = [fe.submit_client_read(metas[sid]) for sid in (0, 1)]

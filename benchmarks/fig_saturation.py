@@ -1,0 +1,369 @@
+"""Saturation benchmark: Zipf serving load vs the sharded front-end.
+
+The ROADMAP north star is "heavy traffic from millions of users"; the
+paper's availability argument (§2.2/§5) is specifically about serving
+while degraded stripes, rebuild storms, and scrubbing all compete for
+the coding path. This figure drives the shard-parallel front-end with a
+deterministic open-loop Zipf workload (`repro.io.workload`) under
+virtual time, so every latency/goodput number is a property of the
+serving *architecture*, not of the CI runner's wall clock:
+
+  * a goodput-vs-offered-load sweep, 1 shard vs 4 shards — the shard
+    speedup gate (>= 2x at saturation) reads the peak of each curve;
+  * p50/p99 client-read latency at a fixed moderate load for three
+    scenarios — failure-free, one node failed (degraded reads through
+    the hot-block cache), and failed + rebuild storm (periodic parity
+    re-drop + BACKGROUND rebuild waves, admission watermarks and
+    per-tenant token buckets active) — the storm p99 must stay within
+    2x of failure-free;
+  * a same-block degraded-read storm micro-run, cached vs uncached —
+    the cache must collapse it to O(1) decodes (exactly one launch per
+    distinct lost block);
+  * a cached-vs-uncached byte-identity check over interleaved reads /
+    updates / rebuilds / overwrites, on BOTH backends;
+  * shed accounting (submitted == served + shed per class, exactly)
+    and hazard-analyzer acceptance of every shard's waves
+    (`analyze_flushes=True` everywhere: one HazardViolation anywhere
+    fails the run).
+
+`check_regression.py --serve-*` gates all of the above against the
+committed baseline (`artifacts/bench/fig_saturation.json`).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.ckpt.store import BlockStore
+from repro.ckpt.stripe import StripeCodec
+from repro.core.codes import make_unilrc
+from repro.core.placement import default_placement
+from repro.io import (HotBlockCache, Priority, RequestFrontend,
+                      ServiceModel, ShardedFrontend, VirtualClock,
+                      ZipfWorkload, drive_open_loop)
+from repro.priority import AdmissionController, QoSConfig
+
+from .common import all_codes, deploy_topology, fmt_table, save_result
+
+TINY = os.environ.get("REPRO_BENCH_TINY") == "1"
+SCHEME = "30-of-42"                  # the paper's first comparison point
+BLOCK = 1 << 8 if TINY else 1 << 10
+STRIPES = 24 if TINY else 48
+TICK_S = 0.002                       # open-loop driver tick (virtual)
+THETA = 0.9                          # Zipf skew
+SHARDS = 4
+SWEEP_RATES = (20_000, 120_000) if TINY else (20_000, 60_000, 120_000)
+SWEEP_DURATION_S = 0.06 if TINY else 0.1
+LAT_RATE = 8_000                     # moderate load for the p99 scenarios
+LAT_DURATION_S = 0.08 if TINY else 0.15
+TENANTS = ("gold", "silver", "free")
+TENANT_WEIGHTS = (0.5, 0.3, 0.2)
+SERVICE = ServiceModel(per_launch_s=200e-6)
+BG_METER = 4                         # background blocks per shard flush
+STORM_EVERY_TICKS = 8
+CLIENT_DEADLINE_S = 0.004
+
+
+def _setup(*, backend: str = "kernels", seed: int = 0):
+    code = all_codes(SCHEME)["UniLRC"]
+    placement = default_placement(code)
+    # One spare node per cluster: rebuild re-placement needs somewhere to
+    # land when a whole node is failed (the tight fit has none).
+    store = BlockStore(deploy_topology(placement, spare_nodes=1))
+    codec = StripeCodec(code, store, block_size=BLOCK, backend=backend)
+    rng = np.random.default_rng(seed)
+    payload = rng.integers(0, 256, size=code.k * BLOCK * STRIPES,
+                           dtype=np.uint8).tobytes()
+    metas = codec.write(payload)
+    return code, codec, store, metas
+
+
+def _percentile_ms(latencies: list[float], p: float) -> float:
+    if not latencies:
+        return 0.0
+    lat = sorted(latencies)
+    return round(lat[min(len(lat) - 1, int(p * len(lat)))] * 1e3, 3)
+
+
+def run_point(*, rate: float, duration: float, shards: int,
+              fail: bool = False, storm: bool = False,
+              cache_on: bool = True, qos: bool = False,
+              seed: int = 1) -> dict:
+    """One (offered load, configuration) point under virtual time."""
+    code, codec, store, metas = _setup()
+    lost_data: dict[int, int] = {}
+    parity_pairs: list[tuple[int, int]] = []
+    failed = -1
+    if fail:
+        failed = store.node_of(metas[0].stripe_id, 0)
+        held = store.blocks_on_node(failed)
+        lost_data = {s: b for s, b in held if b < code.k}
+        parity_pairs = sorted((s, b) for s, b in held if b >= code.k)
+        store.fail_node(failed)
+
+    cache = HotBlockCache(capacity_blocks=4 * STRIPES) if cache_on else None
+    clocks = [VirtualClock() for _ in range(shards)]
+    admission = None
+    if qos:
+        admission = AdmissionController(
+            QoSConfig(background_watermark=64, degraded_watermark=256,
+                      tenant_rate=90_000.0, tenant_burst=3_000.0,
+                      deadline_s={Priority.CLIENT_READ: CLIENT_DEADLINE_S}),
+            clock=clocks[0])
+    fe = ShardedFrontend(codec, num_shards=shards,
+                         background_ops_per_flush=BG_METER,
+                         cache=cache, admission=admission,
+                         clock_factory=lambda i: clocks[i],
+                         service_model=SERVICE, analyze_flushes=True)
+    wl = ZipfWorkload(num_stripes=STRIPES, rate_rps=rate,
+                      duration_s=duration, theta=THETA, tenants=TENANTS,
+                      tenant_weights=TENANT_WEIGHTS, seed=seed)
+    arrivals = wl.arrivals()
+    meta_of = {m.stripe_id: m for m in metas}
+    submitted = {"client": 0, "degraded": 0}
+
+    def submit(arrival):
+        meta = meta_of[arrival.stripe]
+        lost = lost_data.get(arrival.stripe)
+        if lost is not None:
+            submitted["degraded"] += 1
+            return fe.submit_degraded_read(meta, lost,
+                                           tenant=arrival.tenant)
+        submitted["client"] += 1
+        return fe.submit_client_read(meta, tenant=arrival.tenant)
+
+    tick_no = [0]
+
+    def on_tick(t):
+        tick_no[0] += 1
+        if t > duration or tick_no[0] % STORM_EVERY_TICKS:
+            return None
+        # Churn: the failed node's parity replicas get re-dropped and a
+        # BACKGROUND rebuild wave re-places them — sustained repair
+        # pressure without healing the data blocks that feed the
+        # degraded-read stream.
+        for s, b in parity_pairs:
+            store.drop_block(s, b)
+        handle = fe.submit_rebuild(parity_pairs, exclude_node=failed)
+        return [(handle, t, parity_pairs[0][0] % shards)]
+
+    wall0 = time.perf_counter()
+    records = drive_open_loop(fe, arrivals, submit, clocks=clocks,
+                              num_shards=shards, tick_s=TICK_S,
+                              on_tick=on_tick if storm else None)
+    wall_s = time.perf_counter() - wall0
+    hazard_flushes = fe.hazard_checked_flushes
+    stats = fe.stats
+    fe.close()
+
+    makespan = max(c() for c in clocks)
+    cli = [r for r in records
+           if r.kind == "client_read" and not r.shed and not r.failed]
+    lat = [r.latency_s for r in cli]
+    client_bytes = sum(r.nbytes for r in cli)
+    cs, ds = stats[Priority.CLIENT_READ], stats[Priority.DEGRADED_READ]
+    # The accounting invariant, exact per class: every submission either
+    # served (stats.requests) or shed (stats.shed_requests).
+    balanced = (cs.requests + cs.shed_requests == submitted["client"]
+                and ds.requests + ds.shed_requests
+                == submitted["degraded"])
+    return {
+        "rate_rps": rate,
+        "shards": shards,
+        "scenario": ("storm" if storm else
+                     "one_failed" if fail else "failure_free"),
+        "cache": cache_on,
+        "qos": qos,
+        "offered": len(arrivals),
+        "served_client": len(cli),
+        "degraded_served": ds.requests,
+        "goodput_MBps": round(client_bytes / makespan / 1e6, 1),
+        "p50_ms": _percentile_ms(lat, 0.50),
+        "p99_ms": _percentile_ms(lat, 0.99),
+        "makespan_ms": round(makespan * 1e3, 1),
+        "decode_launches": ds.launches,
+        "cache_hits": ds.cache_hits,
+        "shed_client": cs.shed_requests,
+        "shed_degraded": ds.shed_requests,
+        "shed_background": stats[Priority.BACKGROUND].shed_requests,
+        "deadline_misses": cs.deadline_misses,
+        "shed_balanced": balanced,
+        "hazard_checked_flushes": hazard_flushes,
+        "wall_s": round(wall_s, 2),
+    }
+
+
+# -- same-block storm: the O(1)-decode collapse ------------------------------
+def cache_collapse(*, backend: str = "kernels",
+                   ticks: int = 10, per_tick: int = 6) -> dict:
+    """One lost hot block, `ticks` waves of `per_tick` degraded reads:
+    cached must decode ONCE total; uncached decodes every wave."""
+    out: dict = {"distinct_blocks": 1, "ticks": ticks,
+                 "requests": ticks * per_tick}
+    for cached in (True, False):
+        code = make_unilrc(1, 3)
+        placement = default_placement(code)
+        store = BlockStore(deploy_topology(placement, spare_nodes=1))
+        codec = StripeCodec(code, store, block_size=128, backend=backend)
+        metas = codec.write(b"\xa5" * (code.k * 128 * 2))
+        hot = next(b for b in code.groups[0] if code.block_type[b] == 'd')
+        store.drop_block(metas[0].stripe_id, hot)
+        clock = VirtualClock()
+        fe = RequestFrontend(
+            codec, clock=clock,
+            cache=HotBlockCache(capacity_blocks=8) if cached else None,
+            service_model=SERVICE, analyze_flushes=True)
+        results = []
+        for _ in range(ticks):
+            handles = [fe.submit_degraded_read(metas[0], hot)
+                       for _ in range(per_tick)]
+            fe.flush()
+            results += [h.result() for h in handles]
+        assert len(set(results)) == 1         # every wave, same bytes
+        key = "cached_decode_launches" if cached \
+            else "uncached_decode_launches"
+        out[key] = fe.stats[Priority.DEGRADED_READ].launches
+        out["cache_hits" if cached else "_"] = \
+            fe.stats[Priority.DEGRADED_READ].cache_hits
+    out.pop("_", None)
+    return out
+
+
+# -- cached vs uncached byte-identity ----------------------------------------
+def identity_check(backend: str) -> bool:
+    """Same interleaved read/update/rebuild/overwrite sequence against a
+    cached and an uncached front-end on separate but identical stores:
+    every read result must match byte-for-byte."""
+    def run(cache_on: bool) -> list[bytes]:
+        code = make_unilrc(1, 3)
+        placement = default_placement(code)
+        store = BlockStore(deploy_topology(placement, spare_nodes=1))
+        codec = StripeCodec(code, store, block_size=128, backend=backend)
+        rng = np.random.default_rng(7)
+        payload = rng.integers(0, 256, size=code.k * 128 * 4,
+                               dtype=np.uint8).tobytes()
+        metas = codec.write(payload)
+        d = [b for b in range(code.k)]
+        b1, b2 = d[0], d[1]
+        for sid in (0, 1):
+            store.drop_block(sid, b1)
+        fe = RequestFrontend(
+            codec, clock=VirtualClock(),
+            cache=HotBlockCache(capacity_blocks=4) if cache_on else None,
+            service_model=SERVICE, analyze_flushes=True)
+        out: list[bytes] = []
+
+        def drain_into(handles):
+            fe.drain()
+            out.extend(h.result() for h in handles)
+
+        # storm on the lost block + a client read
+        drain_into([fe.submit_degraded_read(metas[s], b1)
+                    for s in (0, 1, 0, 0)]
+                   + [fe.submit_client_read(metas[2])])
+        # mutate a sibling block -> parities patched; re-read the lost one
+        codec.update_block(metas[0], b2, bytes(128))
+        drain_into([fe.submit_degraded_read(metas[0], b1),
+                    fe.submit_client_read(metas[0])])
+        # heal by rebuild (re-place fires invalidation), then re-read
+        codec.rebuild_blocks([(0, b1), (1, b1)])
+        drain_into([fe.submit_degraded_read(metas[s], b1)
+                    for s in (0, 1)])
+        # overwrite stripe 1 wholesale, then read everything again
+        codec.write(bytes(range(256)) * (code.k * 128 // 256),
+                    start_stripe=1)
+        store.drop_block(1, b1)
+        drain_into([fe.submit_degraded_read(metas[1], b1),
+                    fe.submit_client_read(metas[1])])
+        return out
+
+    return run(True) == run(False)
+
+
+def main():
+    sweep_rows = []
+    for rate in SWEEP_RATES:
+        for shards in (1, SHARDS):
+            sweep_rows.append(run_point(rate=rate,
+                                        duration=SWEEP_DURATION_S,
+                                        shards=shards))
+    peak1 = max(r["goodput_MBps"] for r in sweep_rows
+                if r["shards"] == 1)
+    peak4 = max(r["goodput_MBps"] for r in sweep_rows
+                if r["shards"] == SHARDS)
+
+    lat_ff = run_point(rate=LAT_RATE, duration=LAT_DURATION_S,
+                       shards=SHARDS, qos=True)
+    lat_fail = run_point(rate=LAT_RATE, duration=LAT_DURATION_S,
+                         shards=SHARDS, fail=True, qos=True)
+    lat_fail_uncached = run_point(rate=LAT_RATE, duration=LAT_DURATION_S,
+                                  shards=SHARDS, fail=True,
+                                  cache_on=False, qos=True)
+    lat_storm = run_point(rate=LAT_RATE, duration=LAT_DURATION_S,
+                          shards=SHARDS, fail=True, storm=True, qos=True)
+    scenario_rows = [lat_ff, lat_fail, lat_fail_uncached, lat_storm]
+
+    collapse = cache_collapse()
+    identical = {backend: identity_check(backend)
+                 for backend in ("kernels", "numpy")}
+
+    all_rows = sweep_rows + scenario_rows
+    summary = {
+        "scheme": SCHEME,
+        "shard_speedup": round(peak4 / peak1, 2),
+        "peak_goodput_1shard_MBps": peak1,
+        "peak_goodput_4shard_MBps": peak4,
+        "p99_failure_free_ms": lat_ff["p99_ms"],
+        "p99_one_failed_ms": lat_fail["p99_ms"],
+        "p99_one_failed_uncached_ms": lat_fail_uncached["p99_ms"],
+        "p99_storm_ms": lat_storm["p99_ms"],
+        "storm_p99_ratio": round(
+            lat_storm["p99_ms"] / max(lat_ff["p99_ms"], 1e-9), 2),
+        "cache_collapse": collapse,
+        "shed_balanced": all(r["shed_balanced"] for r in all_rows),
+        "shed_total": sum(r["shed_client"] + r["shed_degraded"]
+                          + r["shed_background"] for r in all_rows),
+        "deadline_misses_storm": lat_storm["deadline_misses"],
+        "byte_identical": identical,
+        "hazard_checked_flushes": sum(r["hazard_checked_flushes"]
+                                      for r in all_rows),
+    }
+
+    print(fmt_table(
+        sweep_rows,
+        ["rate_rps", "shards", "offered", "served_client",
+         "goodput_MBps", "p50_ms", "p99_ms", "makespan_ms", "wall_s"],
+        f"Goodput vs offered load ({SCHEME}, Zipf theta={THETA}, "
+        f"virtual time)"))
+    print()
+    print(fmt_table(
+        scenario_rows,
+        ["scenario", "cache", "offered", "served_client",
+         "degraded_served", "cache_hits", "decode_launches", "p50_ms",
+         "p99_ms", "shed_client", "shed_degraded", "shed_background",
+         "deadline_misses"],
+        f"Latency scenarios at {LAT_RATE} rps, {SHARDS} shards, QoS on"))
+    print()
+    print(f"shard speedup at saturation: {summary['shard_speedup']}x   "
+          f"storm p99 ratio: {summary['storm_p99_ratio']}x")
+    print(f"same-block storm decodes: "
+          f"cached={collapse['cached_decode_launches']} "
+          f"uncached={collapse['uncached_decode_launches']} "
+          f"(distinct blocks: {collapse['distinct_blocks']})")
+    print(f"byte identity: {identical}   "
+          f"shed balanced: {summary['shed_balanced']}   "
+          f"hazard-checked flushes: {summary['hazard_checked_flushes']}")
+
+    save_result("fig_saturation", {
+        "tiny": TINY, "block_bytes": BLOCK, "stripes": STRIPES,
+        "tick_s": TICK_S, "theta": THETA,
+        "sweep": sweep_rows, "scenarios": scenario_rows,
+        "summary": summary,
+    })
+    return summary
+
+
+if __name__ == "__main__":
+    main()

@@ -22,8 +22,8 @@ def main():
                          "(fig_sim_reliability trials, "
                          "fig_batched_recovery block bytes, "
                          "fig_correlated_recovery, fig_mixed_workload, "
-                         "fig_topology_repair and fig_concurrent_repair "
-                         "stripes+block bytes); "
+                         "fig_topology_repair, fig_concurrent_repair "
+                         "and fig_saturation stripes+block bytes); "
                          "artifacts are still written")
     ap.add_argument("--only", default="",
                     help="comma-separated benchmark names")
@@ -35,8 +35,8 @@ def main():
                    fig10_operations, fig11_bandwidth, fig12_workload,
                    fig_batched_recovery, fig_concurrent_repair,
                    fig_correlated_recovery, fig_mixed_workload,
-                   fig_sim_reliability, fig_topology_repair, roofline,
-                   table4_mttdl)
+                   fig_saturation, fig_sim_reliability,
+                   fig_topology_repair, roofline, table4_mttdl)
     suites = [
         ("fig5_tradeoff", fig5_tradeoff.main),
         ("fig8_locality", fig8_locality.main),
@@ -54,6 +54,7 @@ def main():
             ("fig_mixed_workload", fig_mixed_workload.main),
             ("fig_topology_repair", fig_topology_repair.main),
             ("fig_concurrent_repair", fig_concurrent_repair.main),
+            ("fig_saturation", fig_saturation.main),
         ]
     suites.append(("roofline", roofline.main))
 

@@ -43,6 +43,13 @@ story leans on:
          the conversion idiom: `size_TB / bw_TB_per_hour` makes
          hours), and calls carry a unit only when the callee's own
          name is suffixed (`repair_bandwidth_TB_per_hour(p)`).
+  RA007  direct mutation of the kernel launch counters outside
+         `src/repro/kernels/` — `KERNEL_LAUNCHES[...] += 1`, `.clear()`,
+         `.update()` and friends race the sharded front-end's worker
+         pool and bypass the thread-local `launch_scope()` attribution;
+         all mutation must go through `_count_launch` /
+         `reset_kernel_launch_counts` inside the kernels package.
+         Reading the counters (snapshots, sums) is fine.
 
 Waive a finding with a same-line comment: `# repro-lint: allow=RA001`
 (comma-separated rule ids) — used by the kernel oracle tests that call
@@ -84,6 +91,10 @@ DEPRECATION_SHIM_PATHS = (
 )
 DEPRECATED_NAMES = frozenset({"ClusterTopology"})
 DEPRECATED_KEYWORDS = frozenset({"use_kernels"})
+LAUNCH_COUNTER_NAMES = frozenset({"KERNEL_LAUNCHES"})
+# Counter methods that mutate; reads (snapshot/sum/items) stay legal.
+COUNTER_MUTATORS = frozenset({"clear", "update", "subtract", "pop",
+                              "popitem", "setdefault", "__setitem__"})
 FLOAT_DTYPES = frozenset({"float", "float16", "float32", "float64",
                           "double", "half"})
 # RA006 unit vocabulary, longest suffix first (a `_TB_per_hour` name
@@ -233,6 +244,15 @@ class _FileLinter(ast.NodeVisitor):
                                f"deprecated `{kw.arg}=` keyword — pass "
                                f"backend='kernels'/'numpy' (or a Backend "
                                f"instance) instead")
+        if (not self.in_kernels
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in COUNTER_MUTATORS
+                and self._is_launch_counter(node.func.value)):
+            self._emit(node, "RA007",
+                       f"`.{node.func.attr}()` mutates the kernel launch "
+                       f"counters outside repro/kernels/ — use "
+                       f"reset_kernel_launch_counts() / launch_scope(); "
+                       f"direct mutation races the shard worker pool")
         if self.gf_critical:
             if (isinstance(node.func, ast.Attribute)
                     and node.func.attr == "astype"
@@ -259,6 +279,34 @@ class _FileLinter(ast.NodeVisitor):
                        f"repro.topo.Topology")
         self.generic_visit(node)
 
+    # -- launch counters (RA007) ----------------------------------------------
+    def _is_launch_counter(self, node: ast.expr) -> bool:
+        """True for any spelling that resolves to the launch counter:
+        bare `KERNEL_LAUNCHES`, `ops.KERNEL_LAUNCHES`,
+        `kernel_ops.KERNEL_LAUNCHES`, arbitrary attribute depth."""
+        if isinstance(node, ast.Name):
+            return node.id in LAUNCH_COUNTER_NAMES
+        if isinstance(node, ast.Attribute):
+            return node.attr in LAUNCH_COUNTER_NAMES
+        return False
+
+    def _check_counter_mutation(self, target: ast.expr,
+                                node: ast.AST) -> None:
+        # `KERNEL_LAUNCHES[...] = v` / `+= 1`, or rebinding the name.
+        if isinstance(target, ast.Subscript) \
+                and self._is_launch_counter(target.value):
+            self._emit(node, "RA007",
+                       "direct write to the kernel launch counters "
+                       "outside repro/kernels/ — launches are counted by "
+                       "`_count_launch` under a lock; mutation here races "
+                       "the shard worker pool and skips launch_scope() "
+                       "attribution")
+        elif self._is_launch_counter(target) \
+                and not isinstance(target, ast.Attribute):
+            self._emit(node, "RA007",
+                       "rebinding KERNEL_LAUNCHES outside repro/kernels/ "
+                       "detaches every existing accounting consumer")
+
     # -- assignments (RA003) --------------------------------------------------
     def _check_plan_mutation(self, target: ast.expr, node: ast.AST) -> None:
         # `plan.M[...] = v` / `plan.M[...] ^= v`: subscript-assign into
@@ -274,6 +322,8 @@ class _FileLinter(ast.NodeVisitor):
     def visit_Assign(self, node: ast.Assign) -> None:
         for target in node.targets:
             self._check_plan_mutation(target, node)
+            if not self.in_kernels:
+                self._check_counter_mutation(target, node)
         self._track_unit_assign(node.targets, node.value)
         self.generic_visit(node)
 
@@ -284,6 +334,8 @@ class _FileLinter(ast.NodeVisitor):
 
     def visit_AugAssign(self, node: ast.AugAssign) -> None:
         self._check_plan_mutation(node.target, node)
+        if not self.in_kernels:
+            self._check_counter_mutation(node.target, node)
         if isinstance(node.op, (ast.Add, ast.Sub)):
             self._check_unit_mix(node, node.target, node.value,
                                  op="+=" if isinstance(node.op, ast.Add)

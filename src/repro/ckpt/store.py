@@ -20,9 +20,12 @@ topology subsystem; the old name is kept as an alias).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
 import pathlib
+import threading
+from collections.abc import Callable, Iterator
 
 from repro.topo import Topology
 
@@ -38,31 +41,87 @@ class NodeFailure(Exception):
 
 
 @dataclasses.dataclass
+class TrafficDelta:
+    """Thread-local traffic attribution window (see TrafficStats.scoped):
+    only bytes moved by the OPENING thread while the scope is active land
+    here, so one shard's flush can account its own traffic exactly while
+    other shards move bytes concurrently."""
+    inner_bytes: int = 0
+    cross_bytes: int = 0
+    aggregated_bytes: int = 0
+    reads: int = 0
+
+
+@dataclasses.dataclass
 class TrafficStats:
     inner_bytes: int = 0
     cross_bytes: int = 0
     aggregated_bytes: int = 0   # subset of cross_bytes: pre-folded blocks
     reads: int = 0
 
+    def __post_init__(self):
+        # Mutation is locked (the sharded front-end reads from worker
+        # threads); the per-thread scope stack rides a threading.local so
+        # scoped attribution never sees another thread's bytes.
+        self._lock = threading.Lock()
+        self._scopes = threading.local()
+
+    def _scope_stack(self) -> list[TrafficDelta]:
+        stack = getattr(self._scopes, "stack", None)
+        if stack is None:
+            stack = self._scopes.stack = []
+        return stack
+
+    @contextlib.contextmanager
+    def scoped(self) -> Iterator[TrafficDelta]:
+        """Thread-local delta collector: every add/add_many/add_shipped
+        issued by THIS thread inside the scope also lands on the yielded
+        `TrafficDelta`. The concurrent-safe replacement for the
+        before/after field-snapshot idiom, which under the shard worker
+        pool would fold every other shard's traffic into the delta."""
+        delta = TrafficDelta()
+        stack = self._scope_stack()
+        stack.append(delta)
+        try:
+            yield delta
+        finally:
+            stack.remove(delta)
+
     def add(self, nbytes: int, cross: bool):
-        self.reads += 1
-        if cross:
-            self.cross_bytes += nbytes
-        else:
-            self.inner_bytes += nbytes
+        with self._lock:
+            self.reads += 1
+            if cross:
+                self.cross_bytes += nbytes
+            else:
+                self.inner_bytes += nbytes
+        for delta in self._scope_stack():
+            delta.reads += 1
+            if cross:
+                delta.cross_bytes += nbytes
+            else:
+                delta.inner_bytes += nbytes
 
     def add_many(self, reads: int, inner_bytes: int, cross_bytes: int):
         """One accounting pass for a whole `get_many` batch."""
-        self.reads += reads
-        self.inner_bytes += inner_bytes
-        self.cross_bytes += cross_bytes
+        with self._lock:
+            self.reads += reads
+            self.inner_bytes += inner_bytes
+            self.cross_bytes += cross_bytes
+        for delta in self._scope_stack():
+            delta.reads += reads
+            delta.inner_bytes += inner_bytes
+            delta.cross_bytes += cross_bytes
 
     def add_shipped(self, nbytes: int):
         """A gateway-pre-folded block crossing into the reader's cluster:
         cross-tier bytes that never touched the store's read path (the
         fold output ships, not its inputs)."""
-        self.cross_bytes += nbytes
-        self.aggregated_bytes += nbytes
+        with self._lock:
+            self.cross_bytes += nbytes
+            self.aggregated_bytes += nbytes
+        for delta in self._scope_stack():
+            delta.cross_bytes += nbytes
+            delta.aggregated_bytes += nbytes
 
 
 class BlockStore:
@@ -75,11 +134,27 @@ class BlockStore:
         self._failed: set[int] = set()
         self._latency: dict[int, float] = {}        # node -> simulated sec
         self.traffic = TrafficStats()
+        self._mutation_listeners: list[Callable[[int, int], None]] = []
+
+    # -- mutation listeners --------------------------------------------------
+    def add_mutation_listener(self, cb: Callable[[int, int], None]) -> None:
+        """Register `cb(stripe, block)` to fire on EVERY content mutation
+        of that block — put (write, update, rebuild re-place), drop, and
+        node-wide delete. The hot-block cache hangs its invalidation here,
+        which is what makes cached/uncached byte-identity an invariant
+        rather than a convention: no mutation path can forget to
+        invalidate, because the store itself notifies."""
+        self._mutation_listeners.append(cb)
+
+    def _notify_mutation(self, stripe: int, block: int) -> None:
+        for cb in self._mutation_listeners:
+            cb(stripe, block)
 
     # -- placement ---------------------------------------------------------
     def put(self, stripe: int, block: int, node: int, data: bytes):
         self._blocks[(stripe, block)] = bytes(data)
         self._block_node[(stripe, block)] = node
+        self._notify_mutation(stripe, block)
 
     def node_of(self, stripe: int, block: int) -> int:
         return self._block_node[(stripe, block)]
@@ -184,12 +259,14 @@ class BlockStore:
         failure injection construct arbitrary per-stripe erasure patterns."""
         self._blocks.pop((stripe, block), None)
         self._block_node.pop((stripe, block), None)
+        self._notify_mutation(stripe, block)
 
     def delete_node_blocks(self, node: int):
         """Simulate permanent loss of a node's disks."""
         for key in self.blocks_on_node(node):
             del self._blocks[key]
             del self._block_node[key]
+            self._notify_mutation(*key)
 
 
 class DiskBlockStore(BlockStore):
@@ -214,6 +291,7 @@ class DiskBlockStore(BlockStore):
         self._path(stripe, block, node).write_bytes(data)
         self._blocks[(stripe, block)] = b""           # payload on disk
         self._block_node[(stripe, block)] = node
+        self._notify_mutation(stripe, block)
 
     def _payload(self, key: tuple[int, int], node: int) -> bytes:
         return self._path(key[0], key[1], node).read_bytes()
@@ -245,3 +323,4 @@ class DiskBlockStore(BlockStore):
                 p.unlink()
             del self._blocks[key]
             del self._block_node[key]
+            self._notify_mutation(s, b)

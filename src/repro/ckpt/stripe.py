@@ -173,6 +173,31 @@ class StripeCodec:
                 self._block_slot[b] = (c, idx)
         self._stripes: dict[int, StripeMeta] = {}
 
+    def clone(self) -> "StripeCodec":
+        """A planner sharing THIS codec's code, store, placement, backend
+        and stripe metadata, but owning a fresh `CodingEngine` queue.
+
+        This is the shard unit of the sharded front-end: each shard plans
+        and flushes on its own engine (so flushes overlap on the worker
+        pool without sharing `_pending`), while every shard sees the same
+        blocks and the same `_stripes` map (shared by reference — a write
+        through any clone is visible to all)."""
+        twin = object.__new__(StripeCodec)
+        twin.code = self.code
+        twin.store = self.store
+        twin.block_size = self.block_size
+        twin.placement = self.placement
+        twin.backend = self.backend
+        twin.use_kernels = self.use_kernels
+        twin.max_batch_stripes = self.max_batch_stripes
+        twin.engine = CodingEngine(
+            self.code, self.store, self.backend,
+            max_batch_stripes=self.max_batch_stripes,
+            gateway_aggregation=self.engine.gateway_aggregation)
+        twin._block_slot = self._block_slot
+        twin._stripes = self._stripes
+        return twin
+
     # -- encode / write ------------------------------------------------------
     def _node_for(self, stripe_id: int, block: int) -> int:
         # Rotate slots by stripe id so parity work spreads over nodes.

@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.core.codec import decode_plan_cached, plans_for
 from repro.core.codes import Code
+from repro.kernels import ops as kernel_ops
 from repro.topo import plan_is_xor_linear
 
 from .backend import Backend
@@ -111,6 +112,10 @@ class FlushStats:
     update_waves: int = 0
     gateway_folds: int = 0     # remote-cluster pre-fold launches issued
     aggregated_pairs: int = 0  # pairs served via >= one gateway pre-fold
+    launches: int = 0          # kernel launches issued BY this flush
+    inner_bytes: int = 0       # store bytes this flush moved, inner tier
+    cross_bytes: int = 0       # ... across cluster gateways
+    aggregated_bytes: int = 0  # of cross_bytes: gateway pre-folded
 
     @property
     def plan_groups(self) -> int:
@@ -202,10 +207,20 @@ class CodingEngine:
         by_kind: dict[str, list[_Op]] = {}
         for op in ops_list:
             by_kind.setdefault(op.kind, []).append(op)
-        self._run_encodes(by_kind.get("encode", []), stats)
-        self._run_reads(by_kind.get("read", []), stats)
-        self._run_recovers(by_kind.get("recover", []), stats)
-        self._run_updates(by_kind.get("update", []), stats)
+        # Thread-local attribution scopes: the launch/traffic totals on
+        # FlushStats stay exact when several shard engines flush
+        # concurrently (a global before/after snapshot would fold the
+        # other shards' work into this flush's numbers).
+        with kernel_ops.launch_scope() as scope, \
+                self.store.traffic.scoped() as tdelta:
+            self._run_encodes(by_kind.get("encode", []), stats)
+            self._run_reads(by_kind.get("read", []), stats)
+            self._run_recovers(by_kind.get("recover", []), stats)
+            self._run_updates(by_kind.get("update", []), stats)
+        stats.launches = scope.total
+        stats.inner_bytes = tdelta.inner_bytes
+        stats.cross_bytes = tdelta.cross_bytes
+        stats.aggregated_bytes = tdelta.aggregated_bytes
         return stats
 
     # -- reads ---------------------------------------------------------------

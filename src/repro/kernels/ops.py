@@ -18,12 +18,22 @@ Stripe-batched variants (leading S axis, ONE kernel launch per call):
 TPU is attached — the Pallas kernel body is identical.
 
 KERNEL_LAUNCHES counts pallas_call launches per kernel (host-side, outside
-jit) so tests and benchmarks can assert batching actually batches.
+jit) so tests and benchmarks can assert batching actually batches. All
+mutation goes through `_count_launch` under a lock, so the totals stay
+exact when the sharded front-end flushes engines from a worker pool;
+`launch_scope()` gives a caller a *thread-local* delta counter — the only
+way to attribute launches to one shard's flush while other shards launch
+concurrently (a global snapshot pair would fold their launches in). The
+repo lint (rule RA007) flags any direct mutation of the counters outside
+`repro/kernels/`.
 """
 from __future__ import annotations
 
 import collections
+import contextlib
 import functools
+import threading
+from collections.abc import Iterator
 
 import jax
 import jax.numpy as jnp
@@ -37,10 +47,62 @@ from .gf_bitmatmul import gf_bitmatmul, gf_bitmatmul_batched
 from .xor_reduce import xor_reduce, xor_reduce_batched
 
 KERNEL_LAUNCHES: collections.Counter = collections.Counter()
+_LAUNCH_LOCK = threading.Lock()
+_LAUNCH_SCOPES = threading.local()      # per-thread stack of LaunchScope
+
+
+class LaunchScope:
+    """Thread-local launch delta: counts launches issued by the current
+    thread while the scope is active. Live-updating — `total` may be
+    read mid-scope (the front-end's virtual-time service model samples
+    it between execution and handle resolution)."""
+
+    __slots__ = ("counts",)
+
+    def __init__(self) -> None:
+        self.counts: collections.Counter = collections.Counter()
+
+    @property
+    def total(self) -> int:
+        return sum(self.counts.values())
+
+
+def _scope_stack() -> list[LaunchScope]:
+    stack = getattr(_LAUNCH_SCOPES, "stack", None)
+    if stack is None:
+        stack = _LAUNCH_SCOPES.stack = []
+    return stack
+
+
+@contextlib.contextmanager
+def launch_scope() -> Iterator[LaunchScope]:
+    """Context manager attributing kernel launches to the current thread:
+    every launch issued by this thread inside the scope is counted on the
+    yielded `LaunchScope` (and still on the global KERNEL_LAUNCHES).
+    Scopes nest; launches from OTHER threads never leak in, which is what
+    makes per-shard launch accounting exact under the worker pool."""
+    scope = LaunchScope()
+    stack = _scope_stack()
+    stack.append(scope)
+    try:
+        yield scope
+    finally:
+        stack.remove(scope)
+
+
+def _count_launch(name: str) -> None:
+    """The one mutation point for launch accounting (lint rule RA007):
+    global counter under the lock, plus every active scope of the
+    calling thread."""
+    with _LAUNCH_LOCK:
+        KERNEL_LAUNCHES[name] += 1
+    for scope in _scope_stack():
+        scope.counts[name] += 1
 
 
 def reset_kernel_launch_counts() -> None:
-    KERNEL_LAUNCHES.clear()
+    with _LAUNCH_LOCK:
+        KERNEL_LAUNCHES.clear()
 
 
 def kernel_launch_snapshot() -> dict[str, int]:
@@ -48,13 +110,18 @@ def kernel_launch_snapshot() -> dict[str, int]:
     (the repair engine's launch accounting, the simulator's traffic
     oracle) take a snapshot before and after instead of mutating the
     live counter, so concurrent accounting consumers don't clobber each
-    other."""
-    return dict(KERNEL_LAUNCHES)
+    other. Single-threaded accounting only — under the shard worker
+    pool a snapshot delta folds in every other thread's launches; use
+    `launch_scope()` there."""
+    with _LAUNCH_LOCK:
+        return dict(KERNEL_LAUNCHES)
 
 
 def launches_since(snapshot: dict[str, int]) -> int:
     """Total launches since `snapshot` (see kernel_launch_snapshot)."""
-    return sum(KERNEL_LAUNCHES.values()) - sum(snapshot.values())
+    with _LAUNCH_LOCK:
+        total = sum(KERNEL_LAUNCHES.values())
+    return total - sum(snapshot.values())
 
 
 def _on_tpu() -> bool:
@@ -95,7 +162,7 @@ def apply_matrix(M: np.ndarray, blocks: jax.Array, *,
     a_bits = _bits(M, tag)
     blocks = jnp.asarray(blocks, dtype=jnp.uint8)
     padded, B = _pad_to(blocks, block_b, axis=1)
-    KERNEL_LAUNCHES["gf_bitmatmul"] += 1
+    _count_launch("gf_bitmatmul")
     out = gf_bitmatmul(a_bits, padded, block_b=block_b, interpret=interpret)
     return out[:, :B]
 
@@ -112,7 +179,7 @@ def apply_matrix_many(M: np.ndarray, blocks: jax.Array, *,
     a_bits = _bits(M, tag)
     blocks = jnp.asarray(blocks, dtype=jnp.uint8)
     padded, B = _pad_to(blocks, block_b, axis=2)
-    KERNEL_LAUNCHES["gf_bitmatmul"] += 1
+    _count_launch("gf_bitmatmul")
     out = gf_bitmatmul_batched(a_bits, padded, block_b=block_b,
                                interpret=interpret)
     return out[:, :, :B]
@@ -146,7 +213,7 @@ def xor_fold(blocks: jax.Array, *, interpret: bool | None = None) -> jax.Array:
     padded, _ = _pad_to(blocks, 8192, axis=1)   # 8192 B = 2048 int32 lanes
     lanes = jax.lax.bitcast_convert_type(
         padded.reshape(s, -1, 4), jnp.int32).reshape(s, -1)
-    KERNEL_LAUNCHES["xor_reduce"] += 1
+    _count_launch("xor_reduce")
     out32 = xor_reduce(lanes, interpret=interpret)
     out8 = jax.lax.bitcast_convert_type(
         out32.reshape(-1, 1), jnp.uint8).reshape(-1)
@@ -163,7 +230,7 @@ def xor_fold_many(blocks: jax.Array, *,
     padded, _ = _pad_to(blocks, 8192, axis=2)
     lanes = jax.lax.bitcast_convert_type(
         padded.reshape(S, s, -1, 4), jnp.int32).reshape(S, s, -1)
-    KERNEL_LAUNCHES["xor_reduce"] += 1
+    _count_launch("xor_reduce")
     out32 = xor_reduce_batched(lanes, interpret=interpret)
     out8 = jax.lax.bitcast_convert_type(
         out32.reshape(S, -1, 1), jnp.uint8).reshape(S, -1)

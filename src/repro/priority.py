@@ -28,12 +28,20 @@ members; the repair risk tiers are *aliases* onto the same values, so
 This module sits below every other package (stdlib-only) so `sim`,
 `io`, and the benchmarks can import it without cycles. `ClassStats`
 rides along because it is the generic per-class accounting record the
-front-end (and anything else that batches by `Priority`) keeps.
+front-end (and anything else that batches by `Priority`) keeps, and the
+admission-control vocabulary (`TokenBucket`, `QoSConfig`,
+`AdmissionController`, `RequestShed`) lives here for the same reason:
+it is pure policy over the shared priority scale, consumed by the io
+front-end but importable by the simulator without touching jax.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
+import math
+import threading
+import time
+from collections.abc import Callable
 
 
 class Priority(enum.IntEnum):
@@ -97,7 +105,176 @@ class ClassStats:
     flushes: int = 0
     total_latency_s: float = 0.0
     max_latency_s: float = 0.0
+    shed_requests: int = 0       # admission-rejected (never queued/served)
+    deadline_misses: int = 0     # served, but past the class deadline
+    cache_hits: int = 0          # served from the hot-block cache, zero ops
 
     @property
     def mean_latency_s(self) -> float:
         return self.total_latency_s / self.requests if self.requests else 0.0
+
+    def merge(self, other: ClassStats) -> None:
+        """Fold another shard's accounting into this record (the
+        cross-shard ClassStats merge of the sharded front-end).
+        `max_latency_s` is the max across shards; everything else sums."""
+        self.requests += other.requests
+        self.failed_requests += other.failed_requests
+        self.blocks += other.blocks
+        self.launches += other.launches
+        self.inner_bytes += other.inner_bytes
+        self.cross_bytes += other.cross_bytes
+        self.aggregated_bytes += other.aggregated_bytes
+        self.flushes += other.flushes
+        self.total_latency_s += other.total_latency_s
+        self.max_latency_s = max(self.max_latency_s, other.max_latency_s)
+        self.shed_requests += other.shed_requests
+        self.deadline_misses += other.deadline_misses
+        self.cache_hits += other.cache_hits
+
+
+def merge_class_stats(many: list[dict[Priority, ClassStats]]
+                      ) -> dict[Priority, ClassStats]:
+    """Merge per-shard {Priority: ClassStats} maps into one fresh map."""
+    out = {p: ClassStats() for p in Priority}
+    for stats in many:
+        for p, cls in stats.items():
+            out[Priority(p)].merge(cls)
+    return out
+
+
+class RequestShed(RuntimeError):
+    """A request rejected by admission control. Carried on the request's
+    handle (`result()` re-raises), never silently dropped — the caller
+    sees WHY it was shed and the per-class `shed_requests` counter keeps
+    the accounting invariant submitted == served + shed."""
+
+    def __init__(self, reason: str, priority: Priority,
+                 tenant: str | None = None):
+        super().__init__(
+            f"shed [{reason}] {Priority(priority).name}"
+            + (f" tenant={tenant}" if tenant is not None else ""))
+        self.reason = reason
+        self.priority = Priority(priority)
+        self.tenant = tenant
+
+
+class TokenBucket:
+    """Classic token bucket with an injectable clock (so QoS policy is
+    testable without sleeps and deterministic under the benchmark's
+    virtual time). Starts full; `try_take(n)` refills by elapsed * rate
+    (capped at burst) and takes n tokens iff available."""
+
+    def __init__(self, rate: float, burst: float,
+                 clock: Callable[[], float] | None = None):
+        if rate <= 0 or burst <= 0:
+            raise ValueError("token bucket needs rate > 0 and burst > 0")
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self._clock = clock or time.perf_counter
+        self._tokens = self.burst
+        self._last = self._clock()
+        self._lock = threading.Lock()
+
+    def _refill_locked(self) -> None:
+        now = self._clock()
+        if now > self._last:
+            self._tokens = min(self.burst,
+                               self._tokens + (now - self._last) * self.rate)
+        self._last = now
+
+    @property
+    def tokens(self) -> float:
+        with self._lock:
+            self._refill_locked()
+            return self._tokens
+
+    def try_take(self, n: float = 1.0) -> bool:
+        with self._lock:
+            self._refill_locked()
+            if self._tokens + 1e-12 < n:
+                return False
+            self._tokens -= n
+            return True
+
+
+@dataclasses.dataclass(frozen=True)
+class QoSConfig:
+    """Admission policy knobs.
+
+    Watermarks are pending-request counts at which load shedding starts,
+    in strict degradation order: BACKGROUND sheds first (at
+    `background_watermark`), DEGRADED_READ second (at the higher
+    `degraded_watermark`); CLIENT_READ is never watermark-shed — under
+    overload the system degrades sideways traffic before it degrades the
+    paying path. Per-tenant token buckets (rate/burst in blocks) apply
+    to every class including CLIENT_READ: a tenant over its reservation
+    is shed regardless of class. `deadline_s` maps a class to its
+    latency SLO; served requests past it count `deadline_misses`."""
+    background_watermark: int | None = None
+    degraded_watermark: int | None = None
+    tenant_rate: float = math.inf     # blocks/second refill
+    tenant_burst: float = math.inf    # bucket capacity, blocks
+    deadline_s: dict[Priority, float] = dataclasses.field(
+        default_factory=dict)
+
+    def __post_init__(self):
+        if (self.background_watermark is not None
+                and self.degraded_watermark is not None
+                and self.degraded_watermark < self.background_watermark):
+            raise ValueError(
+                "degraded_watermark must be >= background_watermark: "
+                "BACKGROUND always sheds before DEGRADED_READ")
+
+    @property
+    def metered_tenants(self) -> bool:
+        return math.isfinite(self.tenant_rate) \
+            or math.isfinite(self.tenant_burst)
+
+
+class AdmissionController:
+    """Admission decision point shared by every shard of a front-end.
+
+    `admit()` returns None to admit or a shed-reason string; it charges
+    the tenant's token bucket only when the request passes every check,
+    so a watermark-shed request does not burn the tenant's tokens."""
+
+    def __init__(self, config: QoSConfig | None = None, *,
+                 clock: Callable[[], float] | None = None):
+        self.config = config or QoSConfig()
+        self._clock = clock or time.perf_counter
+        self._buckets: dict[str, TokenBucket] = {}
+        self._lock = threading.Lock()
+
+    def bucket_for(self, tenant: str) -> TokenBucket:
+        with self._lock:
+            bucket = self._buckets.get(tenant)
+            if bucket is None:
+                rate = self.config.tenant_rate
+                burst = self.config.tenant_burst
+                if not math.isfinite(rate):
+                    rate = float("1e18")
+                if not math.isfinite(burst):
+                    burst = float("1e18")
+                bucket = TokenBucket(rate, burst, self._clock)
+                self._buckets[tenant] = bucket
+        return bucket
+
+    def admit(self, priority: Priority, size: int, *,
+              pending: int, tenant: str | None = None) -> str | None:
+        cfg = self.config
+        priority = Priority(priority)
+        if priority is Priority.BACKGROUND \
+                and cfg.background_watermark is not None \
+                and pending >= cfg.background_watermark:
+            return "background-watermark"
+        if priority is Priority.DEGRADED_READ \
+                and cfg.degraded_watermark is not None \
+                and pending >= cfg.degraded_watermark:
+            return "degraded-watermark"
+        if tenant is not None and cfg.metered_tenants \
+                and not self.bucket_for(tenant).try_take(max(size, 1)):
+            return "tenant-throttle"
+        return None
+
+    def deadline_for(self, priority: Priority) -> float | None:
+        return self.config.deadline_s.get(Priority(priority))

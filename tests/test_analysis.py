@@ -528,3 +528,40 @@ def test_analysis_gates_in_check_regression():
     no_waves = {"workloads": {"w": {"ops": 3, "waves": 0, "ok": True,
                                     "violations": []}}}
     assert any("wave" in f for f in cr.check_analysis_hazards(no_waves))
+
+
+def test_lint_launch_counter_mutation_flagged():
+    """RA007: KERNEL_LAUNCHES must only be mutated through
+    `_count_launch` inside repro/kernels/ — direct writes, method
+    mutators, and rebinding outside that package are all findings."""
+    src = ("from repro.kernels.ops import KERNEL_LAUNCHES\n"
+           "KERNEL_LAUNCHES['gf_bitmatmul'] += 1\n"
+           "KERNEL_LAUNCHES.clear()\n"
+           "KERNEL_LAUNCHES.update({'xor_reduce': 3})\n"
+           "KERNEL_LAUNCHES = {}\n")
+    findings = lint_source(src, "src/repro/io/sneaky.py")
+    assert [f.rule for f in findings] == ["RA007"] * 4
+
+
+def test_lint_launch_counter_attribute_access_flagged():
+    src = ("from repro.kernels import ops\n"
+           "ops.KERNEL_LAUNCHES['gf_bitmatmul'] = 0\n")
+    assert [f.rule for f in lint_source(src, "tests/helper.py")] \
+        == ["RA007"]
+
+
+def test_lint_launch_counter_kernels_exempt_and_reads_ok():
+    """The kernels package itself (the `_count_launch` home) is exempt,
+    and read-only access is fine anywhere."""
+    mutating = ("KERNEL_LAUNCHES['gf_bitmatmul'] += 1\n")
+    assert lint_source(mutating, "src/repro/kernels/ops.py") == []
+    reading = ("from repro.kernels.ops import KERNEL_LAUNCHES\n"
+               "total = sum(KERNEL_LAUNCHES.values())\n"
+               "n = KERNEL_LAUNCHES['gf_bitmatmul']\n")
+    assert lint_source(reading, "src/repro/io/fine.py") == []
+
+
+def test_lint_launch_counter_waiver():
+    src = ("from repro.kernels.ops import KERNEL_LAUNCHES\n"
+           "KERNEL_LAUNCHES.clear()   # repro-lint: allow=RA007\n")
+    assert lint_source(src, "tests/oracle.py") == []

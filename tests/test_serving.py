@@ -1,0 +1,346 @@
+"""Serving-path tests: hot-block cache, admission control / per-tenant
+QoS, the sharded front-end, virtual-time latency accounting, and the
+thread-local kernel-launch attribution the shard-parallel flush relies
+on.
+
+The load-bearing invariants:
+
+  * the cache is *correct by construction* — store mutation listeners
+    invalidate on every put/drop/rebuild path, so a cached front-end is
+    byte-identical to an uncached one under any interleaving (property
+    test, both backends);
+  * admission sheds BACKGROUND before DEGRADED_READ and never sheds
+    CLIENT_READ on watermarks; tenant token buckets are exact in
+    virtual time; every submission is either served or shed — the
+    accounting balances exactly;
+  * `ShardedFrontend(num_shards=N)` returns the same bytes as the
+    single-shard front-end, with cross-shard ClassStats merging;
+  * `launch_scope` attribution is per-thread: concurrent shard flushes
+    cannot bleed launches into each other's ClassStats.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.ckpt import BlockStore
+from repro.ckpt.stripe import StripeCodec
+from repro.core.codes import make_unilrc
+from repro.io import (HotBlockCache, Priority, RequestFrontend,
+                      RequestShed, ServiceModel, ShardedFrontend,
+                      VirtualClock)
+from repro.kernels import ops
+from repro.priority import (AdmissionController, ClassStats, QoSConfig,
+                            TokenBucket, merge_class_stats)
+from repro.topo import Topology
+
+CODE = make_unilrc(1, 3)          # n=12, k=6 — smallest paper code
+S = 3
+BS = 64
+TOPO = Topology(3, 5)             # one spare node per cluster
+
+
+def _fresh(backend: str = "numpy", seed: int = 0):
+    store = BlockStore(TOPO)
+    codec = StripeCodec(CODE, store, block_size=BS, backend=backend)
+    payload = np.random.default_rng(seed).integers(
+        0, 256, size=CODE.k * BS * S, dtype=np.uint8).tobytes()
+    metas = codec.write(payload)
+    return store, codec, metas
+
+
+def _data_block(group: int = 0) -> int:
+    return next(b for b in CODE.groups[group]
+                if CODE.block_type[b] == 'd')
+
+
+# ---------------------------------------------------------------------------
+# Hot-block cache
+# ---------------------------------------------------------------------------
+
+def test_cache_lru_eviction_under_pressure():
+    cache = HotBlockCache(capacity_blocks=2)
+    cache.put(0, 1, b"a")
+    cache.put(1, 1, b"b")
+    assert cache.get(0, 1) == b"a"          # touch -> (1,1) is now coldest
+    cache.put(2, 1, b"c")                   # evicts (1,1)
+    assert cache.get(1, 1) is None
+    assert cache.get(0, 1) == b"a" and cache.get(2, 1) == b"c"
+    assert len(cache) == 2
+    assert cache.stats.evictions == 1
+    assert cache.stats.misses == 1
+
+
+def test_cache_contains_has_no_side_effects():
+    cache = HotBlockCache(capacity_blocks=2)
+    cache.put(0, 1, b"a")
+    cache.put(1, 1, b"b")
+    before = cache.stats.hits
+    assert cache.contains(0, 1)             # must NOT refresh LRU order
+    cache.put(2, 1, b"c")                   # (0,1) is still coldest
+    assert cache.get(0, 1) is None
+    assert cache.stats.hits == before
+
+
+def test_cache_invalidated_by_every_store_mutation_path():
+    """put / drop_block / rebuild re-place all fire the mutation
+    listener; a stale entry cannot survive any of them."""
+    store, codec, metas = _fresh()
+    cache = HotBlockCache().attach(store)
+    b = _data_block()
+    cache.put(0, b, b"x" * BS)
+    store.drop_block(0, b)                  # drop invalidates
+    assert not cache.contains(0, b)
+    cache.put(1, b, b"y" * BS)
+    codec.write(bytes(BS * CODE.k), start_stripe=1)   # overwrite invalidates
+    assert not cache.contains(1, b)
+    store.drop_block(2, b)
+    cache.put(2, b, b"z" * BS)
+    codec.rebuild_blocks([(2, b)])          # re-place invalidates
+    assert not cache.contains(2, b)
+    assert cache.stats.invalidations >= 3
+
+
+def test_cache_attach_is_idempotent():
+    store, codec, metas = _fresh()
+    cache = HotBlockCache().attach(store)
+    cache.attach(store)                     # second attach: no double-fire
+    cache.put(0, 0, b"v")
+    store.drop_block(0, 0)
+    assert cache.stats.invalidations == 1
+
+
+def test_frontend_cache_hit_skips_the_coding_path():
+    store, codec, metas = _fresh()
+    b = _data_block()
+    store.drop_block(0, b)
+    fe = RequestFrontend(codec, cache=HotBlockCache())
+    first = fe.submit_degraded_read(metas[0], b)
+    fe.drain()
+    hit = fe.submit_degraded_read(metas[0], b)
+    assert hit.done                         # resolved at submit, no flush
+    assert hit.result() == first.result()
+    assert fe.pending == 0
+    deg = fe.stats[Priority.DEGRADED_READ]
+    assert deg.requests == 2 and deg.cache_hits == 1
+
+
+def test_evicted_entry_recomputes_correct_bytes():
+    store, codec, metas = _fresh()
+    b = _data_block()
+    expect = store.get(0, b)
+    store.drop_block(0, b)
+    fe = RequestFrontend(codec, cache=HotBlockCache(capacity_blocks=1))
+    first = fe.submit_degraded_read(metas[0], b)
+    fe.drain()
+    assert first.result() == expect
+    fe.cache.put(9, 9, b"hot")              # evicts (0, b)
+    again = fe.submit_degraded_read(metas[0], b)
+    fe.drain()
+    assert again.result() == expect
+
+
+# ---------------------------------------------------------------------------
+# Token buckets, admission, QoS
+# ---------------------------------------------------------------------------
+
+def test_token_bucket_exact_in_virtual_time():
+    clock = VirtualClock()
+    bucket = TokenBucket(rate=10.0, burst=5.0, clock=clock)
+    assert bucket.try_take(5)
+    assert not bucket.try_take(1)
+    clock.advance(0.5)                      # +5 tokens
+    assert bucket.try_take(5)
+    clock.advance(10.0)                     # refill caps at burst
+    assert bucket.try_take(5) and not bucket.try_take(1)
+
+
+def test_qos_config_validates_watermark_order():
+    with pytest.raises(ValueError):
+        QoSConfig(background_watermark=100, degraded_watermark=10)
+
+
+def test_watermark_shed_order_background_first_client_never():
+    adm = AdmissionController(QoSConfig(background_watermark=4,
+                                        degraded_watermark=8))
+    assert adm.admit(Priority.BACKGROUND, 1, pending=5) is not None
+    assert adm.admit(Priority.DEGRADED_READ, 1, pending=5) is None
+    assert adm.admit(Priority.DEGRADED_READ, 1, pending=9) is not None
+    assert adm.admit(Priority.CLIENT_READ, 1, pending=10 ** 6) is None
+
+
+def test_tenant_throttle_sheds_and_accounting_balances():
+    store, codec, metas = _fresh()
+    clock = VirtualClock()
+    adm = AdmissionController(
+        QoSConfig(background_watermark=10 ** 6,
+                  degraded_watermark=10 ** 6,
+                  tenant_rate=1.0, tenant_burst=float(2 * CODE.k)),
+        clock=clock)
+    fe = RequestFrontend(codec, clock=clock, admission=adm)
+    handles = [fe.submit_client_read(metas[i % S], tenant="free")
+               for i in range(5)]           # budget covers exactly 2
+    fe.drain()
+    shed = [h for h in handles if h.shed]
+    served = [h for h in handles if not h.shed]
+    assert len(served) == 2 and len(shed) == 3
+    for h in shed:
+        with pytest.raises(RequestShed):
+            h.result()
+    cli = fe.stats[Priority.CLIENT_READ]
+    assert cli.requests + cli.shed_requests == 5
+    assert cli.shed_requests == 3
+    # an unmetered tenant rides free
+    ok = fe.submit_client_read(metas[0])
+    fe.drain()
+    assert not ok.shed
+
+
+def test_deadline_misses_counted():
+    store, codec, metas = _fresh()
+    clock = VirtualClock()
+    fe = RequestFrontend(
+        codec, clock=clock, service_model=ServiceModel(),
+        deadline_s={Priority.CLIENT_READ: 1e-9})
+    fe.submit_client_read(metas[0])
+    fe.drain()
+    assert fe.stats[Priority.CLIENT_READ].deadline_misses == 1
+
+
+def test_virtual_time_latencies_are_deterministic():
+    def run():
+        store, codec, metas = _fresh()
+        clock = VirtualClock()
+        fe = RequestFrontend(codec, clock=clock,
+                             service_model=ServiceModel())
+        hs = [fe.submit_client_read(metas[i]) for i in range(S)]
+        fe.drain()
+        return [h.latency_s for h in hs], clock()
+    a, b = run(), run()
+    assert a == b
+    assert a[1] > 0 and all(lat > 0 for lat in a[0])
+
+
+# ---------------------------------------------------------------------------
+# Sharded front-end
+# ---------------------------------------------------------------------------
+
+def _mixed_requests(fe, metas, lost):
+    reads = [fe.submit_client_read(metas[i]) for i in range(S)]
+    degs = [fe.submit_degraded_read(metas[s], b) for s, b in lost]
+    fe.drain()
+    return ([h.result() for h in reads], [h.result() for h in degs])
+
+
+@pytest.mark.parametrize("shards", [2, 3])
+def test_sharded_matches_single_shard(shards):
+    b = _data_block()
+    lost = [(sid, b) for sid in range(S)]
+
+    def run(n):
+        store, codec, metas = _fresh()
+        for s, blk in lost:
+            store.drop_block(s, blk)
+        fe = ShardedFrontend(codec, num_shards=n, analyze_flushes=True)
+        with fe:
+            out = _mixed_requests(fe, metas, lost)
+            stats = fe.stats
+            hz = fe.hazard_checked_flushes
+        return out, stats, hz
+
+    single, s_stats, _ = run(1)
+    multi, m_stats, hz = run(shards)
+    assert single == multi
+    assert hz > 0                           # analyzer accepted every wave
+    for p in Priority:
+        assert m_stats[p].requests == s_stats[p].requests
+        assert m_stats[p].failed_requests == 0
+
+
+def test_merged_rebuild_across_shards():
+    store, codec, metas = _fresh()
+    b = _data_block()
+    pairs = [(sid, b) for sid in range(S)]
+    for s, blk in pairs:
+        store.drop_block(s, blk)
+    with ShardedFrontend(codec, num_shards=2) as fe:
+        handle = fe.submit_rebuild(pairs)
+        fe.drain()
+        placed, rec = handle.result()
+    assert placed == S
+    assert not handle.shed and handle.latency_s >= 0
+    assert all(store.available(s, blk) for s, blk in pairs)
+
+
+def test_merged_shed_counted_once_at_the_merged_layer():
+    store, codec, metas = _fresh()
+    adm = AdmissionController(QoSConfig(background_watermark=0,
+                                        degraded_watermark=10 ** 6))
+    with ShardedFrontend(codec, num_shards=2, admission=adm) as fe:
+        fe.submit_client_read(metas[0])     # make pending > 0
+        handle = fe.submit_rebuild([(0, CODE.k), (1, CODE.k)])
+        assert handle.shed
+        fe.drain()
+        assert fe.stats[Priority.BACKGROUND].shed_requests == 1
+
+
+def test_sharded_stats_merge_sums_and_maxes():
+    a, b = ClassStats(), ClassStats()
+    a.requests, a.max_latency_s, a.total_latency_s = 2, 0.5, 0.6
+    b.requests, b.max_latency_s, b.total_latency_s = 3, 0.2, 0.3
+    merged = merge_class_stats([{Priority.CLIENT_READ: a},
+                                {Priority.CLIENT_READ: b}])
+    m = merged[Priority.CLIENT_READ]
+    assert m.requests == 5
+    assert m.max_latency_s == 0.5
+    assert abs(m.total_latency_s - 0.9) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Thread-local launch attribution
+# ---------------------------------------------------------------------------
+
+def test_launch_scope_is_per_thread():
+    seen = {}
+    gate = threading.Barrier(2)
+
+    def worker(name, mine):
+        with ops.launch_scope() as scope:
+            gate.wait()
+            for _ in range(mine):
+                ops._count_launch("gf_bitmatmul")
+            gate.wait()
+        seen[name] = scope.total
+
+    t1 = threading.Thread(target=worker, args=("a", 3))
+    t2 = threading.Thread(target=worker, args=("b", 5))
+    t1.start(); t2.start(); t1.join(); t2.join()
+    assert seen == {"a": 3, "b": 5}
+
+
+def test_launch_scopes_nest():
+    with ops.launch_scope() as outer:
+        ops._count_launch("xor_reduce")
+        with ops.launch_scope() as inner:
+            ops._count_launch("xor_reduce")
+        ops._count_launch("xor_reduce")
+    assert inner.total == 1
+    assert outer.total == 3
+
+
+def test_parallel_shard_flush_attribution_is_exact():
+    """With the kernels backend, concurrent shard flushes must not
+    bleed or double-count launches: the merged per-class count equals
+    the global counter's delta for the whole drain, exactly."""
+    b = _data_block()
+    lost = [(sid, b) for sid in range(S)]
+    store, codec, metas = _fresh(backend="kernels")
+    for s, blk in lost:
+        store.drop_block(s, blk)
+    with ShardedFrontend(codec, num_shards=3) as fe:
+        for s, blk in lost:
+            fe.submit_degraded_read(metas[s], blk)
+        snap = ops.kernel_launch_snapshot()
+        fe.drain()
+        attributed = fe.stats[Priority.DEGRADED_READ].launches
+    assert attributed == ops.launches_since(snap) > 0

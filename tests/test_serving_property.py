@@ -1,0 +1,117 @@
+"""Property test (hypothesis): a cached front-end is byte-identical to
+an uncached one under random interleavings of degraded reads, client
+reads, block updates, rebuilds, and stripe overwrites, on both
+backends. The store's mutation listeners make cache invalidation an
+invariant rather than a convention — any divergence here is a stale
+cache entry surviving a mutation path."""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; property tests skipped")
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import BlockStore
+from repro.ckpt.stripe import StripeCodec
+from repro.core.codes import make_unilrc
+from repro.io import HotBlockCache, RequestFrontend
+from repro.topo import Topology
+
+CODE = make_unilrc(1, 3)
+S = 3
+BS = 64
+TOPO = Topology(3, 5)
+
+
+def _fresh(backend: str, seed: int):
+    store = BlockStore(TOPO)
+    codec = StripeCodec(CODE, store, block_size=BS, backend=backend)
+    payload = np.random.default_rng(seed).integers(
+        0, 256, size=CODE.k * BS * S, dtype=np.uint8).tobytes()
+    metas = codec.write(payload)
+    return store, codec, metas
+
+
+def _data_block() -> int:
+    return next(b for b in CODE.groups[0] if CODE.block_type[b] == 'd')
+
+
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; property tests skipped")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+ops_strategy = st.lists(
+    st.one_of(
+        st.tuples(st.just("degraded"), st.integers(0, S - 1),
+                  st.integers(0, CODE.k - 1)),
+        st.tuples(st.just("client"), st.integers(0, S - 1)),
+        st.tuples(st.just("update"), st.integers(0, S - 1),
+                  st.integers(0, CODE.k - 1), st.integers(0, 255)),
+        st.tuples(st.just("rebuild")),
+        st.tuples(st.just("overwrite"), st.integers(0, S - 1),
+                  st.integers(0, 255)),
+    ),
+    min_size=1, max_size=10)
+
+
+def _run_interleaved(cache_on: bool, backend: str, seed: int, script):
+    """Apply the script against a fresh store; drain at every mutation
+    boundary (the cache's consistency contract is defined at flush
+    boundaries). Returns every read's bytes in submission order."""
+    store, codec, metas = _fresh(backend=backend, seed=seed)
+    b = _data_block()
+    for sid in range(S):
+        store.drop_block(sid, b)
+    fe = RequestFrontend(
+        codec, cache=HotBlockCache(capacity_blocks=4) if cache_on
+        else None)
+    out, handles = [], []
+
+    def drain():
+        fe.drain()
+        out.extend(h.result() for h in handles)
+        handles.clear()
+
+    for op in script:
+        if op[0] == "degraded":
+            _, sid, blk = op
+            if codec.store.available(sid, blk):
+                continue
+            handles.append(fe.submit_degraded_read(metas[sid], blk))
+        elif op[0] == "client":
+            handles.append(fe.submit_client_read(metas[op[1]]))
+        elif op[0] == "update":
+            _, sid, blk, fill = op
+            if not codec.store.available(sid, blk):
+                continue
+            drain()
+            codec.update_block(metas[sid], blk, bytes([fill]) * BS)
+        elif op[0] == "rebuild":
+            drain()
+            pairs = [(sid, blk) for sid in range(S)
+                     for blk in range(CODE.n)
+                     if not codec.store.available(sid, blk)]
+            if pairs:
+                codec.rebuild_blocks(pairs)
+        elif op[0] == "overwrite":
+            _, sid, fill = op
+            drain()
+            codec.write(bytes([fill]) * (CODE.k * BS), start_stripe=sid)
+            store.drop_block(sid, b)        # keep a degraded target live
+    drain()
+    return out
+
+
+@settings(max_examples=25, deadline=None)
+@given(script=ops_strategy, seed=st.integers(0, 3))
+def test_cached_equals_uncached_numpy(script, seed):
+    assert _run_interleaved(True, "numpy", seed, script) \
+        == _run_interleaved(False, "numpy", seed, script)
+
+
+@settings(max_examples=8, deadline=None)
+@given(script=ops_strategy, seed=st.integers(0, 1))
+def test_cached_equals_uncached_kernels(script, seed):
+    assert _run_interleaved(True, "kernels", seed, script) \
+        == _run_interleaved(False, "kernels", seed, script)
