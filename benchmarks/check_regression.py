@@ -22,6 +22,14 @@ above a cross-traffic floor, correlated cluster-loss repair must slow
 down under 10x core oversubscription, and gateway-aggregated degraded
 reads must stay byte-identical and under the pre-fold launch ceiling.
 
+The checkpoint-write gate (`--ckpt-*`, fed by fig_ckpt_write) pins the
+streaming write fast path: the fused encode+put pipeline must beat the
+seed per-stripe regime by `--ckpt-min-speedup` on the gated small-block
+rows while landing byte-identical stripes on both backends, encode
+launches must stay within the ceil(S/window) batching budget, and the
+autotuned tile planner must never pad more than the retired hard-coded
+512 tile anywhere on the paper grid.
+
 The concurrency gate (`--conc-*`, fed by fig_concurrent_repair) pins
 the multi-queue scheduler: cluster-loss recovery makespan must beat the
 serialized baseline by `--conc-min-speedup`, the window of
@@ -34,8 +42,9 @@ Usage (what .github/workflows/ci.yml runs):
     cp artifacts/bench/fig_mixed_workload.json /tmp/mixed_baseline.json
     cp artifacts/bench/fig_topology_repair.json /tmp/topo_baseline.json
     cp artifacts/bench/fig_concurrent_repair.json /tmp/conc_baseline.json
+    cp artifacts/bench/fig_ckpt_write.json /tmp/ckpt_baseline.json
     python -m benchmarks.run --tiny --only \
-        fig_batched_recovery,fig_correlated_recovery,fig_mixed_workload,fig_topology_repair,fig_concurrent_repair
+        fig_batched_recovery,fig_correlated_recovery,fig_mixed_workload,fig_topology_repair,fig_concurrent_repair,fig_ckpt_write
     python -m benchmarks.check_regression \
         --baseline /tmp/baseline.json \
         --fresh artifacts/bench/fig_batched_recovery.json \
@@ -46,7 +55,9 @@ Usage (what .github/workflows/ci.yml runs):
         --topo-baseline /tmp/topo_baseline.json \
         --topo-fresh artifacts/bench/fig_topology_repair.json \
         --conc-baseline /tmp/conc_baseline.json \
-        --conc-fresh artifacts/bench/fig_concurrent_repair.json
+        --conc-fresh artifacts/bench/fig_concurrent_repair.json \
+        --ckpt-baseline /tmp/ckpt_baseline.json \
+        --ckpt-fresh artifacts/bench/fig_ckpt_write.json
 
 The static-analysis gates run standalone (no benchmark baselines
 needed — CI's `analysis` job):
@@ -380,6 +391,94 @@ def check_serving(baseline: dict, fresh: dict, *,
     return failures
 
 
+def check_ckpt(baseline: dict, fresh: dict, *,
+               min_speedup: float = 2.0,
+               rel_floor: float = 0.4) -> list[str]:
+    """fig_ckpt_write gate — the checkpoint-scale write fast path:
+
+      * every GATED row's streamed write speedup over the seed
+        per-stripe regime >= `min_speedup` and >= `rel_floor` of the
+        committed baseline's (the ungated aligned-block context row is
+        informational: there the seed tile was already optimal);
+      * the streamed stripes are byte-identical to the seed path on
+        BOTH backends — the speedup never buys a different answer;
+      * every row's encode-launch count <= ceil(stripes / window) —
+        the windowed batching invariant timings cannot check;
+      * the tile planner never pads more than the retired hard-coded
+        512 tile, on the benched shape and across the paper-grid
+        padding sweep.
+    """
+    failures: list[str] = []
+    s = fresh.get("summary", {})
+    if not s:
+        return ["fresh ckpt-write result has no summary — "
+                "fig_ckpt_write did not run"]
+    base = baseline.get("summary", {})
+    rows = s.get("rows", [])
+    if not rows:
+        return ["fresh ckpt-write summary has no rows — benchmark "
+                "did not run"]
+    base_by_bs = {r.get("block_bytes"): r for r in base.get("rows", [])}
+    gated_seen = False
+    for row in rows:
+        rid = f"ckpt/B={row.get('block_bytes')}"
+        speedup = float(row.get("write_speedup", 0.0))
+        brow = base_by_bs.get(row.get("block_bytes"), {})
+        base_speedup = float(brow.get("write_speedup", 0.0))
+        note = (f"(baseline {base_speedup:.2f}x)" if brow else
+                "(no baseline row)")
+        print(f"{rid}: write speedup {speedup:.2f}x {note}, "
+              f"launches {row.get('stream_launches')}"
+              f"<={row.get('windows')}")
+        if row.get("gated"):
+            gated_seen = True
+            if speedup < min_speedup:
+                failures.append(
+                    f"{rid}: streamed write speedup {speedup:.2f}x is "
+                    f"below the {min_speedup:.1f}x floor {note} — the "
+                    f"fused encode+put pipeline regressed into "
+                    f"per-stripe work")
+            elif brow and speedup < rel_floor * base_speedup:
+                failures.append(
+                    f"{rid}: streamed write speedup {speedup:.2f}x fell "
+                    f"below {rel_floor:.0%} of the committed baseline "
+                    f"{base_speedup:.2f}x")
+            ident = row.get("byte_identical", {})
+            for backend in ("kernels", "numpy"):
+                if not ident.get(backend):
+                    failures.append(
+                        f"{rid}: streamed write is NOT byte-identical "
+                        f"to the seed path on the {backend} backend")
+        if row.get("stream_launches", 0) > row.get("windows", 0):
+            failures.append(
+                f"{rid}: {row.get('stream_launches')} encode launches "
+                f"for {row.get('windows')} window(s) — windowed "
+                f"batching regressed into per-stripe launches")
+        if row.get("planned_pad", 0) > row.get("seed_pad", 0):
+            failures.append(
+                f"{rid}: planner pads {row.get('planned_pad')} bytes "
+                f"vs the seed tile's {row.get('seed_pad')} — the tile "
+                f"planner became worse than the hard-coded 512")
+    if not gated_seen:
+        failures.append("ckpt: no gated row in fig_ckpt_write — the "
+                        "speedup floor was never checked (schema drift?)")
+    pads = s.get("padding", [])
+    if not pads:
+        failures.append("ckpt: summary has no padding sweep — the "
+                        "planner-vs-seed padding invariant went "
+                        "unchecked")
+    for row in pads:
+        rid = f"ckpt-pad/{row.get('scheme')}"
+        print(f"{rid}: planned pad {row.get('planned_pad')} vs seed "
+              f"{row.get('seed_pad')} (B={row.get('B')})")
+        if row.get("planned_pad", 0) > row.get("seed_pad", 0):
+            failures.append(
+                f"{rid}: planned padding {row.get('planned_pad')} "
+                f"exceeds the seed tile's {row.get('seed_pad')} at "
+                f"B={row.get('B')}")
+    return failures
+
+
 def check_analysis_cert(batch: dict, *, min_certs: int = 6) -> list[str]:
     """Static-analysis gate over the symbolic verifier's certificate
     batch (`python -m repro.analysis.verify --grid --out ...`): every
@@ -522,6 +621,13 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--serve-max-p99-ratio", type=float, default=2.0,
                     help="ceiling on storm client p99 over failure-free "
                          "client p99")
+    ap.add_argument("--ckpt-baseline", type=pathlib.Path,
+                    help="committed fig_ckpt_write.json")
+    ap.add_argument("--ckpt-fresh", type=pathlib.Path,
+                    help="fig_ckpt_write.json from this run")
+    ap.add_argument("--ckpt-min-speedup", type=float, default=2.0,
+                    help="floor on the streamed write speedup over the "
+                         "seed per-stripe path on gated rows")
     ap.add_argument("--analysis-cert", type=pathlib.Path,
                     help="certificate batch from "
                          "`python -m repro.analysis.verify --grid`")
@@ -547,8 +653,8 @@ def main(argv: list[str] | None = None) -> int:
     if (args.baseline is None) != (args.fresh is None):
         ap.error("--baseline and --fresh go together")
     any_gate = any(x is not None for x in (
-        args.fresh, args.serve_fresh, args.analysis_cert,
-        args.analysis_hazards, args.sched_model))
+        args.fresh, args.serve_fresh, args.ckpt_fresh,
+        args.analysis_cert, args.analysis_hazards, args.sched_model))
     if not any_gate:
         ap.error("nothing to check: pass --baseline/--fresh and/or an "
                  "analysis gate (--analysis-cert, --analysis-hazards, "
@@ -595,6 +701,14 @@ def main(argv: list[str] | None = None) -> int:
             json.loads(args.serve_fresh.read_text()),
             min_shard_speedup=args.serve_min_shard_speedup,
             max_p99_ratio=args.serve_max_p99_ratio,
+            rel_floor=args.rel_floor)
+    if (args.ckpt_baseline is None) != (args.ckpt_fresh is None):
+        ap.error("--ckpt-baseline and --ckpt-fresh go together")
+    if args.ckpt_fresh is not None:
+        failures += check_ckpt(
+            json.loads(args.ckpt_baseline.read_text()),
+            json.loads(args.ckpt_fresh.read_text()),
+            min_speedup=args.ckpt_min_speedup,
             rel_floor=args.rel_floor)
     if args.analysis_cert is not None:
         failures += check_analysis_cert(

@@ -22,8 +22,9 @@ def main():
                          "(fig_sim_reliability trials, "
                          "fig_batched_recovery block bytes, "
                          "fig_correlated_recovery, fig_mixed_workload, "
-                         "fig_topology_repair, fig_concurrent_repair "
-                         "and fig_saturation stripes+block bytes); "
+                         "fig_topology_repair, fig_concurrent_repair, "
+                         "fig_saturation stripes+block bytes and "
+                         "fig_ckpt_write buffer/window sizes); "
                          "artifacts are still written")
     ap.add_argument("--only", default="",
                     help="comma-separated benchmark names")
@@ -33,10 +34,11 @@ def main():
 
     from . import (fig3_xor_vs_mul, fig5_tradeoff, fig8_locality,
                    fig10_operations, fig11_bandwidth, fig12_workload,
-                   fig_batched_recovery, fig_concurrent_repair,
-                   fig_correlated_recovery, fig_mixed_workload,
-                   fig_saturation, fig_sim_reliability,
-                   fig_topology_repair, roofline, table4_mttdl)
+                   fig_batched_recovery, fig_ckpt_write,
+                   fig_concurrent_repair, fig_correlated_recovery,
+                   fig_mixed_workload, fig_saturation,
+                   fig_sim_reliability, fig_topology_repair, roofline,
+                   table4_mttdl)
     suites = [
         ("fig5_tradeoff", fig5_tradeoff.main),
         ("fig8_locality", fig8_locality.main),
@@ -55,6 +57,7 @@ def main():
             ("fig_topology_repair", fig_topology_repair.main),
             ("fig_concurrent_repair", fig_concurrent_repair.main),
             ("fig_saturation", fig_saturation.main),
+            ("fig_ckpt_write", fig_ckpt_write.main),
         ]
     suites.append(("roofline", roofline.main))
 

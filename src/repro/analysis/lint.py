@@ -50,6 +50,13 @@ story leans on:
          all mutation must go through `_count_launch` /
          `reset_kernel_launch_counts` inside the kernels package.
          Reading the counters (snapshots, sums) is fine.
+  RA008  hard-coded kernel tile sizes outside `src/repro/kernels/` —
+         importing/using `DEFAULT_BLOCK_B` or passing a literal
+         `block_b=<int>` pins a tile chosen for one (k, m, B) shape
+         onto every caller, bypassing the VMEM-budgeted planner
+         (`repro.kernels.autotune.plan_matmul_tiles` /
+         `plan_xor_tiles`). Leave `block_b` unset (the ops layer plans
+         it) or pass `plan.block_b`; non-constant values are fine.
 
 Waive a finding with a same-line comment: `# repro-lint: allow=RA001`
 (comma-separated rule ids) — used by the kernel oracle tests that call
@@ -92,6 +99,10 @@ DEPRECATION_SHIM_PATHS = (
 DEPRECATED_NAMES = frozenset({"ClusterTopology"})
 DEPRECATED_KEYWORDS = frozenset({"use_kernels"})
 LAUNCH_COUNTER_NAMES = frozenset({"KERNEL_LAUNCHES"})
+# RA008: tile-size constants and keywords that must stay inside the
+# kernels package (everyone else goes through the autotune planner).
+TILE_CONSTANT_NAMES = frozenset({"DEFAULT_BLOCK_B"})
+TILE_KEYWORDS = frozenset({"block_b"})
 # Counter methods that mutate; reads (snapshot/sum/items) stay legal.
 COUNTER_MUTATORS = frozenset({"clear", "update", "subtract", "pop",
                               "popitem", "setdefault", "__setitem__"})
@@ -175,6 +186,14 @@ class _FileLinter(ast.NodeVisitor):
                     self._emit(node, "RA005",
                                f"import of deprecated `{alias.name}` — "
                                f"use repro.topo.Topology")
+        if not self.in_kernels:
+            for alias in node.names:
+                if alias.name in TILE_CONSTANT_NAMES:
+                    self._emit(node, "RA008",
+                               f"import of kernel tile constant "
+                               f"`{alias.name}` outside repro/kernels/ — "
+                               f"tiles come from repro.kernels.autotune "
+                               f"(plan_matmul_tiles / plan_xor_tiles)")
         self.generic_visit(node)
 
     def visit_Import(self, node: ast.Import) -> None:
@@ -253,6 +272,18 @@ class _FileLinter(ast.NodeVisitor):
                        f"counters outside repro/kernels/ — use "
                        f"reset_kernel_launch_counts() / launch_scope(); "
                        f"direct mutation races the shard worker pool")
+        if not self.in_kernels:
+            for kw in node.keywords:
+                if (kw.arg in TILE_KEYWORDS
+                        and isinstance(kw.value, ast.Constant)
+                        and isinstance(kw.value.value, int)):
+                    self._emit(kw.value, "RA008",
+                               f"hard-coded `{kw.arg}={kw.value.value}` "
+                               f"outside repro/kernels/ pins one shape's "
+                               f"tile on every caller — leave it unset "
+                               f"(the ops layer plans it) or pass "
+                               f"`plan.block_b` from "
+                               f"repro.kernels.autotune")
         if self.gf_critical:
             if (isinstance(node.func, ast.Attribute)
                     and node.func.attr == "astype"
@@ -277,6 +308,25 @@ class _FileLinter(ast.NodeVisitor):
             self._emit(node, "RA005",
                        f"deprecated name `{node.id}` — use "
                        f"repro.topo.Topology")
+        if (not self.in_kernels and isinstance(node.ctx, ast.Load)
+                and node.id in TILE_CONSTANT_NAMES):
+            self._emit(node, "RA008",
+                       f"use of kernel tile constant `{node.id}` outside "
+                       f"repro/kernels/ — plan tiles with "
+                       f"repro.kernels.autotune instead")
+        self.generic_visit(node)
+
+    # -- attributes (RA008) ---------------------------------------------------
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        # `gf_bitmatmul.DEFAULT_BLOCK_B`-style access from outside the
+        # kernels package (Store/Del contexts are rebinds the constant
+        # scope rules already forbid stylistically; only reads escape).
+        if (not self.in_kernels and isinstance(node.ctx, ast.Load)
+                and node.attr in TILE_CONSTANT_NAMES):
+            self._emit(node, "RA008",
+                       f"use of kernel tile constant `{node.attr}` "
+                       f"outside repro/kernels/ — plan tiles with "
+                       f"repro.kernels.autotune instead")
         self.generic_visit(node)
 
     # -- launch counters (RA007) ----------------------------------------------

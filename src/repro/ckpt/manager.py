@@ -67,11 +67,25 @@ class CheckpointManager:
         self._next_stripe = 0
 
     # -- save ----------------------------------------------------------------
+    def write_checkpoint(self, buf: bytes, *,
+                         window_stripes: int | None = None) -> list:
+        """Stream a raw checkpoint buffer through the fused encode+put
+        fast path (`StripeCodec.write_stream`): zero-copy windowed
+        ingest, double-buffered kernel dispatch, bulk `put_many`
+        landing. Byte-identical to the per-window `write` path —
+        `tests/test_ckpt_stream.py` property-tests that on both
+        backends. Returns the StripeMeta list; the stripe cursor
+        advances just like `save`."""
+        metas = self.codec.write_stream(
+            buf, start_stripe=self._next_stripe,
+            window_stripes=window_stripes)
+        self._next_stripe += len(metas)
+        return metas
+
     def save(self, state: Any, step: int) -> int:
         """Returns the number of stripes written."""
         buf, manifest, treedef = serialize_tree(state)
-        metas = self.codec.write(buf, start_stripe=self._next_stripe)
-        self._next_stripe += len(metas)
+        metas = self.write_checkpoint(buf)
         self._saved[step] = _Saved(metas, manifest, treedef)
         return len(metas)
 

@@ -134,27 +134,70 @@ class BlockStore:
         self._failed: set[int] = set()
         self._latency: dict[int, float] = {}        # node -> simulated sec
         self.traffic = TrafficStats()
-        self._mutation_listeners: list[Callable[[int, int], None]] = []
+        self._mutation_listeners: list[
+            tuple[Callable[[int, int], None],
+                  Callable[[list[tuple[int, int]]], None] | None]] = []
 
     # -- mutation listeners --------------------------------------------------
-    def add_mutation_listener(self, cb: Callable[[int, int], None]) -> None:
+    def add_mutation_listener(
+            self, cb: Callable[[int, int], None], *,
+            batch: Callable[[list[tuple[int, int]]], None] | None = None
+            ) -> None:
         """Register `cb(stripe, block)` to fire on EVERY content mutation
         of that block — put (write, update, rebuild re-place), drop, and
         node-wide delete. The hot-block cache hangs its invalidation here,
         which is what makes cached/uncached byte-identity an invariant
         rather than a convention: no mutation path can forget to
-        invalidate, because the store itself notifies."""
-        self._mutation_listeners.append(cb)
+        invalidate, because the store itself notifies.
+
+        `batch` optionally handles bulk mutations: `put_many` delivers
+        its whole [(stripe, block), ...] list in ONE call instead of
+        firing `cb` once per block (a 210-block stripe would otherwise
+        cost 210 listener round-trips per streamed window). Listeners
+        without a batch handler still see every pair, one call each —
+        exactness is never traded for batching."""
+        self._mutation_listeners.append((cb, batch))
 
     def _notify_mutation(self, stripe: int, block: int) -> None:
-        for cb in self._mutation_listeners:
+        for cb, _batch in self._mutation_listeners:
             cb(stripe, block)
 
+    def _notify_mutation_many(self, pairs: list[tuple[int, int]]) -> None:
+        for cb, batch in self._mutation_listeners:
+            if batch is not None:
+                batch(pairs)
+            else:
+                for stripe, block in pairs:
+                    cb(stripe, block)
+
     # -- placement ---------------------------------------------------------
-    def put(self, stripe: int, block: int, node: int, data: bytes):
+    def _put_nolisten(self, stripe: int, block: int, node: int, data):
+        """Store one payload + index entry WITHOUT notifying listeners —
+        the shared body of `put` (per-block notify) and `put_many` (one
+        batched notify). The only point where the in-memory and disk
+        tiers differ on the write path."""
         self._blocks[(stripe, block)] = bytes(data)
         self._block_node[(stripe, block)] = node
+
+    def put(self, stripe: int, block: int, node: int, data: bytes):
+        self._put_nolisten(stripe, block, node, data)
         self._notify_mutation(stripe, block)
+
+    def put_many(self, entries) -> int:
+        """Bulk landing: place every `(stripe, block, node, data)` entry,
+        then fire ONE batched mutation notification for the whole set.
+        `data` is anything `bytes()` accepts (numpy row views included —
+        the streamed checkpoint writer hands codeword views straight
+        through, no per-block `.tobytes()` staging). Per-entry semantics
+        are identical to `put`; only the listener fan-out is batched.
+        Returns the number of blocks placed."""
+        pairs: list[tuple[int, int]] = []
+        for stripe, block, node, data in entries:
+            self._put_nolisten(stripe, block, node, data)
+            pairs.append((stripe, block))
+        if pairs:
+            self._notify_mutation_many(pairs)
+        return len(pairs)
 
     def node_of(self, stripe: int, block: int) -> int:
         return self._block_node[(stripe, block)]
@@ -287,11 +330,12 @@ class DiskBlockStore(BlockStore):
         d.mkdir(exist_ok=True)
         return d / f"s{stripe:06d}_b{block:04d}"
 
-    def put(self, stripe: int, block: int, node: int, data: bytes):
+    def _put_nolisten(self, stripe: int, block: int, node: int, data):
+        # put/put_many inherit from BlockStore and keep their listener
+        # semantics; only the payload landing differs (file vs dict).
         self._path(stripe, block, node).write_bytes(data)
         self._blocks[(stripe, block)] = b""           # payload on disk
         self._block_node[(stripe, block)] = node
-        self._notify_mutation(stripe, block)
 
     def _payload(self, key: tuple[int, int], node: int) -> bytes:
         return self._path(key[0], key[1], node).read_bytes()

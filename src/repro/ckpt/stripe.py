@@ -204,25 +204,52 @@ class StripeCodec:
         cluster, idx = self._block_slot[block]
         return self.store.topo.node_of(cluster, idx + stripe_id)
 
+    def _window_view(self, arr: np.ndarray, w0: int,
+                     wn: int) -> np.ndarray:
+        """(wn, k, block_size) view of stripes [w0, w0+wn) of the flat
+        byte view `arr`. Zero-copy for every fully-covered window; only
+        a window containing the buffer's padded tail is staged into an
+        O(window) zeroed copy — never O(buffer)."""
+        k, bs = self.code.k, self.block_size
+        stripe_payload = k * bs
+        a, b = w0 * stripe_payload, (w0 + wn) * stripe_payload
+        if b <= arr.size:
+            return arr[a:b].reshape(wn, k, bs)
+        padded = np.zeros(wn * stripe_payload, dtype=np.uint8)
+        padded[:arr.size - a] = arr[a:]
+        return padded.reshape(wn, k, bs)
+
+    def _record_meta(self, sid: int, stripe_index: int, total_bytes: int,
+                     metas: list[StripeMeta]) -> None:
+        stripe_payload = self.code.k * self.block_size
+        nbytes = min(max(total_bytes - stripe_index * stripe_payload, 0),
+                     stripe_payload)
+        meta = StripeMeta(sid, nbytes, self.block_size)
+        self._stripes[sid] = meta
+        metas.append(meta)
+
     def write(self, buf: bytes, *, start_stripe: int = 0) -> list[StripeMeta]:
         """Stripe `buf` into ceil(len/k/bs) stripes starting at start_stripe.
 
         Stripes are encoded in batched engine launches of up to
         `max_batch_stripes` each (stripe-batch grid dimension) — one launch
         for typical writes, ceil(S/max_batch_stripes) for huge buffers —
-        then placed block by block. Per-batch staging bounds peak memory."""
+        then placed block by block. Each window is a zero-copy
+        `np.frombuffer` view of `buf` (only the padded tail window is
+        staged), so per-batch extra memory is O(window).
+
+        This is the synchronous reference path: encode the window, wait,
+        place, repeat. `write_stream` produces byte-identical stripes
+        with the encode+put pipeline overlapped."""
         k, bs = self.code.k, self.block_size
         stripe_payload = k * bs
         nstripes = max(1, math.ceil(len(buf) / stripe_payload))
-        metas = []
+        arr = np.frombuffer(buf, dtype=np.uint8)
+        metas: list[StripeMeta] = []
         for batch_start in range(0, nstripes, self.max_batch_stripes):
             batch_n = min(self.max_batch_stripes, nstripes - batch_start)
-            chunk = buf[batch_start * stripe_payload:
-                        (batch_start + batch_n) * stripe_payload]
-            padded = np.zeros(batch_n * stripe_payload, dtype=np.uint8)
-            padded[:len(chunk)] = np.frombuffer(chunk, np.uint8)
             handle = self.engine.submit_encode(
-                padded.reshape(batch_n, k, bs))
+                self._window_view(arr, batch_start, batch_n))
             self.engine.flush()
             codewords = handle.result()
             for i in range(batch_n):
@@ -230,11 +257,58 @@ class StripeCodec:
                 for b in range(self.code.n):
                     self.store.put(sid, b, self._node_for(sid, b),
                                    codewords[i, b].tobytes())
-                nbytes = min(max(len(buf) - (batch_start + i)
-                                 * stripe_payload, 0), stripe_payload)
-                meta = StripeMeta(sid, nbytes, bs)
-                self._stripes[sid] = meta
-                metas.append(meta)
+                self._record_meta(sid, batch_start + i, len(buf), metas)
+        return metas
+
+    def write_stream(self, buf: bytes, *, start_stripe: int = 0,
+                     window_stripes: int | None = None) -> list[StripeMeta]:
+        """Checkpoint-scale write fast path: same stripes, bytes and
+        placement as `write` (byte-identity is property-tested on both
+        backends), but fused and pipelined:
+
+          * zero-copy ingest — every window is a reshaped `np.frombuffer`
+            view of `buf`; only the final padded tail is staged;
+          * double-buffered encode — window w+1's kernel launch is
+            dispatched before window w's codewords are forced
+            (`CodingEngine.encode_stream`), so device compute overlaps
+            the host landing path;
+          * bulk landing — each window's S_w * n blocks ride ONE
+            `BlockStore.put_many` with a single batched mutation
+            notification, not S_w * n `put` round-trips.
+
+        Peak extra memory is O(window): at most two windows of codewords
+        (the double buffer) plus one padded tail window are ever live.
+        `window_stripes` (default `max_batch_stripes`, clamped to it)
+        trades pipeline depth against staging memory — see
+        `kernels.autotune.plan_stream_windows`."""
+        k, bs = self.code.k, self.block_size
+        stripe_payload = k * bs
+        nstripes = max(1, math.ceil(len(buf) / stripe_payload))
+        arr = np.frombuffer(buf, dtype=np.uint8)
+        window = min(window_stripes or self.max_batch_stripes,
+                     self.max_batch_stripes)
+        window = max(1, window)
+        starts = list(range(0, nstripes, window))
+        metas: list[StripeMeta] = []
+
+        def windows():
+            for w0 in starts:
+                yield self._window_view(arr, w0, min(window, nstripes - w0))
+
+        def land(idx: int, codewords: np.ndarray) -> None:
+            w0 = starts[idx]
+            entries = []
+            for i in range(codewords.shape[0]):
+                sid = start_stripe + w0 + i
+                for b in range(self.code.n):
+                    entries.append((sid, b, self._node_for(sid, b),
+                                    codewords[i, b]))
+            self.store.put_many(entries)
+            for i in range(codewords.shape[0]):
+                self._record_meta(start_stripe + w0 + i, w0 + i,
+                                  len(buf), metas)
+
+        self.engine.encode_stream(windows(), land)
         return metas
 
     # -- read planners -------------------------------------------------------

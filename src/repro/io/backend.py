@@ -37,6 +37,18 @@ class Backend(abc.ABC):
     def encode_many(self, code: Code, data: np.ndarray) -> np.ndarray:
         """(S, k, B) data -> (S, n, B) codewords."""
 
+    def encode_many_lazy(self, code: Code, data: np.ndarray):
+        """Dispatch an encode WITHOUT forcing the result to host memory.
+
+        Returns an opaque array-like the caller forces with
+        `np.asarray(...)` when it actually needs the bytes. The kernel
+        backend overrides this to return the un-forced jax array — its
+        async dispatch is what lets the streaming checkpoint writer
+        launch window w+1's encode while window w's codewords land in
+        the store. The default (host backends) is simply eager: the
+        result already IS host memory."""
+        return self.encode_many(code, data)
+
     @abc.abstractmethod
     def recover_many(self, plan: RecoveryPlan,
                      stacked: dict[int, np.ndarray]) -> np.ndarray:
@@ -70,8 +82,11 @@ class KernelBackend(Backend):
     uses_kernels = True
 
     def encode_many(self, code, data):
+        return np.asarray(self.encode_many_lazy(code, data))
+
+    def encode_many_lazy(self, code, data):
         from repro.kernels import ops
-        return np.asarray(ops.encode_many(code, data))
+        return ops.encode_many(code, data)      # un-forced jax array
 
     def recover_many(self, plan, stacked):
         from repro.kernels import ops

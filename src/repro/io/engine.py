@@ -25,6 +25,12 @@ into the fewest batched backend calls:
                 conflict-free wave via a block-structured coefficient
                 matrix.
 
+Checkpoint-scale writes bypass the queue through `encode_stream`: a
+double-buffered window pipeline (dispatch window w+1's encode lazily,
+force + land window w) whose peak memory is O(window) and whose launch
+count is ceil(S / max_batch_stripes) — the fused encode+put fast path
+`StripeCodec.write_stream` / `CheckpointManager.write_checkpoint` ride.
+
 Execution order within one flush is reads/recovers/encodes first,
 mutating updates last; two updates touching the same stripe go in
 separate waves, executed in submission order. Errors are per *group*:
@@ -430,7 +436,15 @@ class CodingEngine:
             outs = {id(op): [] for op in group}
             for i0 in range(0, len(rows), self.max_batch_stripes):
                 chunk = rows[i0:i0 + self.max_batch_stripes]
-                data = np.stack([op.data[i] for op, i in chunk])
+                op0, first = chunk[0]
+                # Rows of one op are consecutive by construction, so a
+                # single-op chunk is a contiguous slice of its payload:
+                # hand the backend a VIEW instead of np.stack's copy —
+                # on the checkpoint write path that copy was O(window)
+                # per chunk for nothing.
+                whole = all(op is op0 for op, _ in chunk)
+                data = (op0.data[first:first + len(chunk)] if whole
+                        else np.stack([op.data[i] for op, i in chunk]))
                 try:
                     cw = self.backend.encode_many(self.code, data)
                 except Exception as exc:
@@ -439,11 +453,57 @@ class CodingEngine:
                             op.handle._fail(exc)
                     continue
                 stats.encode_batches += 1
+                if whole and len(chunk) == len(op0.data):
+                    op0.handle._set(cw)     # one chunk == the whole op
+                    continue
                 for j, (op, _i) in enumerate(chunk):
                     outs[id(op)].append(cw[j])
             for op in group:
                 if not op.handle.done:
                     op.handle._set(np.stack(outs[id(op)]))
+
+    # -- streaming encode (checkpoint write fast path) -----------------------
+    def encode_stream(self, windows, sink) -> int:
+        """Double-buffered streaming encode: the checkpoint-scale write
+        path, fused with store landing.
+
+        `windows` yields (S_w, k, B) uint8 arrays (views are fine —
+        nothing is copied here), each with S_w <= max_batch_stripes;
+        `sink(index, codewords)` receives every window's forced (S_w,
+        n, B) result, in order. The pipeline overlap: window w+1's
+        encode is DISPATCHED (`Backend.encode_many_lazy` — un-forced
+        jax array on the kernel backend) before window w's result is
+        forced and handed to the sink, so device compute runs while the
+        host lands blocks. At most two windows of codewords are live at
+        once — peak memory is O(window), not O(buffer) — and each
+        window is exactly one backend call, so a buffer of S stripes
+        costs ceil(S / window) launches, same as the queued path.
+
+        This bypasses the op queue (no coalescing with pending ops —
+        callers sequence it like any other store mutation); launches
+        and traffic still ride the thread-local attribution scopes.
+        Returns the number of windows encoded."""
+        served = 0
+        prev: tuple[int, Any] | None = None
+        with kernel_ops.launch_scope(), self.store.traffic.scoped():
+            for view in windows:
+                data = np.ascontiguousarray(view, dtype=np.uint8)
+                if data.ndim != 3 or data.shape[1] != self.code.k:
+                    raise ValueError(
+                        f"encode_stream expects (S, k={self.code.k}, B) "
+                        f"windows, got {data.shape}")
+                if not 1 <= data.shape[0] <= self.max_batch_stripes:
+                    raise ValueError(
+                        f"window of {data.shape[0]} stripes outside "
+                        f"[1, max_batch_stripes={self.max_batch_stripes}]")
+                fut = self.backend.encode_many_lazy(self.code, data)
+                if prev is not None:
+                    sink(prev[0], np.asarray(prev[1]))
+                prev = (served, fut)
+                served += 1
+            if prev is not None:
+                sink(prev[0], np.asarray(prev[1]))
+        return served
 
     # -- delta updates -------------------------------------------------------
     def _run_updates(self, ops_list: list[_Op], stats: FlushStats) -> None:

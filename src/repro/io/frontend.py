@@ -329,6 +329,27 @@ class RequestFrontend:
             lambda: self._plan_scrub(metas, reader_cluster),
             tenant=tenant, admitted=_admitted)
 
+    def submit_checkpoint_write(self, buf: bytes, start_stripe: int, *,
+                                window_stripes: int | None = None,
+                                tenant: str | None = None,
+                                _admitted: bool = False) -> RequestHandle:
+        """Checkpoint write riding BACKGROUND class: the fused
+        encode+put streaming pipeline (`StripeCodec.write_stream`) runs
+        in the finish phase of its class flush — it drives its own
+        double-buffered kernel launches through `encode_stream`, not the
+        engine op queue, so the plan phase submits nothing. Result is
+        the StripeMeta list. Size (metering/admission unit) is the
+        stripes-to-write times n, the blocks the write will land."""
+        k, bs = self.codec.code.k, self.codec.block_size
+        nstripes = max(1, -(-len(buf) // (k * bs)))
+        return self._enqueue(
+            Priority.BACKGROUND, "checkpoint_write",
+            nstripes * self.codec.code.n,
+            lambda: (lambda: self.codec.write_stream(
+                buf, start_stripe=start_stripe,
+                window_stripes=window_stripes)),
+            tenant=tenant, admitted=_admitted)
+
     # -- scrub planner -------------------------------------------------------
     def _plan_scrub(self, metas, reader_cluster: int | None):
         codec = self.codec
@@ -651,6 +672,26 @@ class ShardedFrontend:
                 mismatched=tuple(sorted(mismatched)))
         return MergedHandle(Priority.BACKGROUND, "scrub", size, children,
                             combine)
+
+    def submit_checkpoint_write(self, buf: bytes, start_stripe: int, *,
+                                window_stripes: int | None = None,
+                                tenant: str | None = None):
+        """Checkpoint write routed whole to the shard owning
+        `start_stripe`: the streamed write is one fused pipeline over
+        consecutive stripes (splitting it would serialize the double
+        buffer), and stripe metadata is shared across clones so every
+        shard sees the landed stripes. Admission is charged once here,
+        like other multi-stripe submissions."""
+        k, bs = self.codec.code.k, self.codec.block_size
+        nstripes = max(1, -(-len(buf) // (k * bs)))
+        size = nstripes * self.codec.code.n
+        shed = self._admit_merged(Priority.BACKGROUND, "checkpoint_write",
+                                  size, tenant)
+        if shed is not None:
+            return shed
+        return self.shard_of(start_stripe).submit_checkpoint_write(
+            buf, start_stripe, window_stripes=window_stripes,
+            tenant=tenant, _admitted=True)
 
     # -- flush ---------------------------------------------------------------
     @property

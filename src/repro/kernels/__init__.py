@@ -6,7 +6,14 @@ xor_reduce   — pure-VPU XOR fold (UniLRC's single-failure decode path).
 Both have `_batched` variants with a leading stripe-batch grid dimension:
 S stripes of work run as ONE kernel launch (coefficient tile resident in
 VMEM across the batch) instead of S launches.
+
+autotune — the tile/batch planner: lane tiles (`block_b`) come from a
+VMEM-budget model (or a persisted measured-timings cache on real TPUs)
+instead of the hard-coded DEFAULT_BLOCK_B constants; lint rule RA008
+keeps tiling decisions from leaking outside this package.
 """
+from .autotune import (TilePlan, measure_matmul_tiles, plan_matmul_tiles,
+                       plan_stream_windows, plan_xor_tiles)
 from .gf_bitmatmul import gf_bitmatmul, gf_bitmatmul_batched
 from .xor_reduce import xor_reduce, xor_reduce_batched
 from .ops import (KERNEL_LAUNCHES, apply_decode, apply_decode_many,
@@ -19,4 +26,5 @@ __all__ = ["gf_bitmatmul", "gf_bitmatmul_batched", "xor_reduce",
            "apply_decode_many", "apply_matrix", "apply_matrix_many",
            "default_interpret", "encode", "encode_many", "recover_many",
            "recover_single", "reset_kernel_launch_counts", "xor_fold",
-           "xor_fold_many"]
+           "xor_fold_many", "TilePlan", "measure_matmul_tiles",
+           "plan_matmul_tiles", "plan_stream_windows", "plan_xor_tiles"]

@@ -43,6 +43,7 @@ from repro.core.codec import DecodePlan, RecoveryPlan
 from repro.core.codes import Code
 from repro.core.gf import expand_coding_matrix_to_bits
 
+from . import autotune
 from .gf_bitmatmul import gf_bitmatmul, gf_bitmatmul_batched
 from .xor_reduce import xor_reduce, xor_reduce_batched
 
@@ -154,13 +155,21 @@ def _bits(A: np.ndarray, tag: str) -> jax.Array:
 
 
 def apply_matrix(M: np.ndarray, blocks: jax.Array, *,
-                 block_b: int = 512, interpret: bool | None = None,
+                 block_b: int | None = None, interpret: bool | None = None,
                  tag: str = "adhoc") -> jax.Array:
-    """GF(2^8) matmul M (m,k) @ blocks (k,B) -> (m,B), via the MXU kernel."""
+    """GF(2^8) matmul M (m,k) @ blocks (k,B) -> (m,B), via the MXU kernel.
+
+    `block_b=None` (the default everywhere outside kernel oracles)
+    resolves the lane tile through the autotune planner — padding and
+    grid shape follow the VMEM budget model / measured timings instead
+    of a hard-coded constant (lint rule RA008 enforces this)."""
     if interpret is None:
         interpret = default_interpret()
     a_bits = _bits(M, tag)
     blocks = jnp.asarray(blocks, dtype=jnp.uint8)
+    if block_b is None:
+        block_b = autotune.plan_matmul_tiles(
+            M.shape[1], M.shape[0], blocks.shape[-1]).block_b
     padded, B = _pad_to(blocks, block_b, axis=1)
     _count_launch("gf_bitmatmul")
     out = gf_bitmatmul(a_bits, padded, block_b=block_b, interpret=interpret)
@@ -168,16 +177,21 @@ def apply_matrix(M: np.ndarray, blocks: jax.Array, *,
 
 
 def apply_matrix_many(M: np.ndarray, blocks: jax.Array, *,
-                      block_b: int = 512, interpret: bool | None = None,
+                      block_b: int | None = None,
+                      interpret: bool | None = None,
                       tag: str = "adhoc") -> jax.Array:
     """Stripe-batched GF(2^8) matmul: M (m,k) @ blocks (S,k,B) -> (S,m,B).
 
     One `gf_bitmatmul_batched` launch for the whole batch; the expanded
-    A_bits tile is resident in VMEM across all S stripes."""
+    A_bits tile is resident in VMEM across all S stripes. Lane tiling
+    is autotuned (see `apply_matrix`)."""
     if interpret is None:
         interpret = default_interpret()
     a_bits = _bits(M, tag)
     blocks = jnp.asarray(blocks, dtype=jnp.uint8)
+    if block_b is None:
+        block_b = autotune.plan_matmul_tiles(
+            M.shape[1], M.shape[0], blocks.shape[-1]).block_b
     padded, B = _pad_to(blocks, block_b, axis=2)
     _count_launch("gf_bitmatmul")
     out = gf_bitmatmul_batched(a_bits, padded, block_b=block_b,
@@ -185,7 +199,7 @@ def apply_matrix_many(M: np.ndarray, blocks: jax.Array, *,
     return out[:, :, :B]
 
 
-def encode(code: Code, data: jax.Array, *, block_b: int = 512,
+def encode(code: Code, data: jax.Array, *, block_b: int | None = None,
            interpret: bool | None = None) -> jax.Array:
     """data (k, B) uint8 -> full codeword (n, B): [data | parities]."""
     parity = apply_matrix(code.A, data, block_b=block_b,
@@ -193,7 +207,8 @@ def encode(code: Code, data: jax.Array, *, block_b: int = 512,
     return jnp.concatenate([jnp.asarray(data, jnp.uint8), parity], axis=0)
 
 
-def encode_many(code: Code, data: jax.Array, *, block_b: int = 512,
+def encode_many(code: Code, data: jax.Array, *,
+                block_b: int | None = None,
                 interpret: bool | None = None) -> jax.Array:
     """data (S, k, B) uint8 -> (S, n, B) codewords, ONE kernel launch.
 
@@ -210,11 +225,12 @@ def xor_fold(blocks: jax.Array, *, interpret: bool | None = None) -> jax.Array:
         interpret = default_interpret()
     blocks = jnp.asarray(blocks, dtype=jnp.uint8)
     s, B = blocks.shape
-    padded, _ = _pad_to(blocks, 8192, axis=1)   # 8192 B = 2048 int32 lanes
+    plan = autotune.plan_xor_tiles(s, B)        # lane tile, in int32 lanes
+    padded, _ = _pad_to(blocks, 4 * plan.block_b, axis=1)
     lanes = jax.lax.bitcast_convert_type(
         padded.reshape(s, -1, 4), jnp.int32).reshape(s, -1)
     _count_launch("xor_reduce")
-    out32 = xor_reduce(lanes, interpret=interpret)
+    out32 = xor_reduce(lanes, block_b=plan.block_b, interpret=interpret)
     out8 = jax.lax.bitcast_convert_type(
         out32.reshape(-1, 1), jnp.uint8).reshape(-1)
     return out8[:B]
@@ -227,11 +243,13 @@ def xor_fold_many(blocks: jax.Array, *,
         interpret = default_interpret()
     blocks = jnp.asarray(blocks, dtype=jnp.uint8)
     S, s, B = blocks.shape
-    padded, _ = _pad_to(blocks, 8192, axis=2)
+    plan = autotune.plan_xor_tiles(s, B)
+    padded, _ = _pad_to(blocks, 4 * plan.block_b, axis=2)
     lanes = jax.lax.bitcast_convert_type(
         padded.reshape(S, s, -1, 4), jnp.int32).reshape(S, s, -1)
     _count_launch("xor_reduce")
-    out32 = xor_reduce_batched(lanes, interpret=interpret)
+    out32 = xor_reduce_batched(lanes, block_b=plan.block_b,
+                               interpret=interpret)
     out8 = jax.lax.bitcast_convert_type(
         out32.reshape(S, -1, 1), jnp.uint8).reshape(S, -1)
     return out8[:, :B]

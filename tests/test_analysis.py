@@ -565,3 +565,51 @@ def test_lint_launch_counter_waiver():
     src = ("from repro.kernels.ops import KERNEL_LAUNCHES\n"
            "KERNEL_LAUNCHES.clear()   # repro-lint: allow=RA007\n")
     assert lint_source(src, "tests/oracle.py") == []
+
+
+def test_lint_hardcoded_tile_flagged_outside_kernels():
+    """RA008: importing DEFAULT_BLOCK_B, reading it through a module,
+    and passing a literal block_b= all pin one shape's tile on every
+    caller — tiles come from the autotune planner."""
+    src = ("from repro.kernels.gf_bitmatmul import DEFAULT_BLOCK_B\n"
+           "from repro.kernels import gf_bitmatmul as gm\n"
+           "pad = DEFAULT_BLOCK_B * 2\n"
+           "tile = gm.DEFAULT_BLOCK_B\n"
+           "from repro.kernels import ops\n"
+           "ops.encode(code, data, block_b=512)\n"
+           "ops.xor_fold(blocks, block_b=2048)\n")
+    findings = lint_source(src, "src/repro/io/pinned.py")
+    assert [f.rule for f in findings] == ["RA008"] * 5
+    # same rules bite in tests/ and benchmarks/
+    assert [f.rule for f in lint_source(
+        "run(block_b=1024)\n", "benchmarks/fig_thing.py")] == ["RA008"]
+
+
+def test_lint_tile_planner_spellings_ok():
+    """Planned tiles (`plan.block_b`), non-constant values, and leaving
+    block_b unset are all fine; the kernels package itself is exempt."""
+    ok = ("from repro.kernels.autotune import plan_matmul_tiles\n"
+          "from repro.kernels import ops\n"
+          "plan = plan_matmul_tiles(k, m, B)\n"
+          "ops.encode(code, data, block_b=plan.block_b)\n"
+          "ops.encode(code, data, block_b=bb)\n"
+          "ops.encode(code, data)\n")
+    assert lint_source(ok, "src/repro/io/planned.py") == []
+    inside = ("DEFAULT_BLOCK_B = 512\n"
+              "def f(x, block_b=DEFAULT_BLOCK_B):\n"
+              "    return g(x, block_b=512)\n")
+    assert lint_source(inside, "src/repro/kernels/gf_bitmatmul.py") == []
+
+
+def test_lint_hardcoded_tile_waiver():
+    src = ("from repro.kernels import ops\n"
+           "out = ops.encode(code, data,  # repro-lint: allow=RA001,RA008\n"
+           "                 block_b=512)\n")
+    # the seed-comparator benchmark pins the retired tile on purpose;
+    # the waiver rides the call's opening line (finding is on the kw
+    # value's line or the line above, per the waiver window)
+    flagged = lint_source(src.replace("  # repro-lint: allow=RA001,RA008",
+                                      ""),
+                          "benchmarks/fig_ckpt_write.py")
+    assert "RA008" in {f.rule for f in flagged}
+    assert lint_source(src, "benchmarks/fig_ckpt_write.py") == []

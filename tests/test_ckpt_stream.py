@@ -1,0 +1,270 @@
+"""Checkpoint-scale streaming write fast path.
+
+`StripeCodec.write_stream` (and `CheckpointManager.write_checkpoint` /
+the front-ends' `submit_checkpoint_write` on top of it) must be
+BYTE-IDENTICAL to the synchronous per-window `write` path on both
+backends — the pipeline overlaps encode dispatch with store landing and
+batches the per-block puts, it never changes the stripes. The
+deterministic sweep below runs everywhere; the hypothesis section
+(skipped when hypothesis is absent, like the other property modules)
+drives arbitrary buffer sizes including non-multiples of the stripe
+capacity and of the kernel tile.
+
+Also pinned here: the streamed path's launch budget (exactly
+ceil(S/window) encode launches), its O(window) — not O(buffer) — host
+staging memory, and the `put_many` batched mutation-listener protocol
+the landing path rides (one notification per window, hot-block cache
+invalidation stays exact).
+"""
+import math
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.ckpt import BlockStore, CheckpointManager, DiskBlockStore
+from repro.ckpt.stripe import StripeCodec
+from repro.core.codes import make_unilrc
+from repro.io.cache import HotBlockCache
+from repro.io.frontend import RequestFrontend, ShardedFrontend
+from repro.topo import Topology
+
+CODE = make_unilrc(1, 4)                 # small: k=8, fast under pytest
+BS = 1 << 10
+
+
+def make_codec(backend="kernels", *, store=None, block_size=BS,
+               max_batch_stripes=3):
+    store = store or BlockStore(Topology(4, 6))
+    codec = StripeCodec(CODE, store, block_size=block_size,
+                        backend=backend,
+                        max_batch_stripes=max_batch_stripes)
+    return codec, store
+
+
+def stripes_identical(store_a, store_b, metas, n):
+    return all(store_a.get(m.stripe_id, b) == store_b.get(m.stripe_id, b)
+               for m in metas for b in range(n))
+
+
+# ---------------------------------------------------------------------------
+# byte identity: streamed == seed per-window write
+# ---------------------------------------------------------------------------
+
+stripe_payload = CODE.k * BS
+SIZES = [1, 37, BS - 1, BS + 1, stripe_payload - 7, stripe_payload,
+         stripe_payload + 1, 3 * stripe_payload + 123, 7 * stripe_payload]
+
+
+@pytest.mark.parametrize("backend", ["kernels", "numpy"])
+def test_write_stream_byte_identical(backend):
+    rng = np.random.default_rng(0)
+    for size in SIZES:
+        buf = rng.integers(0, 256, size, dtype=np.uint8).tobytes()
+        codec_a, store_a = make_codec(backend)
+        codec_b, store_b = make_codec(backend)
+        metas_a = codec_a.write(buf)
+        metas_b = codec_b.write_stream(buf)
+        assert [(m.stripe_id, m.nbytes) for m in metas_a] \
+            == [(m.stripe_id, m.nbytes) for m in metas_b]
+        assert stripes_identical(store_a, store_b, metas_a, CODE.n)
+        assert codec_b.read_all(metas_b)[:size] == buf
+
+
+@pytest.mark.parametrize("window", [1, 2, 3])
+def test_write_stream_window_sizes(window):
+    """Every window split lands the same stripes (tail windows, windows
+    clamped to max_batch_stripes, single-stripe windows)."""
+    rng = np.random.default_rng(1)
+    buf = rng.integers(0, 256, 5 * stripe_payload + 99,
+                       dtype=np.uint8).tobytes()
+    ref_codec, ref_store = make_codec("numpy")
+    metas_ref = ref_codec.write(buf)
+    codec, store = make_codec("numpy")
+    metas = codec.write_stream(buf, window_stripes=window)
+    assert len(metas) == len(metas_ref)
+    assert stripes_identical(ref_store, store, metas_ref, CODE.n)
+
+
+def test_write_stream_start_stripe_and_cursor():
+    rng = np.random.default_rng(2)
+    buf = rng.integers(0, 256, 2 * stripe_payload, dtype=np.uint8).tobytes()
+    codec, store = make_codec("numpy")
+    metas = codec.write_stream(buf, start_stripe=5)
+    assert [m.stripe_id for m in metas] == [5, 6]
+    assert codec.read_all(metas) == buf
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property: arbitrary sizes (skipped without hypothesis)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(size=st.integers(1, 6 * stripe_payload + 512),
+           window=st.integers(1, 4),
+           backend=st.sampled_from(["kernels", "numpy"]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_write_stream_byte_identical_property(size, window, backend,
+                                                  seed):
+        rng = np.random.default_rng(seed)
+        buf = rng.integers(0, 256, size, dtype=np.uint8).tobytes()
+        codec_a, store_a = make_codec(backend)
+        codec_b, store_b = make_codec(backend)
+        metas_a = codec_a.write(buf)
+        metas_b = codec_b.write_stream(buf, window_stripes=window)
+        assert [(m.stripe_id, m.nbytes) for m in metas_a] \
+            == [(m.stripe_id, m.nbytes) for m in metas_b]
+        assert stripes_identical(store_a, store_b, metas_a, CODE.n)
+
+
+# ---------------------------------------------------------------------------
+# launch budget: exactly ceil(S / window) encode launches
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nstripes,window", [(1, 3), (4, 2), (7, 3), (6, 3)])
+def test_write_stream_launch_budget(kernel_counters, nstripes, window):
+    rng = np.random.default_rng(3)
+    buf = rng.integers(0, 256, nstripes * stripe_payload - 5,
+                       dtype=np.uint8).tobytes()
+    codec, _ = make_codec("kernels")
+    codec.write_stream(buf, window_stripes=window)
+    assert sum(kernel_counters.values()) == math.ceil(nstripes / window)
+
+
+# ---------------------------------------------------------------------------
+# memory: a streamed write stages O(window), not O(buffer)
+# ---------------------------------------------------------------------------
+
+def test_write_stream_memory_is_o_window(tmp_path):
+    """tracemalloc peak during a multi-window streamed write stays well
+    under the buffer size. DiskBlockStore (payload index holds b"") and
+    the numpy backend keep retained store/device memory out of the
+    measurement — what remains is the writer's own staging: windows of
+    codewords plus the padded tail, all O(window)."""
+    window = 2
+    nstripes = 12
+    store = DiskBlockStore(Topology(4, 6), tmp_path)
+    codec, _ = make_codec("numpy", store=store,
+                          max_batch_stripes=window)
+    rng = np.random.default_rng(4)
+    buf = rng.integers(0, 256, nstripes * stripe_payload,
+                       dtype=np.uint8).tobytes()
+    window_bytes = window * CODE.n * BS
+    tracemalloc.start()
+    try:
+        codec.write_stream(buf, window_stripes=window)
+        _, peak = tracemalloc.get_traced_memory()
+    finally:
+        tracemalloc.stop()
+    # double buffer (2 windows of codewords) + tail staging + slack;
+    # the seed bug was an O(buffer) copy of the whole input (~len(buf)).
+    assert peak < 6 * window_bytes + len(buf) // 4, \
+        f"peak {peak} vs window {window_bytes} (buffer {len(buf)})"
+
+
+# ---------------------------------------------------------------------------
+# put_many: batched listener protocol
+# ---------------------------------------------------------------------------
+
+def test_put_many_single_batched_notification():
+    store = BlockStore(Topology(2, 4))
+    per, batches = [], []
+    store.add_mutation_listener(
+        lambda s, b: per.append((s, b)),
+        batch=lambda pairs: batches.append(list(pairs)))
+    entries = [(0, b, store.topo.node_of(0, 0), bytes(8))
+               for b in range(5)]
+    assert store.put_many(entries) == 5
+    assert per == []                     # batch handler consumed them
+    assert batches == [[(0, b) for b in range(5)]]
+    # per-put behavior unchanged: single puts still notify per pair
+    store.put(1, 0, store.topo.node_of(0, 1), bytes(8))
+    assert per == [(1, 0)]
+    assert len(batches) == 1
+
+
+def test_put_many_per_pair_fallback():
+    """A listener registered without a batch handler still sees every
+    pair of a bulk landing, exactly once each."""
+    store = BlockStore(Topology(2, 4))
+    seen = []
+    store.add_mutation_listener(lambda s, b: seen.append((s, b)))
+    entries = [(2, b, store.topo.node_of(1, 0), bytes(4))
+               for b in range(3)]
+    store.put_many(entries)
+    assert seen == [(2, b) for b in range(3)]
+
+
+@pytest.mark.parametrize("disk", [False, True])
+def test_put_many_matches_put(tmp_path, disk):
+    """Bulk landing is byte-equivalent to per-block puts on both store
+    tiers, and accepts numpy row views (not just bytes)."""
+    topo = Topology(2, 4)
+    store_a = DiskBlockStore(topo, tmp_path / "a") if disk \
+        else BlockStore(topo)
+    store_b = DiskBlockStore(topo, tmp_path / "b") if disk \
+        else BlockStore(topo)
+    rng = np.random.default_rng(5)
+    rows = rng.integers(0, 256, (4, 16), dtype=np.uint8)
+    for b in range(4):
+        store_a.put(0, b, topo.node_of(0, b % 2), rows[b].tobytes())
+    store_b.put_many([(0, b, topo.node_of(0, b % 2), rows[b])
+                      for b in range(4)])
+    for b in range(4):
+        assert store_a.get(0, b) == store_b.get(0, b) == rows[b].tobytes()
+
+
+def test_put_many_invalidates_hot_block_cache_exactly():
+    store = BlockStore(Topology(2, 4))
+    cache = HotBlockCache(capacity_blocks=8).attach(store)
+    cache.put(0, 1, b"old")
+    cache.put(0, 2, b"old")
+    cache.put(9, 9, b"unrelated")
+    store.put_many([(0, 1, store.topo.node_of(0, 0), b"new"),
+                    (0, 2, store.topo.node_of(0, 1), b"new")])
+    assert not cache.contains(0, 1) and not cache.contains(0, 2)
+    assert cache.contains(9, 9)          # untouched key survives
+    assert cache.stats.invalidations == 2
+
+
+# ---------------------------------------------------------------------------
+# manager + front-end integration
+# ---------------------------------------------------------------------------
+
+def test_manager_write_checkpoint_roundtrip():
+    store = BlockStore(Topology(4, 6))
+    mgr = CheckpointManager(store, CODE, block_size=BS)
+    rng = np.random.default_rng(6)
+    buf = rng.integers(0, 256, 3 * stripe_payload + 11,
+                       dtype=np.uint8).tobytes()
+    metas = mgr.write_checkpoint(buf)
+    assert [m.stripe_id for m in metas] == list(range(len(metas)))
+    assert mgr.codec.read_all(metas)[:len(buf)] == buf
+    # cursor advanced: a subsequent save starts after the streamed write
+    metas2 = mgr.write_checkpoint(buf)
+    assert metas2[0].stripe_id == len(metas)
+
+
+@pytest.mark.parametrize("shards", [1, 2])
+def test_frontend_checkpoint_write_background(shards):
+    codec, store = make_codec("numpy")
+    fe = ShardedFrontend(codec, num_shards=shards) if shards > 1 \
+        else RequestFrontend(codec)
+    rng = np.random.default_rng(7)
+    buf = rng.integers(0, 256, 4 * stripe_payload + 5,
+                       dtype=np.uint8).tobytes()
+    handle = fe.submit_checkpoint_write(buf, 0)
+    assert not handle.done
+    fe.drain()
+    metas = handle.result()
+    assert len(metas) == 5
+    assert codec.read_all(metas)[:len(buf)] == buf
+    if shards > 1:
+        fe.close()

@@ -29,7 +29,7 @@ def test_gf_bitmatmul_sweep(m, k, B):
     A = rng.integers(0, 256, (m, k), dtype=np.uint8)
     data = rng.integers(0, 256, (k, B), dtype=np.uint8)
     a_bits = expand_coding_matrix_to_bits(A)
-    got = np.asarray(                  # repro-lint: allow=RA001
+    got = np.asarray(                  # repro-lint: allow=RA001,RA008
         gf_bitmatmul(a_bits, data, block_b=512))
     want = gf_matmul(A, data)
     assert np.array_equal(got, want)
